@@ -1,0 +1,77 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.gscd import synth_batch
+from repro.frontend import FeatureExtractor, FExConfig
+from repro.models import kws
+from repro.train import optimizer as opt
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_kws(n_steps: int = 300, train_th: float = 0.1,
+              fex_cfg: FExConfig | None = None, seed: int = 0,
+              batch: int = 64):
+    """Train the paper's KWS model on SynthCommands; returns
+    (cfg, params, fex, eval_feats, eval_labels)."""
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor(fex_cfg or FExConfig())
+    params, _ = kws.init_kws(jax.random.PRNGKey(seed), cfg,
+                             input_dim=fex.cfg.n_active)
+    ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
+                           total_steps=n_steps)
+    state = opt.init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, feats, labels):
+        (loss, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
+            params, cfg, {"feats": feats, "labels": labels}, train_th)
+        params, state, _ = opt.update(ocfg, g, state, params)
+        return params, state, loss
+
+    for _ in range(n_steps):
+        audio, labels = synth_batch(rng, batch)
+        feats = fex(jnp.asarray(audio))
+        params, state, _ = step(params, state, feats, jnp.asarray(labels))
+
+    audio, labels = synth_batch(np.random.default_rng(1234), 256)
+    feats = fex(jnp.asarray(audio))
+    return cfg, params, fex, feats, jnp.asarray(labels)
+
+
+def eval_at_threshold(cfg, params, feats, labels, th: float):
+    from repro.core import temporal_sparsity
+    logits, stats = kws.forward(params, cfg, feats, threshold=th)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == labels))
+    acc11 = float(kws.accuracy_11class(logits, labels))
+    sp = float(temporal_sparsity(stats))
+    return acc, acc11, sp
+
+
+def print_csv(rows: list[dict], name: str):
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"# --- {name} ---")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))

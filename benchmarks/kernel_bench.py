@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: delta_matvec block-skip scaling + iir_fex.
+
+On this CPU container the kernels run in interpret mode, so wall-clock is
+NOT TPU time; the meaningful outputs are the MODELED weight-traffic
+savings (the TPU win: skipped HBM→VMEM tiles) versus block density, and
+the interpret-mode validation timing for reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_csv, time_call
+from repro.kernels import ops
+
+
+def run():
+    rows = []
+    B, I, O, blk = 8, 1024, 768, 128
+    w = jax.random.normal(jax.random.PRNGKey(0), (I, O), jnp.bfloat16)
+    m = jnp.zeros((B, O), jnp.float32)
+    nblk = I // blk
+    for density in [1.0, 0.5, 0.25, 0.125]:
+        k_active = max(1, int(nblk * density))
+        mask = jnp.asarray([1] * k_active + [0] * (nblk - k_active),
+                           jnp.int32)
+        dx = jax.random.normal(jax.random.PRNGKey(1), (B, I), jnp.bfloat16)
+        dx = (dx.reshape(B, nblk, blk) * mask[None, :, None].astype(jnp.bfloat16)
+              ).reshape(B, I)
+        us = time_call(lambda: ops.delta_matvec(dx, w, m, mask), iters=3)
+        weight_bytes_dense = I * O * 2
+        weight_bytes_read = k_active * blk * O * 2
+        rows.append({
+            "kernel": "delta_matvec", "block_density": density,
+            "us_per_call_interpret": us,
+            "weight_bytes_read": weight_bytes_read,
+            "traffic_saving_x": weight_bytes_dense / weight_bytes_read,
+            "macs_executed": k_active * blk * O * B,
+        })
+    # iir_fex
+    from repro.frontend.fex import FExConfig, build_sos_bank
+    cfg = FExConfig()
+    coef = ops.pack_coefficients(build_sos_bank(cfg))
+    x = jnp.asarray(np.random.default_rng(0).uniform(-0.5, 0.5, 8000),
+                    jnp.float32)
+    us = time_call(lambda: ops.iir_fex(x, coef, env_alpha=cfg.env_alpha),
+                   iters=3)
+    rows.append({
+        "kernel": "iir_fex", "block_density": 1.0,
+        "us_per_call_interpret": us,
+        "weight_bytes_read": int(coef.size * 4),
+        "traffic_saving_x": 1.0,
+        "macs_executed": 8000 * cfg.n_active * 5,
+    })
+    return rows
+
+
+def main():
+    print_csv(run(), "kernel_bench")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Roofline summary from the dry-run campaign artifact (results/dryrun.json).
+
+Prints, per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device memory."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import print_csv
+
+
+def run(path: str = "results/dryrun.json"):
+    p = pathlib.Path(path)
+    if not p.exists():
+        return []
+    data = json.loads(p.read_text())
+    rows = []
+    for key in sorted(data):
+        r = data[key]
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "model_vs_hlo": rl["model_vs_hlo_flops"],
+            "mem_gb_per_dev": r["memory"]["per_device_total_gb"],
+            "microbatches": r.get("microbatches", 1) or 1,
+            "compile_s": r["compile_s"],
+        })
+    return rows
+
+
+def main():
+    print_csv(run(), "roofline_table")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+Prints CSV blocks per benchmark (name, columns, rows) plus the roofline
+table derived from the dry-run campaign.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t0 = time.time()
+    from benchmarks import (fig6_channels, fig7_fex_opt, fig11_latency_trace,
+                            fig12_delta_sweep, kernel_bench, roofline_table,
+                            table1_fex, table2_kws)
+    from benchmarks.common import print_csv
+
+    # Paper figures/tables
+    rows, derived = fig12_delta_sweep.run(n_steps=150 if quick else 300)
+    print_csv(rows, "fig12_delta_sweep")
+    print_csv([derived], "fig12_derived")
+
+    print_csv(fig7_fex_opt.run(), "fig7_fex_opt")
+
+    rows, derived = fig11_latency_trace.run()
+    print_csv(rows[:8], "fig11_latency_trace_head")
+    print_csv([derived], "fig11_derived")
+
+    rows6 = fig6_channels.run(n_steps=75 if quick else 150)
+    print_csv(rows6, "fig6_channels")
+
+    print_csv(table1_fex.run(), "table1_fex_comparison")
+    print_csv(table2_kws.run(n_steps=150 if quick else 300),
+              "table2_kws_comparison")
+
+    # Kernels + roofline
+    print_csv(kernel_bench.run(), "kernel_bench")
+    print_csv(roofline_table.run(), "roofline_table")
+
+    print(f"# total_bench_wall_s,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the paper's full pipeline in ~60 lines.
+
+  audio (12-bit, 8 kHz) → IIR BPF FEx → ΔGRU(64) → FC(12)
+
+Trains on SynthCommands (GSCD offline fallback), then shows the paper's
+headline trade-off: accuracy / temporal sparsity / energy / latency vs
+the delta threshold.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import temporal_sparsity
+from repro.core.energy_model import cost_from_sparsity
+from repro.data.gscd import synth_batch
+from repro.frontend import FeatureExtractor
+from repro.models import kws
+from repro.train import optimizer as opt
+
+TRAIN_TH = 0.1      # threshold-aware training (DeltaRNN recipe)
+
+
+def main():
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg)
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=300)
+    state = opt.init(params)
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def step(params, state, feats, labels):
+        (loss, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
+            params, cfg, {"feats": feats, "labels": labels}, TRAIN_TH)
+        params, state, _ = opt.update(ocfg, g, state, params)
+        return params, state, loss, m["acc"]
+
+    print("training ΔGRU KWS on SynthCommands ...")
+    for i in range(300):
+        audio, labels = synth_batch(rng, 64)
+        feats = fex(jnp.asarray(audio))
+        params, state, loss, acc = step(params, state, feats,
+                                        jnp.asarray(labels))
+        if i % 50 == 0:
+            print(f"  step {i:4d}  loss {float(loss):.3f}  "
+                  f"acc {float(acc):.3f}")
+
+    audio, labels = synth_batch(np.random.default_rng(99), 512)
+    feats = fex(jnp.asarray(audio))
+    labels = jnp.asarray(labels)
+    print("\n Δ_TH   acc12  acc11  sparsity  nJ/decision  latency_ms")
+    for th in [0.0, 0.05, 0.1, 0.2]:
+        logits, stats = kws.forward(params, cfg, feats, threshold=th)
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == labels))
+        acc11 = float(kws.accuracy_11class(logits, labels))
+        sp = float(temporal_sparsity(stats))
+        c = cost_from_sparsity(sp)
+        print(f"  {th:.2f}  {acc:6.3f} {acc11:6.3f}  {sp:8.3f}"
+              f"  {c.energy_nj_per_decision:11.2f}  {c.latency_ms:10.2f}")
+    print("\npaper design point: 87% sparsity → 36.11 nJ, 6.9 ms "
+          "(3.4× / 2.4× vs dense)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Architecture configs — one per assigned architecture + the paper's own."""
+from repro.configs.base import (
+    ARCH_IDS,
+    LM_SHAPES,
+    LONG_CONTEXT_ARCHS,
+    ArchConfig,
+    ShapeConfig,
+    cells,
+    get_config,
+    get_smoke_config,
+)

@@ -1,0 +1,17 @@
+"""Core ΔRNN library — the paper's contribution as composable JAX modules."""
+from repro.core.delta_gru import (
+    DeltaGRUCell,
+    DeltaGRUParams,
+    DeltaState,
+    DeltaStats,
+    delta_encode,
+    delta_gru_scan,
+    dense_gru_scan,
+    init_delta_gru,
+    init_delta_state,
+    temporal_sparsity,
+)
+from repro.core.delta_dense import DeltaStream, delta_matmul, init_delta_stream
+from repro.core.energy_model import CostReport, cost_from_sparsity, frame_cost
+from repro.core.quantize import QFormat, qformat_for, quantize_weights_8b, ste_quantize
+from repro.core.sparsity import SparsityAccumulator, sparsity_at_threshold

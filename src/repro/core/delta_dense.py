@@ -1,0 +1,47 @@
+"""Delta-gated dense layers — the paper's mechanism generalized (beyond-paper).
+
+Two places the ΔRNN idea transfers beyond a GRU:
+
+1. ``delta_matmul`` — a matmul whose LHS is a delta-encoded streaming vector.
+   Used for the recurrent decode step of SSM blocks (Mamba2/Zamba2): the SSM
+   input projection x_t @ W is replaced by an incremental update
+   M_t = M_{t-1} + Δx_t @ W, skipping the weight traffic of unchanged
+   channels.  On TPU the win is skipped HBM→VMEM weight blocks (see
+   kernels/delta_matvec.py); here we provide the exact functional semantics.
+
+2. ``DeltaStream`` — carries (x̂, M) across decode steps for any linear layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta_gru import delta_encode
+
+Array = jax.Array
+
+
+class DeltaStream(NamedTuple):
+    x_hat: Array   # (..., I)   last transmitted input
+    m: Array       # (..., O)   accumulated output  == x_hat @ w
+
+
+def init_delta_stream(batch_shape, in_dim: int, out_dim: int, dtype=jnp.float32):
+    return DeltaStream(
+        x_hat=jnp.zeros((*batch_shape, in_dim), dtype),
+        m=jnp.zeros((*batch_shape, out_dim), dtype),
+    )
+
+
+def delta_matmul(stream: DeltaStream, x: Array, w: Array,
+                 threshold: float) -> tuple[DeltaStream, Array, Array]:
+    """Incremental y = x̂ @ w with delta gating.
+
+    Returns (new_stream, y, nnz_fraction). At threshold=0, y == x @ w exactly.
+    """
+    dx, x_hat, mask = delta_encode(x, stream.x_hat, jnp.asarray(threshold, x.dtype))
+    m = stream.m + dx @ w
+    nnz = jnp.mean(mask.astype(jnp.float32))
+    return DeltaStream(x_hat=x_hat, m=m), m, nnz

@@ -1,0 +1,207 @@
+"""Delta-gated GRU (ΔGRU) — the paper's core contribution.
+
+Implements the delta-network recurrence of Neil et al. (ICML'17) / Gao et al.
+(FPGA'18) exactly as used by the DeltaKWS IC (Fig. 2/3):
+
+A neuron transmits its activation only when the change since the *last
+transmitted* value exceeds a threshold Δ_TH.  Define, per timestep t:
+
+    Δx_t[i] = x_t[i] - x̂_{t-1}[i]      if |x_t[i] - x̂_{t-1}[i]| > Δ_TH else 0
+    x̂_t[i]  = x_t[i]                    if transmitted, else x̂_{t-1}[i]
+    (and identically for the hidden state h with memory ĥ)
+
+The GRU pre-activations are then maintained *incrementally* in a persistent
+accumulator M (the IC's "state buffer"):
+
+    M_t = M_{t-1} + W_x Δx_t + W_h Δh_t
+
+so that M_t == W_x x̂_t + W_h ĥ_t at all times.  A zero delta therefore skips
+both the MAC *and* the weight-memory read for that column — the source of the
+measured 3.4× energy / 2.4× latency reduction at 87% temporal sparsity.
+
+This module provides:
+  * ``delta_encode``         — the Δ encoder (threshold, memory update)
+  * ``DeltaGRUCell``         — one timestep, returning op-count statistics
+  * ``delta_gru_scan``       — full sequence via ``jax.lax.scan``
+  * ``dense_gru_scan``       — reference dense GRU (identical params, Δ_TH=0
+                               oracle and the paper's baseline)
+  * parameter init/shape helpers.
+
+GRU formulation (matches DeltaRNN / the IC: reset gate applied to the
+candidate's *pre-activation*, a.k.a. the "type 2" / CuDNN variant, which is
+what a delta accumulator requires — each of the three gates keeps its own
+persistent pre-activation memory):
+
+    r_t = σ(M_r)        M_r = W_xr x̂ + W_hr ĥ + b_r
+    u_t = σ(M_u)        M_u = W_xu x̂ + W_hu ĥ + b_u
+    c_t = tanh(W_xc x̂ + b_c + r_t ⊙ (W_hc ĥ))
+    h_t = u_t ⊙ h_{t-1} + (1 - u_t) ⊙ c_t
+
+All delta state (x̂, ĥ, M_r, M_u, M_xc, M_hc) is carried in the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class DeltaGRUParams(NamedTuple):
+    """Weights for a single ΔGRU layer (input dim I, hidden dim H)."""
+
+    w_x: Array  # (I, 3H)  -> [r | u | c] input kernels
+    w_h: Array  # (H, 3H)  -> [r | u | c] hidden kernels
+    b: Array    # (3H,)
+
+
+class DeltaState(NamedTuple):
+    """Carried state of the delta recurrence."""
+
+    h: Array       # (B, H)  hidden state
+    x_hat: Array   # (B, I)  last transmitted input
+    h_hat: Array   # (B, H)  last transmitted hidden
+    m_x: Array     # (B, 3H) accumulated input pre-activations (incl. bias)
+    m_h: Array     # (B, 3H) accumulated hidden pre-activations
+
+
+class DeltaStats(NamedTuple):
+    """Per-step op statistics (all shapes (B,) unless noted)."""
+
+    nz_dx: Array     # number of non-zero input deltas
+    nz_dh: Array     # number of non-zero hidden deltas
+    macs: Array      # MACs actually executed this step
+    macs_dense: Array  # MACs a dense GRU would execute
+    sram_reads: Array  # weight words read (== skipped-column-aware)
+
+
+def init_delta_gru(key: Array, input_dim: int, hidden_dim: int,
+                   dtype=jnp.float32) -> DeltaGRUParams:
+    k1, k2 = jax.random.split(key)
+    # Orthogonal-ish recurrent init, scaled glorot for input kernels.
+    w_x = jax.random.normal(k1, (input_dim, 3 * hidden_dim), dtype) * (
+        1.0 / np.sqrt(input_dim))
+    w_h = jax.random.normal(k2, (hidden_dim, 3 * hidden_dim), dtype) * (
+        1.0 / np.sqrt(hidden_dim))
+    b = jnp.zeros((3 * hidden_dim,), dtype)
+    return DeltaGRUParams(w_x, w_h, b)
+
+
+def init_delta_state(batch: int, input_dim: int, hidden_dim: int,
+                     params: DeltaGRUParams, dtype=jnp.float32) -> DeltaState:
+    """Zero state.  m_x starts at the bias so M == W x̂ + W ĥ + b holds."""
+    return DeltaState(
+        h=jnp.zeros((batch, hidden_dim), dtype),
+        x_hat=jnp.zeros((batch, input_dim), dtype),
+        h_hat=jnp.zeros((batch, hidden_dim), dtype),
+        m_x=jnp.broadcast_to(params.b.astype(dtype), (batch, 3 * hidden_dim)),
+        m_h=jnp.zeros((batch, 3 * hidden_dim), dtype),
+    )
+
+
+def delta_encode(x: Array, x_hat: Array, threshold: Array | float):
+    """Δ encoder: returns (delta, new_x_hat, transmitted_mask).
+
+    delta[i] = x[i] - x_hat[i] where |x - x_hat| > th, else 0.
+    x_hat only advances for transmitted components (the IC's Δ-encoder
+    semantics — *not* an unconditional update, which would let small drifts
+    accumulate unseen).
+    """
+    diff = x - x_hat
+    mask = jnp.abs(diff) > threshold
+    delta = jnp.where(mask, diff, 0.0)
+    new_x_hat = jnp.where(mask, x, x_hat)
+    return delta, new_x_hat, mask
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaGRUCell:
+    """One ΔGRU timestep.  threshold=0 reproduces the dense GRU exactly."""
+
+    hidden_dim: int
+    threshold: float = 0.0
+
+    def __call__(self, params: DeltaGRUParams, state: DeltaState, x: Array
+                 ) -> tuple[DeltaState, Array, DeltaStats]:
+        H = self.hidden_dim
+        th = jnp.asarray(self.threshold, x.dtype)
+
+        dx, x_hat, mx = delta_encode(x, state.x_hat, th)
+        dh, h_hat, mh = delta_encode(state.h, state.h_hat, th)
+
+        # Incremental pre-activation update: only non-zero delta columns
+        # contribute.  Dense matmul of a sparse vector — numerically identical
+        # to gathering the non-zero columns (what the IC / Pallas kernel do).
+        m_x = state.m_x + dx @ params.w_x          # (B, 3H)
+        m_h = state.m_h + dh @ params.w_h          # (B, 3H)
+
+        r = jax.nn.sigmoid(m_x[:, :H] + m_h[:, :H])
+        u = jax.nn.sigmoid(m_x[:, H:2 * H] + m_h[:, H:2 * H])
+        c = jnp.tanh(m_x[:, 2 * H:] + r * m_h[:, 2 * H:])
+        h = u * state.h + (1.0 - u) * c
+
+        nz_dx = jnp.sum(mx, axis=-1)
+        nz_dh = jnp.sum(mh, axis=-1)
+        in_dim = x.shape[-1]
+        macs = (nz_dx + nz_dh) * (3 * H)
+        macs_dense = jnp.full_like(macs, (in_dim + H) * 3 * H)
+        stats = DeltaStats(
+            nz_dx=nz_dx, nz_dh=nz_dh, macs=macs, macs_dense=macs_dense,
+            sram_reads=macs,  # one weight word per MAC (16b word = 2×8b wts
+        )                      # in the IC; accounted in the energy model)
+        new_state = DeltaState(h=h, x_hat=x_hat, h_hat=h_hat, m_x=m_x, m_h=m_h)
+        return new_state, h, stats
+
+
+def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
+                   state: DeltaState | None = None,
+                   ) -> tuple[Array, DeltaState, DeltaStats]:
+    """Run a ΔGRU over ``xs`` of shape (T, B, I).
+
+    Returns (hs (T,B,H), final_state, per-step stats stacked over T).
+    Differentiable: the delta threshold acts as a piecewise-constant gate;
+    gradients flow through the transmitted path (straight-through on the
+    gate), matching how DeltaRNN networks are trained.
+    """
+    T, B, I = xs.shape
+    H = params.w_h.shape[0]
+    cell = DeltaGRUCell(hidden_dim=H, threshold=threshold)
+    if state is None:
+        state = init_delta_state(B, I, H, params, xs.dtype)
+
+    def body(carry, x):
+        new_state, h, stats = cell(params, carry, x)
+        return new_state, (h, stats)
+
+    final_state, (hs, stats) = jax.lax.scan(body, state, xs)
+    return hs, final_state, stats
+
+
+def dense_gru_scan(params: DeltaGRUParams, xs: Array,
+                   h0: Array | None = None) -> Array:
+    """Reference dense GRU (identical math to ΔGRU at threshold=0)."""
+    T, B, I = xs.shape
+    H = params.w_h.shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, H), xs.dtype)
+
+    def body(h, x):
+        zx = x @ params.w_x + params.b
+        zh = h @ params.w_h
+        r = jax.nn.sigmoid(zx[:, :H] + zh[:, :H])
+        u = jax.nn.sigmoid(zx[:, H:2 * H] + zh[:, H:2 * H])
+        c = jnp.tanh(zx[:, 2 * H:] + r * zh[:, 2 * H:])
+        h = u * h + (1.0 - u) * c
+        return h, h
+
+    _, hs = jax.lax.scan(body, h0, xs)
+    return hs
+
+
+def temporal_sparsity(stats: DeltaStats) -> Array:
+    """Fraction of dense MACs skipped, averaged over time and batch."""
+    return 1.0 - jnp.sum(stats.macs) / jnp.sum(stats.macs_dense)

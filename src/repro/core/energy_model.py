@@ -1,0 +1,153 @@
+"""Hardware cost model of the DeltaKWS IC (65 nm, 0.6/0.65 V, 125 kHz).
+
+The container has no silicon; energy and latency are *derived from counted
+operations* (MACs executed, weight-SRAM words read, FEx samples processed)
+through per-op energies calibrated once against the paper's measured
+endpoints, and then every reported number (the Δ_TH sweep of Fig. 12, the
+tables) is a model *output*, not a hard-coded copy.
+
+Published measurement anchors (paper §III):
+  * E/decision:   121.2 nJ @ Δ_TH=0   →  36.11 nJ @ Δ_TH=0.2 (87% sparsity)
+  * latency:      16.4 ms  @ Δ_TH=0   →  6.9 ms  @ Δ_TH=0.2
+  * chip power:   5.22 µW @ 125 kHz at the design point
+  * power split:  FEx 25%, ΔRNN 57%, SRAM 18%  (Fig. 10)
+  * SRAM read power 0.93 µW; near-V_TH cell is 6.6× lower than foundry SRAM
+  * FEx power 1.22 µW (10 of 16 channels active; −30% vs 16 channels)
+  * frame shift 16 ms (62.5 decisions/s), 8 kHz 12-bit input
+
+Network op counts per frame (ΔInput(10) → ΔGRU(64) → FC(12)):
+  dense GRU MACs  = (10 + 64) · 3 · 64 = 14,208
+  FC MACs         = 64 · 12 + 12      =    780  (dense every frame)
+  weight words    = MACs / 2          (two 8-bit weights per 16-bit word)
+
+Model structure
+  cycles(frame) = C_FIX + macs_exec / MACS_PER_CYCLE
+  E(frame)      = E_FIX + macs_exec · (e_mac + 0.5 · e_sram_word)
+with (C_FIX, MACS_PER_CYCLE, E_FIX, e_*) solved from the four anchor
+measurements.  The 0.5 factor is the dual-weight SRAM word.  The near-V_TH
+SRAM enters through e_sram_word; `foundry_sram=True` multiplies it by 6.6
+to reproduce the paper's SRAM ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# ---------------------------------------------------------------- anchors --
+CLK_HZ = 125e3
+FRAME_S = 16e-3
+DENSE_GRU_MACS = (10 + 64) * 3 * 64        # 14,208
+FC_MACS = 64 * 12 + 12                     # 780
+E_DEC_DENSE_NJ = 121.2
+E_DEC_SPARSE_NJ = 36.11
+LAT_DENSE_MS = 16.4
+LAT_SPARSE_MS = 6.9
+SPARSITY_ANCHOR = 0.87
+CHIP_POWER_UW = 5.22
+FEX_POWER_UW = 1.22                        # 10-channel configuration
+SRAM_POWER_UW = 0.93
+NEAR_VTH_SRAM_FACTOR = 6.6                 # foundry / near-V_TH read power
+
+# ------------------------------------------------------- calibrated params --
+# Affine fits through the two measured (sparsity, value) endpoints.
+# cycles = C_FIX + macs * CYCLES_PER_MAC
+_cyc_dense = LAT_DENSE_MS * 1e-3 * CLK_HZ                    # 2050
+_cyc_sparse = LAT_SPARSE_MS * 1e-3 * CLK_HZ                  # 862.5
+CYCLES_PER_MAC = (_cyc_dense - _cyc_sparse) / (SPARSITY_ANCHOR * DENSE_GRU_MACS)
+C_FIX = _cyc_dense - DENSE_GRU_MACS * CYCLES_PER_MAC         # ≈ 684 cycles
+
+# energy = E_FIX + macs * e_per_mac_total   [nJ]
+E_PER_MAC_TOTAL_NJ = (E_DEC_DENSE_NJ - E_DEC_SPARSE_NJ) / (
+    SPARSITY_ANCHOR * DENSE_GRU_MACS)                        # ≈ 6.89 pJ
+E_FIX_NJ = E_DEC_DENSE_NJ - DENSE_GRU_MACS * E_PER_MAC_TOTAL_NJ  # ≈ 23.4 nJ
+
+# Split the per-MAC energy into datapath and SRAM-read parts using the
+# measured power breakdown (ΔRNN 57% vs SRAM 18% of 5.22 µW at the design
+# point; the SRAM share of the *variable* energy is 18/(57+18)).
+_SRAM_SHARE = SRAM_POWER_UW / (0.57 * CHIP_POWER_UW + SRAM_POWER_UW)
+E_SRAM_WORD_NJ = 2.0 * _SRAM_SHARE * E_PER_MAC_TOTAL_NJ      # per 16-bit word
+E_MAC_NJ = E_PER_MAC_TOTAL_NJ - 0.5 * E_SRAM_WORD_NJ
+
+# Fixed energy split: FEx active energy + FC + control, normalized to E_FIX.
+E_FEX_FRAME_NJ = FEX_POWER_UW * 1e-6 * FRAME_S * 1e9         # ≈ 19.5 nJ
+E_FC_FRAME_NJ = FC_MACS * E_PER_MAC_TOTAL_NJ                 # ≈ 5.4 nJ
+_scale_fix = E_FIX_NJ / (E_FEX_FRAME_NJ + E_FC_FRAME_NJ)
+
+# Leakage + clock tree (chip power minus active energy rate at design point).
+P_STATIC_UW = CHIP_POWER_UW - E_DEC_SPARSE_NJ * 1e-9 / FRAME_S * 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    macs_exec: float           # ΔGRU MACs actually executed per frame (avg)
+    macs_dense: float
+    sparsity: float
+    energy_nj_per_decision: float
+    latency_ms: float
+    chip_power_uw: float
+    fex_energy_nj: float
+    rnn_energy_nj: float
+    sram_energy_nj: float
+    sram_reads_words: float
+
+
+def frame_cost(macs_exec: float,
+               macs_dense: float = DENSE_GRU_MACS,
+               n_channels: int = 10,
+               foundry_sram: bool = False) -> CostReport:
+    """Energy/latency for one decision given executed ΔGRU MACs per frame."""
+    e_sram_word = E_SRAM_WORD_NJ * (NEAR_VTH_SRAM_FACTOR if foundry_sram else 1.0)
+    words = macs_exec / 2.0 + FC_MACS / 2.0
+    e_sram = words * e_sram_word
+    e_rnn = (macs_exec + FC_MACS) * E_MAC_NJ
+    # FEx energy scales with active channels (paper: 16→10 ch saves 30%).
+    ch_scale = _fex_channel_scale(n_channels)
+    e_fex = E_FEX_FRAME_NJ * _scale_fix * ch_scale
+    e_fc_ctl = E_FC_FRAME_NJ * (_scale_fix - 1.0)  # residual control overhead
+    energy = e_fex + e_rnn + e_sram + max(e_fc_ctl, 0.0)
+
+    cycles = C_FIX + macs_exec * CYCLES_PER_MAC
+    latency_ms = cycles / CLK_HZ * 1e3
+    power_uw = P_STATIC_UW + energy * 1e-9 / FRAME_S * 1e6
+    return CostReport(
+        macs_exec=macs_exec, macs_dense=macs_dense,
+        sparsity=1.0 - macs_exec / macs_dense,
+        energy_nj_per_decision=energy, latency_ms=latency_ms,
+        chip_power_uw=power_uw, fex_energy_nj=e_fex,
+        rnn_energy_nj=e_rnn, sram_energy_nj=e_sram,
+        sram_reads_words=words)
+
+
+def _fex_channel_scale(n_channels: int) -> float:
+    """FEx power vs channel count: 16ch = 1/0.7 × 10ch (paper: −30%)."""
+    # Linear in channels with a serial-controller floor, anchored at
+    # (10ch → 1.0) and (16ch → 1/0.7).
+    slope = (1.0 / 0.7 - 1.0) / (16 - 10)
+    return max(0.25, 1.0 + slope * (n_channels - 10))
+
+
+def cost_from_sparsity(sparsity: float, **kw) -> CostReport:
+    """Convenience: cost at a given average temporal sparsity."""
+    return frame_cost(macs_exec=(1.0 - sparsity) * DENSE_GRU_MACS, **kw)
+
+
+def self_check(atol_nj: float = 1.0, atol_ms: float = 0.1) -> dict:
+    """Verify the calibration reproduces the paper's anchor measurements."""
+    dense = cost_from_sparsity(0.0)
+    sparse = cost_from_sparsity(SPARSITY_ANCHOR)
+    out = {
+        "dense_nj": dense.energy_nj_per_decision,
+        "sparse_nj": sparse.energy_nj_per_decision,
+        "dense_ms": dense.latency_ms,
+        "sparse_ms": sparse.latency_ms,
+        "sparse_power_uw": sparse.chip_power_uw,
+        "energy_ratio": dense.energy_nj_per_decision / sparse.energy_nj_per_decision,
+        "latency_ratio": dense.latency_ms / sparse.latency_ms,
+    }
+    assert abs(out["dense_nj"] - E_DEC_DENSE_NJ) < atol_nj, out
+    assert abs(out["sparse_nj"] - E_DEC_SPARSE_NJ) < atol_nj, out
+    assert abs(out["dense_ms"] - LAT_DENSE_MS) < atol_ms, out
+    assert abs(out["sparse_ms"] - LAT_SPARSE_MS) < atol_ms, out
+    assert abs(out["sparse_power_uw"] - CHIP_POWER_UW) < 0.05, out
+    return out

@@ -1,0 +1,102 @@
+"""Fixed-point quantization utilities (Qm.n) with straight-through estimators.
+
+The DeltaKWS IC uses:
+  * 12-bit audio input samples,
+  * 12-bit FEx features,
+  * 8-bit ΔRNN weights (two per 16-bit SRAM word),
+  * mixed-precision IIR coefficients — b: 12 bit, a: 8 bit fractional
+    budgets found by an accuracy-driven grid search (paper §II-C3).
+
+All quantizers here are symmetric two's-complement fixed point:
+value ∈ [-2^(int_bits), 2^(int_bits) - 2^-frac_bits], step 2^-frac_bits,
+with total width = 1 (sign) + int_bits + frac_bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Two's-complement fixed-point format Q(int_bits).(frac_bits)."""
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def step(self) -> float:
+        return float(2.0 ** -self.frac_bits)
+
+    @property
+    def max_val(self) -> float:
+        return float(2.0 ** self.int_bits - 2.0 ** -self.frac_bits)
+
+    @property
+    def min_val(self) -> float:
+        return float(-(2.0 ** self.int_bits))
+
+    def quantize(self, x):
+        """Round-to-nearest + saturate. Works on jnp or np arrays."""
+        xp = jnp if isinstance(x, jax.Array) else np
+        q = xp.round(x / self.step) * self.step
+        return xp.clip(q, self.min_val, self.max_val)
+
+    def to_int(self, x):
+        """Integer code (for hardware-word accounting / bit-true tests)."""
+        xp = jnp if isinstance(x, jax.Array) else np
+        return xp.clip(xp.round(x / self.step),
+                       -(2 ** (self.total_bits - 1)),
+                       2 ** (self.total_bits - 1) - 1).astype(
+                           jnp.int32 if xp is jnp else np.int64)
+
+    def from_int(self, code):
+        return code * self.step
+
+
+def qformat_for(max_abs: float, total_bits: int) -> QFormat:
+    """Pick integer bits from the dynamic range, give the rest to fraction.
+
+    This mirrors the paper's procedure: "the integer bits for a and b are
+    first determined separately using their maximum values; the fraction
+    bits are then reduced from the baseline".
+    """
+    int_bits = max(0, int(np.ceil(np.log2(max(max_abs, 1e-12) + 1e-12))))
+    frac_bits = max(0, total_bits - 1 - int_bits)
+    return QFormat(int_bits=int_bits, frac_bits=frac_bits)
+
+
+def ste_quantize(x: Array, fmt: QFormat) -> Array:
+    """Quantize with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(fmt.quantize(x) - x)
+
+
+def quantize_audio_12b(x: Array) -> Array:
+    """12-bit ADC model: x in [-1, 1) → Q0.11."""
+    return QFormat(0, 11).quantize(jnp.clip(x, -1.0, 1.0 - 2.0 ** -11))
+
+
+# 8-bit weight format used by the ΔRNN accelerator (two weights per 16b word).
+WEIGHT_Q = QFormat(int_bits=0, frac_bits=7)           # Q0.7 ∈ [-1, 1)
+
+
+def quantize_weights_8b(w: Array, scale: float | None = None):
+    """Per-tensor scaled 8-bit weights. Returns (w_q, scale).
+
+    The IC stores 8-bit weights; training uses a per-tensor power-of-two
+    scale so the stored code is Q0.7.
+    """
+    if scale is None:
+        max_abs = float(jnp.max(jnp.abs(w)))
+        scale = float(2.0 ** np.ceil(np.log2(max(max_abs, 1e-12))))
+    wq = WEIGHT_Q.quantize(w / scale) * scale
+    return wq, scale

@@ -1,0 +1,51 @@
+"""Temporal-sparsity metrics and accumulators for Δ networks."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SparsityAccumulator:
+    """Streaming accumulator for sparsity over many sequences (host side)."""
+
+    macs_exec: float = 0.0
+    macs_dense: float = 0.0
+    nz_dx: float = 0.0
+    nz_dh: float = 0.0
+    frames: int = 0
+
+    def update(self, stats) -> None:
+        self.macs_exec += float(jnp.sum(stats.macs))
+        self.macs_dense += float(jnp.sum(stats.macs_dense))
+        self.nz_dx += float(jnp.sum(stats.nz_dx))
+        self.nz_dh += float(jnp.sum(stats.nz_dh))
+        self.frames += int(np.prod(stats.macs.shape))
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.macs_exec / max(self.macs_dense, 1.0)
+
+    @property
+    def macs_per_frame(self) -> float:
+        return self.macs_exec / max(self.frames, 1)
+
+
+def delta_histogram(xs: Array, n_bins: int = 64, max_abs: float = 2.0):
+    """Histogram of |x_t − x_{t−1}| — shows why temporal sparsity exists."""
+    d = jnp.abs(jnp.diff(xs, axis=0))
+    edges = jnp.linspace(0.0, max_abs, n_bins + 1)
+    hist, _ = jnp.histogram(d, bins=edges)
+    return hist, edges
+
+
+def sparsity_at_threshold(xs: Array, threshold: float) -> Array:
+    """Fraction of components with |Δ| ≤ threshold (input-side upper bound
+    on temporal sparsity, before hidden-state feedback effects)."""
+    d = jnp.abs(jnp.diff(xs, axis=0))
+    return jnp.mean(d <= threshold)

@@ -1,0 +1,9 @@
+"""IIR BPF-based feature extractor (paper §II-C)."""
+from repro.frontend.fex import FExConfig, FeatureExtractor, build_sos_bank, quantize_sos
+from repro.frontend.filters import (
+    design_butter_bandpass_sos,
+    make_filterbank,
+    mel_center_frequencies,
+    sos_freq_response,
+    sosfilt_np,
+)

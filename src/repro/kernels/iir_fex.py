@@ -1,0 +1,94 @@
+"""IIR BPF feature-extractor kernel — all channels in the lane dimension.
+
+The ASIC runs one serial MAC datapath at 128 kHz (16 channels × 8 kHz).
+The TPU-native layout turns the channel loop into the VPU lane dimension:
+all C channels' biquad cascades advance in lock-step, one audio sample per
+inner iteration.  Filter state (2 sections × 2 DF2T registers × C) lives
+in VMEM scratch and persists across the sequential grid (one grid step per
+16 ms frame), so HBM traffic is exactly: audio in, features out.
+
+  grid = (n_frames,);  x block = (frame_shift,) samples;
+  out block = (1, C) — the envelope sample at the frame boundary.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, coef_ref, out_ref, state_ref, env_ref, *,
+            frame_shift: int, env_alpha: float):
+    f = pl.program_id(0)
+
+    @pl.when(f == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+        env_ref[...] = jnp.zeros_like(env_ref)
+
+    # coef layout: (6, C) rows = [b0_0, a1_0, a2_0, b0_1, a1_1, a2_1]
+    b0_0, a1_0, a2_0 = coef_ref[0], coef_ref[1], coef_ref[2]
+    b0_1, a1_1, a2_1 = coef_ref[3], coef_ref[4], coef_ref[5]
+
+    def step(t, carry):
+        s = state_ref[...]                       # (4, C)
+        env = env_ref[...]                       # (1, C)
+        x = x_ref[t]                             # scalar → broadcast lanes
+        # section 0 (b = g·[1,0,-1] symmetric form)
+        y0 = b0_0 * x + s[0]
+        ns0_1 = -a1_0 * y0 + s[1]
+        ns0_2 = -b0_0 * x - a2_0 * y0
+        # section 1
+        y1 = b0_1 * y0 + s[2]
+        ns1_1 = -a1_1 * y1 + s[3]
+        ns1_2 = -b0_1 * y0 - a2_1 * y1
+        state_ref[...] = jnp.stack([ns0_1, ns0_2, ns1_1, ns1_2])
+        env_ref[...] = ((1.0 - env_alpha) * env
+                        + env_alpha * jnp.abs(y1)[None])
+        return carry
+
+    jax.lax.fori_loop(0, frame_shift, step, 0)
+    out_ref[...] = env_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("frame_shift", "env_alpha",
+                                             "interpret"))
+def iir_fex(x: jax.Array, coef: jax.Array, *, frame_shift: int = 128,
+            env_alpha: float = 0.0606, interpret: bool = True) -> jax.Array:
+    """x: (T,) audio; coef: (6, C) per-channel biquad-cascade coefficients
+    in the symmetric form (b1=0, b2=−b0 exploited — see frontend/filters).
+
+    Returns (T // frame_shift, C) envelope features (pre-log).
+    """
+    T = x.shape[0]
+    C = coef.shape[1]
+    n_frames = T // frame_shift
+    x = x[:n_frames * frame_shift].astype(jnp.float32)
+    kernel = functools.partial(_kernel, frame_shift=frame_shift,
+                               env_alpha=env_alpha)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_frames,),
+        in_specs=[
+            pl.BlockSpec((frame_shift,), lambda f: (f,)),
+            pl.BlockSpec((6, C), lambda f: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda f: (f, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_frames, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((4, C), jnp.float32),
+                        pltpu.VMEM((1, C), jnp.float32)],
+        interpret=interpret,
+    )(x, coef.astype(jnp.float32))
+
+
+def pack_coefficients(sos) -> jax.Array:
+    """(C, 2, 6) SOS bank → (6, C) symmetric-form coefficient rows."""
+    import numpy as np
+    sos = np.asarray(sos)
+    return jnp.asarray(np.stack([
+        sos[:, 0, 0], sos[:, 0, 4], sos[:, 0, 5],
+        sos[:, 1, 0], sos[:, 1, 4], sos[:, 1, 5],
+    ]), jnp.float32)

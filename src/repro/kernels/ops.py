@@ -1,0 +1,26 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True in this CPU container (the kernels TARGET
+TPU; interpret mode executes the kernel body for correctness validation).
+On a real TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.delta_matvec import delta_matvec, make_block_mask
+from repro.kernels.delta_gru_cell import delta_gru_cell
+from repro.kernels.iir_fex import iir_fex, pack_coefficients
+
+__all__ = [
+    "delta_matvec", "make_block_mask", "delta_gru_cell",
+    "iir_fex", "pack_coefficients", "delta_matvec_auto",
+]
+
+
+def delta_matvec_auto(dx, w, m, *, block_i: int = 128, block_o: int = 128,
+                      interpret: bool = True):
+    """Convenience: derive the block mask from the delta vector itself."""
+    mask = make_block_mask(dx, block_i)
+    return delta_matvec(dx, w, m, mask, block_i=block_i, block_o=block_o,
+                        interpret=interpret), mask

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_matvec_ref(dx, w, m, block_mask, block_i: int = 128):
+    """Oracle for kernels.delta_matvec: m + (masked dx) @ w in f32."""
+    B, I = dx.shape
+    mask = jnp.repeat(block_mask.astype(jnp.float32), block_i)
+    dx_m = dx.astype(jnp.float32) * mask[None, :]
+    return m.astype(jnp.float32) + dx_m @ w.astype(jnp.float32)
+
+
+def iir_fex_ref(x, coef, frame_shift: int = 128, env_alpha: float = 0.0606):
+    """Oracle for kernels.iir_fex (symmetric-form biquad cascade)."""
+    C = coef.shape[1]
+    b0_0, a1_0, a2_0, b0_1, a1_1, a2_1 = [coef[i] for i in range(6)]
+
+    def step(carry, xt):
+        s0_1, s0_2, s1_1, s1_2, env = carry
+        y0 = b0_0 * xt + s0_1
+        ns0_1 = -a1_0 * y0 + s0_2
+        ns0_2 = -b0_0 * xt - a2_0 * y0
+        y1 = b0_1 * y0 + s1_1
+        ns1_1 = -a1_1 * y1 + s1_2
+        ns1_2 = -b0_1 * y0 - a2_1 * y1
+        env = (1.0 - env_alpha) * env + env_alpha * jnp.abs(y1)
+        return (ns0_1, ns0_2, ns1_1, ns1_2, env), env
+
+    z = jnp.zeros((C,), jnp.float32)
+    T = x.shape[0] // frame_shift * frame_shift
+    _, envs = jax.lax.scan(step, (z, z, z, z, z),
+                           x[:T].astype(jnp.float32))
+    return envs[frame_shift - 1::frame_shift]
+
+
+def delta_gru_cell_ref(x, h, x_hat, h_hat, m_x, m_h, w_x, w_h, threshold):
+    """Oracle for kernels.delta_gru_cell (mirrors core.delta_gru math)."""
+    H = h.shape[1]
+    dxf = x - x_hat
+    mx = jnp.abs(dxf) > threshold
+    dx = jnp.where(mx, dxf, 0.0)
+    nxh = jnp.where(mx, x, x_hat)
+    dhf = h - h_hat
+    mh = jnp.abs(dhf) > threshold
+    dh = jnp.where(mh, dhf, 0.0)
+    nhh = jnp.where(mh, h, h_hat)
+    nmx = m_x + dx @ w_x
+    nmh = m_h + dh @ w_h
+    r = jax.nn.sigmoid(nmx[:, :H] + nmh[:, :H])
+    u = jax.nn.sigmoid(nmx[:, H:2 * H] + nmh[:, H:2 * H])
+    c = jnp.tanh(nmx[:, 2 * H:] + r * nmh[:, 2 * H:])
+    return u * h + (1 - u) * c, nxh, nhh, nmx, nmh

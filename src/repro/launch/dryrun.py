@@ -1,0 +1,166 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+#
+# The two lines above MUST stay the first statements — jax locks the device
+# count at first init, and the production meshes need 512 host placeholders.
+_DOC = """
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results.json]
+
+Per cell, records: lowering+compile wall time, memory_analysis (per-device
+fit), cost_analysis (as-is), HLO collective inventory (loop-multiplied),
+analytic cost model terms, and the roofline summary.  Results accumulate in
+a JSON cache (skip already-done cells) so the campaign is resumable.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             hlo_dir: str | None = None) -> dict:
+    from repro.configs import LM_SHAPES, get_config
+    from repro.launch import costmodel, hlo_analysis
+    from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                                   make_production_mesh)
+    from repro.launch.steps import build_step
+    from repro.parallel.sharding import Sharder
+
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    shd = Sharder(mesh=mesh)
+
+    # Adaptive gradient accumulation: escalate microbatches until the cell
+    # fits the 16 GB/chip HBM budget (train cells only).
+    micro_options = [1, 2, 4, 8] if shape.kind == "train" else [1]
+    for micro in micro_options:
+        t0 = time.time()
+        with mesh:
+            fn, arg_specs = build_step(cfg, shape, shd, microbatches=micro)
+            lowered = fn.lower(*arg_specs)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        per_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                   + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+        if per_dev < 16e9 or micro == micro_options[-1]:
+            break
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if hlo_dir:
+        import pathlib
+        p = pathlib.Path(hlo_dir)
+        p.mkdir(parents=True, exist_ok=True)
+        (p / f"{arch}__{shape_name}__{mesh_kind}.hlo").write_text(hlo)
+    colls = hlo_analysis.analyze_collectives(hlo, chips)
+    csum = hlo_analysis.collective_summary(colls)
+
+    cost = costmodel.step_costs(cfg, shape)
+    compute_s = cost.hlo_flops / (chips * PEAK_FLOPS_BF16)
+    memory_s = cost.hbm_bytes / (chips * HBM_BW)
+    collective_s = csum["total_bytes"] / (chips * ICI_BW_PER_LINK)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    per_dev_bytes = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "status": "ok", "microbatches": micro,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_total_gb": per_dev_bytes / 1e9,
+            "fits_16gb": bool(per_dev_bytes < 16e9),
+        },
+        "cost_analysis_flops": float(ca.get("flops", -1.0)),
+        "collectives": csum,
+        "model_flops": cost.model_flops,
+        "hlo_flops": cost.hlo_flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "tokens": cost.tokens,
+        "roofline": {**terms, "dominant": dominant,
+                     "bound_s": max(terms.values()),
+                     "model_vs_hlo_flops": cost.model_flops / max(cost.hlo_flops, 1)},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import cells
+    todo = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for arch, shape, skip in cells(include_skipped=False):
+            for m in meshes:
+                todo.append((arch, shape, m))
+    else:
+        assert args.arch and args.shape
+        for m in meshes:
+            todo.append((args.arch, args.shape, m))
+
+    import pathlib
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    for arch, shape, m in todo:
+        key = f"{arch}|{shape}|{m}"
+        if key in results and results[key].get("status") == "ok" and not args.force:
+            print(f"[skip cached] {key}", flush=True)
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, m, args.hlo_dir)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": m,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        results[key] = rec
+        out_path.write_text(json.dumps(results, indent=1))
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"  ok compile={rec['compile_s']}s "
+                  f"mem/dev={rec['memory']['per_device_total_gb']:.2f}GB "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                  f"coll={r['collective_s']:.4f}s dominant={r['dominant']}",
+                  flush=True)
+        else:
+            print(f"  ERROR {rec['error']}", flush=True)
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    print(f"done: {n_ok}/{len(results)} ok")
+    return 0 if all(r.get("status") == "ok" for r in results.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

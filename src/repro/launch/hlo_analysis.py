@@ -1,0 +1,182 @@
+"""Post-SPMD HLO analysis: collective inventory with while-loop trip counts.
+
+Parses ``compiled.as_text()`` (per-device shapes after partitioning):
+  * splits the module into computations,
+  * builds the while-loop nesting tree from ENTRY, extracting trip counts
+    from each loop condition's compare-against-constant,
+  * sums collective bytes with the correct loop multipliers.
+
+Byte accounting per instruction (per-device, then scaled by participants):
+  all-gather          → output bytes           (each device receives ~out)
+  all-reduce          → 2 × bytes              (reduce-scatter + all-gather)
+  reduce-scatter      → input bytes ≈ out × group
+  all-to-all          → bytes
+  collective-permute  → bytes
+``collective_bytes`` in the report is the GLOBAL (all-chips) total, matching
+the roofline formula  collective_time = bytes / (chips × link_bw).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'f32[256,4096,320]' → bytes. Tuples: sum of elements."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_per_device: float
+    participants: int
+    multiplier: float            # product of enclosing loop trip counts
+    computation: str
+
+    @property
+    def factor(self) -> float:
+        return 2.0 if self.kind == "all-reduce" else 1.0
+
+    @property
+    def global_bytes(self) -> float:
+        return (self.factor * self.bytes_per_device * self.participants
+                * self.multiplier)
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name → list of instruction lines.
+
+    Indentation-based: computation headers sit at column 0 (possibly with
+    the parameter tuple wrapped over several lines); instructions are
+    indented; a column-0 '}' closes the computation."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if line[0] not in " \t}":
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    comps["__entry__"] = comps[cur]
+                    comps.setdefault("__entry_name__", []).append(cur)
+            continue
+        if line.strip() == "}" and not line.startswith("  "):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str], body_lines: list[str]) -> int:
+    """Extract the loop bound from the condition's compare constant."""
+    consts = []
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    if consts:
+        return max(consts)
+    return 1
+
+
+def _participants(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(1)) * int(m.group(2))
+    m = re.search(r"replica_groups=\{([^}]*)\}", line)
+    if m:
+        ids = re.findall(r"\d+", m.group(1))
+        return len(set(ids))
+    return total_devices
+
+
+def analyze_collectives(hlo: str, total_devices: int) -> list[CollectiveOp]:
+    comps = split_computations(hlo)
+    entry = comps.get("__entry_name__", [None])[0]
+    if entry is None:                       # fall back: treat all flat
+        entry = next(iter(comps))
+
+    # while-instr scan per computation: body/cond names + trip counts
+    whiles: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for cname, lines in comps.items():
+        if cname.startswith("__"):
+            continue
+        for ln in lines:
+            m = re.search(r"while\(.*?\)"
+                          r".*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)", ln)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                tc = _trip_count(comps.get(cond, []), comps.get(body, []))
+                whiles[cname].append((body, tc))
+
+    # DFS from entry accumulating multipliers
+    mult: dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        for body, tc in whiles.get(c, []):
+            mult[body] = max(mult.get(body, 0.0), mult[c] * tc)
+            stack.append(body)
+        # also descend into called computations (fusions/calls) w/o extra mult
+        for ln in comps.get(c, []):
+            for m in re.finditer(r"(?:calls=|to_apply=)%?([\w\.\-]+)", ln):
+                callee = m.group(1)
+                mult[callee] = max(mult.get(callee, 0.0), mult[c])
+                stack.append(callee)
+
+    ops: list[CollectiveOp] = []
+    for cname, lines in comps.items():
+        if cname.startswith("__") or cname not in mult:
+            continue
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"=\s+\S+\s+{kind}\(", ln) or \
+                   re.search(rf"=\s+\S+\s+{kind}-start\(", ln):
+                    shape = ln.split("=", 1)[1].strip().split(f" {kind}")[0]
+                    ops.append(CollectiveOp(
+                        kind=kind,
+                        bytes_per_device=shape_bytes(shape),
+                        participants=_participants(ln, total_devices),
+                        multiplier=mult[cname],
+                        computation=cname))
+                    break
+    return ops
+
+
+def collective_summary(ops: list[CollectiveOp]) -> dict:
+    by_kind: dict[str, float] = defaultdict(float)
+    for op in ops:
+        by_kind[op.kind] += op.global_bytes
+    return {
+        "total_bytes": sum(o.global_bytes for o in ops),
+        "count": len(ops),
+        "by_kind": dict(by_kind),
+    }

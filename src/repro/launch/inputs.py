@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs(cfg, shape, shd)`` returns the kwargs pytree for the step
+function of that cell — weak-type-correct, sharded, no device allocation.
+Modality frontends are stubs: `[vlm]`/`[audio]` entries receive precomputed
+patch/frame embeddings as inputs (per the brief).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.parallel.sharding import Sharder
+
+
+def _tok(shd: Sharder, batch: int, seq: int):
+    return jax.ShapeDtypeStruct(
+        (batch, seq), jnp.int32,
+        sharding=shd.sharding((batch, seq), ("batch", "seq")))
+
+
+def _emb(shd: Sharder, batch: int, seq: int, d: int):
+    return jax.ShapeDtypeStruct(
+        (batch, seq, d), jnp.bfloat16,
+        sharding=shd.sharding((batch, seq, d), ("batch", "seq", "act_embed")))
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, shd: Sharder) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vit_stub":
+        s_txt = S - cfg.frontend_tokens
+        return {"tokens": _tok(shd, B, s_txt), "labels": _tok(shd, B, s_txt),
+                "embeds": _emb(shd, B, cfg.frontend_tokens, cfg.d_model)}
+    if cfg.frontend == "audio_stub":
+        # encoder consumes frame embeddings; decoder trains on S tokens
+        return {"tokens": _tok(shd, B, S), "labels": _tok(shd, B, S),
+                "embeds": _emb(shd, B, cfg.frontend_tokens, cfg.d_model)}
+    return {"tokens": _tok(shd, B, S), "labels": _tok(shd, B, S)}
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig, shd: Sharder) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.frontend == "vit_stub":
+        out["tokens"] = _tok(shd, B, S - cfg.frontend_tokens)
+        out["embeds"] = _emb(shd, B, cfg.frontend_tokens, cfg.d_model)
+    elif cfg.frontend == "audio_stub":
+        out["tokens"] = _tok(shd, B, S)
+        out["embeds"] = _emb(shd, B, cfg.frontend_tokens, cfg.d_model)
+    else:
+        out["tokens"] = _tok(shd, B, S)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, shd: Sharder) -> dict:
+    B = shape.global_batch
+    return {"tokens": _tok(shd, B, 1)}

@@ -1,0 +1,96 @@
+"""Serving launcher: batched autoregressive decoding with a request queue.
+
+``python -m repro.launch.serve --arch qwen2-0.5b --requests 12``
+
+Implements the minimal production serving pattern the decode dry-run cells
+model: a fixed decode batch of slots, continuous batching (a finished
+request's slot is refilled from the queue; its KV region is reused since
+every slot tracks its own length via per-slot positions would require
+per-slot masks — here slots restart at index 0 per admission, matching the
+prefill-at-0 semantics of the framework), greedy sampling, and per-step
+telemetry (tokens/s, slot occupancy).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--slots", type=int, default=4, help="decode batch")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--cache-len", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.models import get_api
+    from repro.parallel.sharding import Sharder
+
+    cfg = get_smoke_config(args.arch)
+    shd = Sharder(mesh=None)
+    api = get_api(cfg, shd)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    decode = jax.jit(api.decode_step)
+
+    rng = np.random.default_rng(0)
+    queue = [rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
+             for _ in range(args.requests)]
+    done, active = [], {}
+
+    # Batch-of-one caches per slot keeps admission independent (a fused
+    # multi-slot cache with per-slot positions is the natural next step).
+    slots = {i: None for i in range(args.slots)}
+
+    def admit(slot):
+        if not queue:
+            slots[slot] = None
+            return
+        prompt = queue.pop(0)
+        cache = api.init_cache(1, args.cache_len)
+        if api.prefill is not None:
+            cache, logits = api.prefill(params, jnp.asarray(prompt[None]),
+                                        cache)
+        else:   # decode prompt token-by-token (hybrid path)
+            for t in prompt:
+                logits, cache = decode(params, cache,
+                                       jnp.asarray([[t]], jnp.int32))
+        slots[slot] = {"cache": cache, "out": [], "prompt": prompt,
+                       "last": int(jnp.argmax(logits[0, -1]))}
+
+    for s in range(args.slots):
+        admit(s)
+
+    t0 = time.time()
+    steps = tokens = 0
+    while any(v is not None for v in slots.values()):
+        for s, st in list(slots.items()):
+            if st is None:
+                continue
+            logits, st["cache"] = decode(
+                params, st["cache"], jnp.asarray([[st["last"]]], jnp.int32))
+            st["last"] = int(jnp.argmax(logits[0, -1]))
+            st["out"].append(st["last"])
+            tokens += 1
+            if len(st["out"]) >= args.max_new:
+                done.append(st)
+                admit(s)
+        steps += 1
+    dt = time.time() - t0
+    print(f"served {len(done)} requests, {tokens} tokens in {dt:.1f}s "
+          f"({tokens / dt:.1f} tok/s on CPU smoke config)")
+    for i, st in enumerate(done[:3]):
+        print(f"  req{i}: prompt[:4]={st['prompt'][:4].tolist()} "
+              f"out[:8]={st['out'][:8]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,140 @@
+"""Jitted step-function factories shared by the trainer, server and dry-run.
+
+Each builder returns (jitted_fn, arg_specs) where arg_specs is a pytree of
+ShapeDtypeStructs (with shardings) suitable both for ``.lower()`` dry-runs
+and for shaping real buffers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import inputs as inputs_lib
+from repro.models import get_api
+from repro.parallel.sharding import Sharder
+from repro.train import optimizer as opt_lib
+
+
+def param_specs(cfg: ArchConfig, shd: Sharder):
+    """(param ShapeDtypeStructs w/ shardings, logical axes) — no allocation."""
+    api = get_api(cfg, shd)
+    box = {}
+
+    def initp(k):
+        p, ax = api.init(k)
+        box["axes"] = ax
+        return p
+
+    shapes = jax.eval_shape(initp, jax.random.PRNGKey(0))
+    axes = box["axes"]
+    shardings = shd.param_shardings(shapes, axes)
+    specs = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return specs, axes
+
+
+def opt_specs(cfg: ArchConfig, shd: Sharder, p_specs, p_axes):
+    shapes = jax.eval_shape(opt_lib.init, p_specs)
+    axes = opt_lib.opt_axes(p_axes)
+    shardings = shd.param_shardings(shapes, axes)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, shd: Sharder,
+                     opt_cfg: opt_lib.AdamWConfig | None = None,
+                     microbatches: int = 1):
+    """microbatches > 1 → gradient accumulation: the global batch is split
+    into `microbatches` sequential chunks, grads accumulate in f32 (sharded
+    like the params), one optimizer step at the end.  Activation memory
+    scales down ~1/microbatches."""
+    api = get_api(cfg, shd)
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    p_specs, p_axes = param_specs(cfg, shd)
+    o_specs = opt_specs(cfg, shd, p_specs, p_axes)
+    batch_specs = inputs_lib.train_batch_specs(cfg, shape, shd)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                api.loss, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+
+            def mb_body(carry, b):
+                gacc, lacc = carry
+                (l, m), g = jax.value_and_grad(api.loss, has_aux=True)(
+                    params, b)
+                gacc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(
+                mb_body, (zeros, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_opt, om = opt_lib.update(opt_cfg, grads, opt_state,
+                                                 params)
+        return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+    out_shardings = (
+        jax.tree.map(lambda s: s.sharding, p_specs),
+        jax.tree.map(lambda s: s.sharding, o_specs),
+        None,
+    )
+    fn = jax.jit(train_step, donate_argnums=(0, 1),
+                 out_shardings=out_shardings if shd.mesh is not None else None)
+    return fn, (p_specs, o_specs, batch_specs)
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, shd: Sharder):
+    api = get_api(cfg, shd)
+    p_specs, _ = param_specs(cfg, shd)
+    cache_specs = api.cache_specs(shape.global_batch, shape.seq_len)
+    in_specs = inputs_lib.prefill_specs(cfg, shape, shd)
+
+    def prefill_step(params, cache, batch):
+        return api.prefill(params, batch["tokens"], cache,
+                           batch.get("embeds"))
+
+    fn = jax.jit(prefill_step, donate_argnums=(1,))
+    return fn, (p_specs, cache_specs, in_specs)
+
+
+def build_serve_step(cfg: ArchConfig, shape: ShapeConfig, shd: Sharder):
+    from repro.parallel.sharding import DECODE_RULES, Sharder as _Sharder
+    if shd.mesh is not None:
+        rules = dict(shd.rules)
+        rules.update(DECODE_RULES)
+        shd = _Sharder(mesh=shd.mesh, rules=rules)
+    api = get_api(cfg, shd)
+    p_specs, _ = param_specs(cfg, shd)
+    cache_specs = api.cache_specs(shape.global_batch, shape.seq_len)
+    in_specs = inputs_lib.decode_specs(cfg, shape, shd)
+
+    def serve_step(params, cache, batch):
+        return api.decode_step(params, cache, batch["tokens"])
+
+    fn = jax.jit(serve_step, donate_argnums=(1,))
+    return fn, (p_specs, cache_specs, in_specs)
+
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, shd: Sharder,
+               microbatches: int = 1):
+    """Dispatch on the shape kind: train | prefill | decode."""
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, shd, microbatches=microbatches)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, shd)
+    return build_serve_step(cfg, shape, shd)

@@ -1,0 +1,73 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen2-0.5b``.
+
+Single-host mode runs real steps on the local devices (reduced configs by
+default); ``--dry-run`` lowers+compiles the production-mesh program instead
+(see dryrun.py for the full campaign driver).  On a real multi-host pod the
+same module runs under ``jax.distributed.initialize()`` — the step
+functions, sharding rules and checkpointing are host-count agnostic.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (assigned) config instead of smoke")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.lm_data import SyntheticLM
+    from repro.launch.steps import build_train_step
+    from repro.models import get_api
+    from repro.parallel.sharding import Sharder
+    from repro.train import optimizer as opt
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch) if args.full_config else get_smoke_config(args.arch)
+    shape = ShapeConfig("launch", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    shd = Sharder(mesh=None)
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 4),
+                           total_steps=args.steps)
+    fn, _ = build_train_step(cfg, shape, shd, opt_cfg=ocfg)
+    api = get_api(cfg, shd)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    def data_fn(step):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        if cfg.frontend != "none":
+            b["embeds"] = jnp.zeros((args.batch, cfg.frontend_tokens,
+                                     cfg.d_model), jnp.float32)
+        return b
+
+    trainer = Trainer(TrainerConfig(ckpt_dir=args.ckpt_dir,
+                                    ckpt_every=args.ckpt_every),
+                      fn, params, state, data_fn)
+    start = trainer.maybe_restore()
+    if start:
+        print(f"restored from step {start}")
+    hist = trainer.run(args.steps)
+    print(f"{args.arch}: loss {hist[0].metrics['loss']:.3f} → "
+          f"{hist[-1].metrics['loss']:.3f}; "
+          f"stragglers={len(trainer.straggler_steps)} "
+          f"recoveries={trainer.recoveries}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""Architecture zoo: dense/MoE/VLM transformers, Mamba2 SSD, Zamba2 hybrid,
+Seamless enc-dec, and the paper's ΔGRU KWS model."""
+from repro.models.registry import get_api

@@ -1,0 +1,221 @@
+"""Seamless-M4T-style encoder-decoder (speech → text) [arXiv:2308.11596].
+
+The modality frontend is a STUB per the brief: ``input_specs`` supplies
+precomputed speech-frame embeddings (B, S_enc, D).  Optionally (the paper's
+technique applied to streaming audio) the frame embeddings are Δ-encoded
+along time before entering the encoder (cfg.use_delta) — unchanged frames
+contribute zero update, mirroring the ΔRNN input layer.
+
+Encoder: bidirectional self-attn + MLP.  Decoder: causal self-attn +
+cross-attn over encoder memory + MLP.  Decode caches: self-KV per decoder
+layer + precomputed cross-KV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.sharding import AxTree, Sharder
+
+Array = jax.Array
+
+
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 12)
+    t = AxTree()
+    t.sub("embed", L.init_embedding(ks[0], cfg.vocab_padded, cfg.d_model, cfg.dtype))
+    # encoder stack
+    t.sub("enc_attn", L.init_attention(ks[1], cfg, layers=cfg.enc_layers))
+    t.sub("enc_mlp", L.init_mlp(ks[2], cfg, layers=cfg.enc_layers))
+    t.sub("enc_n1", L.init_norm(cfg.d_model, layers=cfg.enc_layers, bias=True))
+    t.sub("enc_n2", L.init_norm(cfg.d_model, layers=cfg.enc_layers, bias=True))
+    # decoder stack
+    t.sub("dec_attn", L.init_attention(ks[3], cfg, layers=cfg.dec_layers))
+    t.sub("dec_xattn", L.init_attention(ks[4], cfg, layers=cfg.dec_layers))
+    t.sub("dec_mlp", L.init_mlp(ks[5], cfg, layers=cfg.dec_layers))
+    t.sub("dec_n1", L.init_norm(cfg.d_model, layers=cfg.dec_layers, bias=True))
+    t.sub("dec_n2", L.init_norm(cfg.d_model, layers=cfg.dec_layers, bias=True))
+    t.sub("dec_n3", L.init_norm(cfg.d_model, layers=cfg.dec_layers, bias=True))
+    t.sub("enc_nf", L.init_norm(cfg.d_model, bias=True))
+    t.sub("dec_nf", L.init_norm(cfg.d_model, bias=True))
+    head = AxTree()
+    head.add("w", L._init(ks[6], (cfg.d_model, cfg.vocab_padded), cfg.dtype),
+             ("embed", "vocab"))
+    t.sub("lm_head", head)
+    return t.build()
+
+
+def delta_encode_frames(embeds: Array, threshold: float) -> Array:
+    """Δ-encode frame embeddings along time (paper technique, beyond-paper
+    application): frame_t → frame accumulated from thresholded deltas."""
+    if threshold <= 0:
+        return embeds
+
+    def step(x_hat, x):
+        diff = x - x_hat
+        mask = jnp.abs(diff) > threshold
+        new = jnp.where(mask, x, x_hat)
+        return new, new
+
+    x0 = jnp.zeros_like(embeds[:, 0])
+    _, out = jax.lax.scan(step, x0, jnp.moveaxis(embeds, 1, 0))
+    return jnp.moveaxis(out, 0, 1)
+
+
+def encode(params, cfg, shd: Sharder, embeds: Array, remat=True) -> Array:
+    x = embeds.astype(cfg.dtype)
+    if cfg.use_delta and cfg.delta_threshold > 0:
+        x = delta_encode_frames(x, cfg.delta_threshold)
+    x = shd.act(x, ("batch", "res_seq", "act_embed"))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["n1"], x, cfg.norm_type)
+        h, _ = L.apply_attention(lp["attn"], cfg, h, shd, positions=positions,
+                                 causal=False)
+        x = x + h
+        h = L.apply_norm(lp["n2"], x, cfg.norm_type)
+        h = L.apply_mlp(lp["mlp"], cfg, h, shd)
+        return shd.act(x + h, ("batch", "res_seq", "act_embed")), ()
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, {"attn": params["enc_attn"],
+                                  "mlp": params["enc_mlp"],
+                                  "n1": params["enc_n1"],
+                                  "n2": params["enc_n2"]})
+    return L.apply_norm(params["enc_nf"], x, cfg.norm_type)
+
+
+def _cross_kv(p_xattn, cfg, memory: Array):
+    k = jnp.einsum("bsd,dke->bske", memory, p_xattn["wk"])
+    v = jnp.einsum("bsd,dke->bske", memory, p_xattn["wv"])
+    if cfg.qkv_bias:
+        k = k + p_xattn["bk"]
+        v = v + p_xattn["bv"]
+    return k, v
+
+
+def decode_stack(params, cfg, shd, x, memory, positions, remat=True,
+                 self_cache=None, cache_index=None):
+    """Decoder layers. self_cache: (k,v) stacked (L,B,S,K,Dh) or None."""
+
+    def body(x, xs):
+        if self_cache is not None:
+            lp, ck, cv = xs
+            kv_cache = (ck, cv)
+        else:
+            lp = xs
+            kv_cache = None
+        h = L.apply_norm(lp["n1"], x, cfg.norm_type)
+        h, new_kv = L.apply_attention(lp["attn"], cfg, h, shd,
+                                      positions=positions, kv_cache=kv_cache,
+                                      cache_index=cache_index)
+        x = x + h
+        h = L.apply_norm(lp["n2"], x, cfg.norm_type)
+        ckv = _cross_kv(lp["xattn"], cfg, memory)
+        h, _ = L.apply_attention(lp["xattn"], cfg, h, shd,
+                                 positions=positions, cross_kv=ckv)
+        x = x + h
+        h = L.apply_norm(lp["n3"], x, cfg.norm_type)
+        h = L.apply_mlp(lp["mlp"], cfg, h, shd)
+        x = shd.act(x + h, ("batch", "res_seq", "act_embed"))
+        return x, new_kv if self_cache is not None else ()
+
+    if remat and self_cache is None:
+        body = jax.checkpoint(body, prevent_cse=False)
+    lp_tree = {"attn": params["dec_attn"], "xattn": params["dec_xattn"],
+               "mlp": params["dec_mlp"], "n1": params["dec_n1"],
+               "n2": params["dec_n2"], "n3": params["dec_n3"]}
+    xs = (lp_tree, *self_cache) if self_cache is not None else lp_tree
+    x, ys = jax.lax.scan(body, x, xs)
+    return L.apply_norm(params["dec_nf"], x, cfg.norm_type), ys
+
+
+def loss_fn(params, cfg, shd, batch):
+    """batch: embeds (B,S_enc,D) speech frames, tokens/labels (B,S_dec)."""
+    memory = encode(params, cfg, shd, batch["embeds"])
+    x = L.embed_tokens(params["embed"], batch["tokens"], shd)
+    positions = jnp.arange(x.shape[1])
+    x, _ = decode_stack(params, cfg, shd, x, memory, positions)
+    ce = L.chunked_softmax_xent(x, params["lm_head"]["w"], batch["labels"],
+                                shd, vocab_size=cfg.vocab_size)
+    return ce, {"ce": ce}
+
+
+# ------------------------------------------------------------------ decode
+class EncDecCache(NamedTuple):
+    k: Array          # (L_dec, B, S_max, K, Dh) decoder self-attention
+    v: Array
+    memory: Array     # (B, S_enc, D) encoder output
+    index: Array
+
+
+def init_cache(cfg, batch: int, seq: int, shd: Sharder) -> EncDecCache:
+    shape = (cfg.dec_layers, batch, seq, cfg.n_kv_heads, cfg.d_head)
+    logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    k = jnp.zeros(shape, cfg.dtype)
+    mem = jnp.zeros((batch, cfg.frontend_tokens, cfg.d_model), cfg.dtype)
+    if shd.mesh is not None:
+        k = jax.device_put(k, shd.sharding(shape, logical))
+        mem = jax.device_put(mem, shd.sharding(mem.shape, ("batch", None, None)))
+    return EncDecCache(k=k, v=k, memory=mem, index=jnp.zeros((), jnp.int32))
+
+
+def cache_specs(cfg, batch: int, seq: int, shd: Sharder) -> EncDecCache:
+    shape = (cfg.dec_layers, batch, seq, cfg.n_kv_heads, cfg.d_head)
+    logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    kv = jax.ShapeDtypeStruct(shape, cfg.dtype,
+                              sharding=shd.sharding(shape, logical))
+    mshape = (batch, cfg.frontend_tokens, cfg.d_model)
+    mem = jax.ShapeDtypeStruct(mshape, cfg.dtype,
+                               sharding=shd.sharding(mshape, ("batch", None, None)))
+    return EncDecCache(k=kv, v=kv, memory=mem,
+                       index=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def prefill(params, cfg, shd, tokens, cache: EncDecCache, embeds=None):
+    """Encoder pass over frames + decoder prefill over prompt tokens."""
+    memory = (encode(params, cfg, shd, embeds, remat=False)
+              if embeds is not None else cache.memory)
+    x = L.embed_tokens(params["embed"], tokens, shd)
+    idx = cache.index
+    positions = idx + jnp.arange(x.shape[1])
+    x, (nk, nv) = decode_stack(params, cfg, shd, x, memory, positions,
+                               remat=False, self_cache=(cache.k, cache.v),
+                               cache_index=idx)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"]["w"])[:, None]
+    new_cache = EncDecCache(k=nk, v=nv, memory=memory,
+                            index=idx + x.shape[1])
+    return new_cache, shd.act(logits, ("batch", None, "act_vocab"))
+
+
+def decode_step(params, cfg, shd, cache: EncDecCache, tokens):
+    x = L.embed_tokens(params["embed"], tokens, shd)
+    idx = cache.index
+    positions = idx + jnp.arange(1)
+    x, (nk, nv) = decode_stack(params, cfg, shd, x, cache.memory, positions,
+                               remat=False, self_cache=(cache.k, cache.v),
+                               cache_index=idx)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"]["w"])
+    new_cache = EncDecCache(k=nk, v=nv, memory=cache.memory, index=idx + 1)
+    return shd.act(logits, ("batch", None, "act_vocab")), new_cache
+
+
+def make_api(cfg, shd: Sharder):
+    from repro.models.transformer import LMApi
+    return LMApi(
+        init=functools.partial(init_lm, cfg=cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, shd, batch),
+        prefill=lambda params, tokens, cache, embeds=None: prefill(
+            params, cfg, shd, tokens, cache, embeds),
+        decode_step=lambda params, cache, tokens: decode_step(
+            params, cfg, shd, cache, tokens),
+        init_cache=lambda batch, seq: init_cache(cfg, batch, seq, shd),
+        cache_specs=lambda batch, seq: cache_specs(cfg, batch, seq, shd),
+    )

@@ -1,0 +1,234 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block
+[arXiv:2411.15242].
+
+Every ``cfg.shared_attn_every`` Mamba layers, a single shared transformer
+block (attention + MLP, one set of weights reused at every application) is
+applied to ``proj_g([x, x0])`` — the concatenation of the current hidden
+state and the original embedding, through a small per-application projection
+(the role Zamba2 gives its per-use LoRA adapters).
+
+Structure (54 layers, every=6 → 9 groups):
+  x0 = embed(tokens)
+  for g in 1..9:   (outer lax.scan)
+      x = scan(6 mamba layers)(x)
+      x = x + SharedBlock(proj_g([x, x0]))
+Shared-block KV caches are per-application: (n_app, B, S, K, Dh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.parallel.sharding import AxTree, Sharder
+
+Array = jax.Array
+
+
+def _n_groups(cfg):
+    assert cfg.num_layers % cfg.shared_attn_every == 0
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def init_lm(key, cfg):
+    ng = _n_groups(cfg)
+    ks = jax.random.split(key, 8)
+    t = AxTree()
+    t.sub("embed", L.init_embedding(ks[0], cfg.vocab_padded, cfg.d_model, cfg.dtype))
+    t.sub("mamba", M.init_mamba_block(ks[1], cfg, layers=cfg.num_layers))
+    t.sub("norm1", L.init_norm(cfg.d_model, layers=cfg.num_layers))
+    # shared attention block (one copy)
+    t.sub("sh_attn", L.init_attention(ks[2], cfg, layers=None))
+    t.sub("sh_mlp", L.init_mlp(ks[3], cfg, layers=None))
+    t.sub("sh_norm1", L.init_norm(cfg.d_model))
+    t.sub("sh_norm2", L.init_norm(cfg.d_model))
+    cat = AxTree()
+    cat.add("w", L._init(ks[4], (ng, 2 * cfg.d_model, cfg.d_model), cfg.dtype),
+            ("layers", "embed", None))
+    t.sub("w_cat", cat)
+    t.sub("norm_f", L.init_norm(cfg.d_model))
+    head = AxTree()
+    head.add("w", L._init(ks[5], (cfg.d_model, cfg.vocab_padded), cfg.dtype),
+             ("embed", "vocab"))
+    t.sub("lm_head", head)
+    return t.build()
+
+
+def _group_mamba(params, cfg):
+    """Reshape stacked mamba params (L,...) → (ng, every, ...)."""
+    ng, ev = _n_groups(cfg), cfg.shared_attn_every
+    return jax.tree.map(lambda x: x.reshape(ng, ev, *x.shape[1:]),
+                        {"mamba": params["mamba"], "norm1": params["norm1"]})
+
+
+def _shared_block(params, cfg, shd, xin, positions, kv_cache=None,
+                  cache_index=None):
+    h = L.apply_norm(params["sh_norm1"], xin, cfg.norm_type)
+    h, new_kv = L.apply_attention(params["sh_attn"], cfg, h, shd,
+                                  positions=positions, kv_cache=kv_cache,
+                                  cache_index=cache_index)
+    xin = xin + h
+    h = L.apply_norm(params["sh_norm2"], xin, cfg.norm_type)
+    h = L.apply_mlp(params["sh_mlp"], cfg, h, shd)
+    return xin + h, new_kv
+
+
+def forward(params, cfg, shd: Sharder, tokens: Array, remat=True) -> Array:
+    x0 = L.embed_tokens(params["embed"], tokens, shd)
+    S = x0.shape[1]
+    positions = jnp.arange(S)
+    grouped = _group_mamba(params, cfg)
+
+    def mamba_body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h = M.apply_mamba_train(lp["mamba"], cfg, h, shd)
+        return x + h, ()
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+    def group_body(x, xs):
+        glayers, wcat = xs
+        x, _ = jax.lax.scan(mamba_body, x, glayers)
+        xin = jnp.einsum("bsd,dk->bsk",
+                         jnp.concatenate([x, x0], axis=-1), wcat)
+        out, _ = _shared_block(params, cfg, shd, xin, positions)
+        x = shd.act(x + out, ("batch", "res_seq", "act_embed"))
+        return x, ()
+
+    x, _ = jax.lax.scan(group_body, x0, (grouped, params["w_cat"]["w"]))
+    return L.apply_norm(params["norm_f"], x, cfg.norm_type)
+
+
+def loss_fn(params, cfg, shd, batch):
+    x = forward(params, cfg, shd, batch["tokens"])
+    ce = L.chunked_softmax_xent(x, params["lm_head"]["w"], batch["labels"],
+                                shd, vocab_size=cfg.vocab_size)
+    return ce, {"ce": ce}
+
+
+# ------------------------------------------------------------------ decode
+class HybridCache(NamedTuple):
+    mamba: M.MambaCache
+    k: Array            # (n_app, B, S, K, Dh)
+    v: Array
+    index: Array
+
+
+def init_cache(cfg, batch: int, seq: int, shd: Sharder) -> HybridCache:
+    ng = _n_groups(cfg)
+    shape = (ng, batch, seq, cfg.n_kv_heads, cfg.d_head)
+    logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    k = jnp.zeros(shape, cfg.dtype)
+    if shd.mesh is not None:
+        k = jax.device_put(k, shd.sharding(shape, logical))
+    return HybridCache(mamba=M.init_mamba_cache(cfg, batch, shd),
+                       k=k, v=k, index=jnp.zeros((), jnp.int32))
+
+
+def cache_specs(cfg, batch: int, seq: int, shd: Sharder) -> HybridCache:
+    ng = _n_groups(cfg)
+    shape = (ng, batch, seq, cfg.n_kv_heads, cfg.d_head)
+    logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    kv = jax.ShapeDtypeStruct(shape, cfg.dtype,
+                              sharding=shd.sharding(shape, logical))
+    return HybridCache(mamba=M.mamba_cache_specs(cfg, batch, shd),
+                       k=kv, v=kv,
+                       index=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def decode_step(params, cfg, shd, cache: HybridCache, tokens: Array):
+    x0 = L.embed_tokens(params["embed"], tokens, shd)[:, 0]     # (B,D)
+    idx = cache.index
+    positions = idx + jnp.arange(1)
+    ng, ev = _n_groups(cfg), cfg.shared_attn_every
+    grouped = _group_mamba(params, cfg)
+    mc = cache.mamba
+    regroup = lambda t: t.reshape(ng, ev, *t.shape[1:])
+    m_grouped = M.MambaCache(*[regroup(v) for v in mc])
+
+    def mamba_body(x, xs):
+        lp, conv, ssm, x_hat, m_acc = xs
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h, new_c, _ = M.apply_mamba_decode(lp["mamba"], cfg, h,
+                                           (conv, ssm, x_hat, m_acc), shd)
+        return x + h, new_c
+
+    def group_body(x, xs):
+        glayers, wcat, gmc_conv, gmc_ssm, gmc_xh, gmc_m, ck, cv = xs
+        x, new_mc = jax.lax.scan(mamba_body, x,
+                                 (glayers, gmc_conv, gmc_ssm, gmc_xh, gmc_m))
+        xin = jnp.einsum("bd,dk->bk", jnp.concatenate([x, x0], axis=-1), wcat)
+        out, new_kv = _shared_block(params, cfg, shd, xin[:, None], positions,
+                                    kv_cache=(ck, cv), cache_index=idx)
+        x = x + out[:, 0]
+        return x, (*new_mc, *new_kv)
+
+    x, (conv, ssm, xh, macc, nk, nv) = jax.lax.scan(
+        group_body, x0,
+        (grouped, params["w_cat"]["w"], *m_grouped, cache.k, cache.v))
+    x = L.apply_norm(params["norm_f"], x, cfg.norm_type)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"]["w"])[:, None]
+    logits = shd.act(logits, ("batch", None, "act_vocab"))
+    degroup = lambda t: t.reshape(ng * ev, *t.shape[2:])
+    new_cache = HybridCache(
+        mamba=M.MambaCache(degroup(conv), degroup(ssm), degroup(xh),
+                           degroup(macc)),
+        k=nk, v=nv, index=idx + 1)
+    return logits, new_cache
+
+
+def prefill(params, cfg, shd, tokens: Array, cache: HybridCache, embeds=None):
+    """Process a full prompt → (cache, last-token logits)."""
+    x0 = L.embed_tokens(params["embed"], tokens, shd)
+    S = x0.shape[1]
+    positions = jnp.arange(S)
+    idx = cache.index
+    grouped = _group_mamba(params, cfg)
+    ng, ev = _n_groups(cfg), cfg.shared_attn_every
+
+    def mamba_body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h, (conv_tail, ssm) = M.apply_mamba_train(lp["mamba"], cfg, h, shd,
+                                                  return_state=True)
+        return x + h, (conv_tail, ssm)
+
+    def group_body(x, xs):
+        glayers, wcat, ck, cv = xs
+        x, (conv, ssm) = jax.lax.scan(mamba_body, x, glayers)
+        xin = jnp.einsum("bsd,dk->bsk",
+                         jnp.concatenate([x, x0], axis=-1), wcat)
+        out, new_kv = _shared_block(params, cfg, shd, xin, positions,
+                                    kv_cache=(ck, cv), cache_index=idx)
+        x = shd.act(x + out, ("batch", "res_seq", "act_embed"))
+        return x, (conv, ssm, *new_kv)
+
+    x, (conv, ssm, nk, nv) = jax.lax.scan(
+        group_body, x0, (grouped, params["w_cat"]["w"], cache.k, cache.v))
+    x = L.apply_norm(params["norm_f"], x, cfg.norm_type)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"]["w"])[:, None]
+    degroup = lambda t: t.reshape(ng * ev, *t.shape[2:])
+    mc = cache.mamba
+    new_cache = HybridCache(
+        mamba=M.MambaCache(degroup(conv), degroup(ssm), mc.x_hat, mc.m_acc),
+        k=nk, v=nv, index=idx + S)
+    return new_cache, shd.act(logits, ("batch", None, "act_vocab"))
+
+
+def make_api(cfg, shd: Sharder):
+    from repro.models.transformer import LMApi
+    return LMApi(
+        init=functools.partial(init_lm, cfg=cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, shd, batch),
+        prefill=lambda params, tokens, cache, embeds=None: prefill(
+            params, cfg, shd, tokens, cache, embeds),
+        decode_step=lambda params, cache, tokens: decode_step(
+            params, cfg, shd, cache, tokens),
+        init_cache=lambda batch, seq: init_cache(cfg, batch, seq, shd),
+        cache_specs=lambda batch, seq: cache_specs(cfg, batch, seq, shd),
+    )

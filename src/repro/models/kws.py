@@ -1,0 +1,78 @@
+"""The paper's model: IIR FEx → ΔGRU(64) → FC(12) keyword spotter."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delta_gru as dg
+from repro.core.quantize import WEIGHT_Q, ste_quantize
+from repro.parallel.sharding import AxTree, Sharder
+
+Array = jax.Array
+
+N_CLASSES = 12
+CLASSES = ["silence", "unknown", "down", "go", "left", "no",
+           "off", "on", "right", "stop", "up", "yes"]
+
+
+def init_kws(key, cfg, input_dim: int = 10):
+    """cfg.d_model = GRU hidden size (64 in the paper)."""
+    k1, k2 = jax.random.split(key)
+    gru = dg.init_delta_gru(k1, input_dim, cfg.d_model)
+    t = AxTree()
+    t.add("w_x", gru.w_x, (None, None))
+    t.add("w_h", gru.w_h, (None, None))
+    t.add("b", gru.b, (None,))
+    t.add("w_fc", jax.random.normal(k2, (cfg.d_model, N_CLASSES)) /
+          np.sqrt(cfg.d_model), (None, None))
+    t.add("b_fc", jnp.zeros((N_CLASSES,)), (None,))
+    return t.build()
+
+
+def _gru_params(params, quantize_8b: bool):
+    w_x, w_h = params["w_x"], params["w_h"]
+    if quantize_8b:
+        # Per-tensor power-of-two scale, 8-bit STE (IC weight format).
+        def q(w):
+            scale = 2.0 ** jnp.ceil(jnp.log2(jnp.maximum(
+                jax.lax.stop_gradient(jnp.max(jnp.abs(w))), 1e-8)))
+            return ste_quantize(w / scale, WEIGHT_Q) * scale
+        w_x, w_h = q(w_x), q(w_h)
+    return dg.DeltaGRUParams(w_x, w_h, params["b"])
+
+
+def forward(params, cfg, feats: Array, threshold: float | None = None,
+            quantize_8b: bool = False):
+    """feats: (B, F, C) → (logits (B, 12), stats)."""
+    th = cfg.delta_threshold if threshold is None else threshold
+    gru = _gru_params(params, quantize_8b)
+    xs = jnp.moveaxis(feats, 1, 0)                    # (F, B, C)
+    hs, _, stats = dg.delta_gru_scan(gru, xs, threshold=th)
+    h_mean = jnp.mean(hs, axis=0)                     # mean-pool over frames
+    logits = h_mean @ params["w_fc"] + params["b_fc"]
+    return logits, stats
+
+
+def loss_fn(params, cfg, batch: dict, threshold: float | None = None,
+            quantize_8b: bool = False):
+    logits, stats = forward(params, cfg, batch["feats"], threshold,
+                            quantize_8b)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return ce, {"ce": ce, "acc": acc,
+                "sparsity": dg.temporal_sparsity(stats)}
+
+
+def accuracy_11class(logits: Array, labels: Array) -> Array:
+    """11-class GSCD metric [6]: 'unknown' (class 1) excluded."""
+    keep = labels != 1
+    logits11 = logits.at[:, 1].set(-jnp.inf)
+    pred = jnp.argmax(logits11, -1)
+    correct = jnp.where(keep, pred == labels, 0.0)
+    return jnp.sum(correct) / jnp.maximum(jnp.sum(keep), 1)

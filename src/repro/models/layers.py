@@ -1,0 +1,586 @@
+"""Shared neural-net layers for the architecture zoo.
+
+Functional style: ``init_*`` builds (params, logical_axes) dict pairs via
+:class:`repro.parallel.sharding.AxTree`; ``apply_*`` are pure functions.
+All weights are stored in ``cfg.dtype`` (bf16 by default); layernorm scales
+and softmax statistics are kept in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import AxTree, Sharder
+
+Array = jax.Array
+BIG_WINDOW = 1 << 30
+
+
+# ------------------------------------------------------------------- utils
+def _init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0] if len(shape) == 1 else shape[-2])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def stacked(shape, layers):
+    return shape if layers is None else (layers, *shape)
+
+
+def st_axes(axes, layers):
+    return axes if layers is None else ("layers", *axes)
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(d: int, layers=None, *, bias=False, dtype=jnp.float32):
+    t = AxTree()
+    t.add("scale", jnp.ones(stacked((d,), layers), dtype), st_axes(("act_embed",), layers))
+    if bias:
+        t.add("bias", jnp.zeros(stacked((d,), layers), dtype), st_axes(("act_embed",), layers))
+    return t.build()
+
+
+def apply_norm(p, x: Array, kind: str = "rmsnorm", eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(jnp.var(xf, axis=-1) [..., None] + eps)
+    else:
+        raise ValueError(kind)
+    out = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: (..., S, H, D) rotary over last dim; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def init_attention(key, cfg, layers=None):
+    """GQA attention weights. cfg needs d_model, n_heads, n_kv_heads, d_head,
+    qk_norm, qkv_bias, dtype."""
+    D, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    t = AxTree()
+    t.add("wq", _init(ks[0], stacked((D, H, Dh), layers), cfg.dtype),
+          st_axes(("embed", "heads", "head_dim"), layers))
+    t.add("wk", _init(ks[1], stacked((D, K, Dh), layers), cfg.dtype),
+          st_axes(("embed", "kv_heads", "head_dim"), layers))
+    t.add("wv", _init(ks[2], stacked((D, K, Dh), layers), cfg.dtype),
+          st_axes(("embed", "kv_heads", "head_dim"), layers))
+    t.add("wo", _init(ks[3], stacked((H, Dh, D), layers), cfg.dtype,
+                      scale=1.0 / np.sqrt(H * Dh)),
+          st_axes(("heads", "head_dim", "embed"), layers))
+    if cfg.qkv_bias:
+        t.add("bq", jnp.zeros(stacked((H, Dh), layers), cfg.dtype),
+              st_axes(("heads", "head_dim"), layers))
+        t.add("bk", jnp.zeros(stacked((K, Dh), layers), cfg.dtype),
+              st_axes(("kv_heads", "head_dim"), layers))
+        t.add("bv", jnp.zeros(stacked((K, Dh), layers), cfg.dtype),
+              st_axes(("kv_heads", "head_dim"), layers))
+    if cfg.qk_norm:
+        t.add("q_norm", jnp.ones(stacked((Dh,), layers), jnp.float32),
+              st_axes(("head_dim",), layers))
+        t.add("k_norm", jnp.ones(stacked((Dh,), layers), jnp.float32),
+              st_axes(("head_dim",), layers))
+    return t.build()
+
+
+def _rms_head(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_attention(p, cfg, x: Array, shd: Sharder, *,
+                    positions: Array, window: Any = None,
+                    kv_cache: tuple[Array, Array] | None = None,
+                    cache_index: Array | None = None,
+                    kv_positions: Array | None = None,
+                    causal: bool = True,
+                    cross_kv: tuple[Array, Array] | None = None,
+                    attend_local: bool | None = None):
+    """GQA attention.
+
+    Train/prefill: kv_cache=None → causal (+optional sliding window) mask;
+    ``causal=False`` gives bidirectional (encoder) attention.
+    Decode: kv_cache=(k,v) of shape (B, S_max, K, Dh); new kv written at
+    cache_index; attends over all positions < cache_index+1.
+    Cross-attention: ``cross_kv=(k,v)`` precomputed from the memory — no
+    cache update, full attention over the memory.
+    Returns (out, new_kv_cache or None).
+    """
+    B, S, D = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // K
+    if attend_local is None:
+        # S>1 with a cache == prefill-from-empty in this framework (the
+        # builders always prefill at index 0), so local attention is exact.
+        attend_local = S > 1
+    if S > 1:
+        # Explicit SP gather point: gather the seq-sharded residual HERE,
+        # in bf16 — the optimization barrier stops XLA from hoisting the
+        # gather above the norm's f32→bf16 cast (2× the bytes; §Perf).
+        x = shd.act(jax.lax.optimization_barrier(x),
+                    ("batch", "seq", "act_embed"))
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"])
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+        v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+        if cfg.qkv_bias:
+            k = k + p["bk"]
+            v = v + p["bv"]
+        if cfg.qk_norm:
+            k = _rms_head(k, p["k_norm"])
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if S > 1:
+            # Keep k/v seq-replicated (kv-head sharded where divisible):
+            # a seq-sharded k makes every flash KV-chunk slice a gather.
+            k = shd.act(k, ("batch", "seq", "kv_heads", None))
+            v = shd.act(v, ("batch", "seq", "kv_heads", None))
+    else:
+        k, v = cross_kv
+    q = shd.act(q, ("batch", "seq", "act_heads", None))
+
+    if cross_kv is not None:
+        qpos = None
+        mask_fn = None                       # full attention over memory
+        new_cache = None
+    elif kv_cache is not None and attend_local:
+        # Prefill: write the cache but attend over the FRESH local k/v —
+        # reading back the seq-sharded cache re-triggers the chunk-gather
+        # pathology and loses static causal skipping (§Perf).
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        new_cache = (ck, cv)
+        qpos = jnp.arange(S)
+
+        def mask_fn(kpos):
+            m = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                m &= kpos[None, :] > (qpos[:, None] - window)
+            return m
+        # mark as train-style so _attend can use static diagonal skipping
+        kv_cache = None
+    elif kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        k, v = ck, cv
+        qpos = cache_index + jnp.arange(S)
+
+        def mask_fn(kpos):
+            m = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                m &= kpos[None, :] > (qpos[:, None] - window)
+            return m
+        new_cache = (ck, cv)
+    else:
+        qpos = jnp.arange(S)
+        if causal:
+            def mask_fn(kpos):
+                m = kpos[None, :] <= qpos[:, None]
+                if window is not None:
+                    m &= kpos[None, :] > (qpos[:, None] - window)
+                return m
+        else:
+            mask_fn = None
+        new_cache = None
+
+    qg = q.reshape(B, S, K, G, Dh)
+    # Train/prefill causal path: qpos is structurally arange(S) → leave it
+    # None so _attend can skip above-diagonal KV tiles statically.
+    qpos_arg = None if (kv_cache is None and cross_kv is None) else qpos
+    out = _attend(qg, k, v, mask_fn, qpos=qpos_arg, window=window,
+                  causal=(mask_fn is not None)).reshape(B, S, H, Dh)
+    out = out.astype(x.dtype)
+    out = shd.act(out, ("batch", "seq", "act_heads", None))
+    out = tp_down_proj(out, p["wo"], shd, "bshe,hed->bsd",
+                       ("batch", "seq", "act_heads", None),
+                       ("heads", "head_dim", "embed"))
+    return out, new_cache
+
+
+FLASH_MIN_KV = 4096
+KV_CHUNK = 1024
+Q_CHUNK = 512
+
+
+def _attend(qg: Array, k: Array, v: Array, mask_fn, qpos=None,
+            window=None, causal=True) -> Array:
+    """Online-softmax attention.  qg: (B,S,K,G,Dh); k,v: (B,T,K,Dh).
+
+    For T ≥ FLASH_MIN_KV uses a q/kv-tiled flash implementation with a
+    custom VJP (scores recomputed per tile in backward — S×T never
+    materializes in either pass).  The pure-XLA twin of the Pallas kernel
+    in kernels/flash_attention.py.
+    """
+    B, S, K, G, Dh = qg.shape
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(Dh)
+    # Decode (S==1): the kv-chunked scan would force GSPMD to all-gather a
+    # seq-sharded KV cache (the scan's per-chunk dynamic-slice cannot stay
+    # sharded — measured 18.5 TB/step on nemotron decode_32k).  The direct
+    # einsum keeps KV sharded; the softmax over the sharded T axis lowers
+    # to tiny (B,K,G,S) max/sum all-reduces — flash-decode semantics by
+    # partitioning.  Small T: direct is cheapest anyway.
+    if S == 1 or T < FLASH_MIN_KV:
+        # NOTE: no preferred_element_type=f32 here — it makes XLA
+        # materialize an f32 COPY of the whole KV cache (4.3 GB/dev on
+        # qwen3 decode_32k).  The dot runs in bf16 (Dh≤256 accumulation);
+        # softmax statistics are still f32.
+        scores = jnp.einsum("bskge,btke->bkgst", qg, k
+                            ).astype(jnp.float32) * scale
+        if mask_fn is not None:
+            mask = mask_fn(jnp.arange(T))
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgst,btke->bskge", probs, v)
+
+    # Static causal diagonal: in train/prefill qpos == arange(S) and
+    # S == T, so q-chunk i can never attend to kv-chunk j when
+    # j·ck ≥ (i+1)·cq — those tiles are skipped STATICALLY (≈ halves
+    # attention FLOPs; §Perf).
+    static_diag = (causal and qpos is None and S == T and window is None)
+    if qpos is None:
+        qpos = jnp.arange(S)
+    win = jnp.asarray(BIG_WINDOW if window is None else window, jnp.int32)
+    return flash_attention(qg, k, v, qpos.astype(jnp.int32), win, causal,
+                           static_diag)
+
+
+def _tile_mask(qp, kp, window, causal: bool):
+    """(cq, ck) mask from absolute positions."""
+    if not causal:
+        return jnp.ones((qp.shape[0], kp.shape[0]), bool)
+    m = kp[None, :] <= qp[:, None]
+    m &= kp[None, :] > (qp[:, None] - window)
+    return m
+
+
+def _pick_chunks(S, T):
+    cq = Q_CHUNK
+    while S % cq:
+        cq //= 2
+    ck = KV_CHUNK
+    while T % ck:
+        ck //= 2
+    return max(cq, 1), max(ck, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention(qg, k, v, qpos, window, causal: bool,
+                    static_diag: bool = False):
+    out, _ = _flash_fwd_impl(qg, k, v, qpos, window, causal, static_diag)
+    return out
+
+
+def _flash_fwd_impl(qg, k, v, qpos, window, causal, static_diag=False):
+    B, S, K, G, Dh = qg.shape
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(Dh)
+    cq, ck = _pick_chunks(S, T)
+    nq, nk = S // cq, T // ck
+    q_t = jnp.moveaxis(qg.reshape(B, nq, cq, K, G, Dh), 1, 0)    # (nq,...)
+    qp_t = qpos.reshape(nq, cq)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, K, Dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, K, Dh), 1, 0)
+
+    def q_block(args, n_kv=nk):
+        qb, qp = args                                            # (B,cq,K,G,Dh)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kb, vb, i = inp
+            kp = i * ck + jnp.arange(ck)
+            s = jnp.einsum("bskge,btke->bkgst", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _tile_mask(qp, kp, window, causal)[None, None, None]
+            s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btke->bkgse", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), ()
+
+        m0 = jnp.full((B, K, G, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      (kc[:n_kv], vc[:n_kv],
+                                       jnp.arange(n_kv)))
+        o = acc / jnp.maximum(l, 1e-20)[..., None]               # (B,K,G,cq,Dh)
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))                 # (B,K,G,cq)
+        return o, lse
+
+    if static_diag:
+        # qpos == arange(S), S == T: q-chunk i needs kv chunks
+        # j < ceil((i+1)·cq / ck) only — skip the rest STATICALLY.
+        outs, lses = [], []
+        for i in range(nq):
+            n_kv = min(nk, -(-((i + 1) * cq) // ck))
+            o_i, lse_i = q_block((q_t[i], qp_t[i]), n_kv=n_kv)
+            outs.append(o_i)
+            lses.append(lse_i)
+        o = jnp.stack(outs)
+        lse = jnp.stack(lses)
+    else:
+        o, lse = jax.lax.map(q_block, (q_t, qp_t))               # (nq,B,K,G,cq,*)
+    out = jnp.moveaxis(o, 0, 3).reshape(B, K, G, S, Dh)
+    out = jnp.moveaxis(out, 3, 1).astype(v.dtype)                # (B,S,K,G,Dh)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, K, G, S)
+    return out, lse
+
+
+def _flash_fwd_vjp(qg, k, v, qpos, window, causal, static_diag):
+    out, lse = _flash_fwd_impl(qg, k, v, qpos, window, causal, static_diag)
+    return out, (qg, k, v, qpos, window, out, lse)
+
+
+def _flash_bwd_vjp(causal, static_diag, res, dout):
+    qg, k, v, qpos, window, out, lse = res
+    B, S, K, G, Dh = qg.shape
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(Dh)
+    cq, ck = _pick_chunks(S, T)
+    nq, nk = S // cq, T // ck
+    q_t = jnp.moveaxis(qg.reshape(B, nq, cq, K, G, Dh), 1, 0)
+    do_t = jnp.moveaxis(dout.reshape(B, nq, cq, K, G, Dh), 1, 0)
+    o_t = jnp.moveaxis(out.reshape(B, nq, cq, K, G, Dh), 1, 0)
+    qp_t = qpos.reshape(nq, cq)
+    lse_t = jnp.moveaxis(
+        jnp.moveaxis(lse, -1, 1).reshape(B, nq, cq, K, G), 1, 0)  # (nq,B,cq,K,G)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, K, Dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, K, Dh), 1, 0)
+
+    def q_block(args, n_kv=nk):
+        qb, dob, ob, qp, lseb = args
+        lse_b = jnp.transpose(lseb, (0, 2, 3, 1))                 # (B,K,G,cq)
+        delta = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32),
+                        axis=-1)                                  # (B,cq,K,G)
+        delta = jnp.transpose(delta, (0, 2, 3, 1))                # (B,K,G,cq)
+
+        def body(dq, inp):
+            kb, vb, i = inp
+            kp = i * ck + jnp.arange(ck)
+            s = jnp.einsum("bskge,btke->bkgst", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _tile_mask(qp, kp, window, causal)[None, None, None]
+            p = jnp.where(msk, jnp.exp(s - lse_b[..., None]), 0.0)
+            dv_c = jnp.einsum("bkgst,bskge->btke", p,
+                              dob.astype(jnp.float32))
+            dp = jnp.einsum("bskge,btke->bkgst", dob, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[..., None]) * scale
+            dq = dq + jnp.einsum("bkgst,btke->bskge", ds, kb,
+                                 preferred_element_type=jnp.float32)
+            dk_c = jnp.einsum("bkgst,bskge->btke", ds,
+                              qb.astype(jnp.float32))
+            return dq, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, cq, K, G, Dh), jnp.float32)
+        dq, (dk_c, dv_c) = jax.lax.scan(body, dq0,
+                                        (kc[:n_kv], vc[:n_kv],
+                                         jnp.arange(n_kv)))
+        return dq, dk_c, dv_c
+
+    if static_diag:
+        dq_parts = []
+        dk = jnp.zeros((nk, B, ck, K, Dh), jnp.float32)
+        dv = jnp.zeros((nk, B, ck, K, Dh), jnp.float32)
+        for i in range(nq):
+            n_kv = min(nk, -(-((i + 1) * cq) // ck))
+            dq_i, dk_i, dv_i = q_block(
+                (q_t[i], do_t[i], o_t[i], qp_t[i], lse_t[i]), n_kv=n_kv)
+            dq_parts.append(dq_i)
+            dk = dk.at[:n_kv].add(dk_i)
+            dv = dv.at[:n_kv].add(dv_i)
+        dq = jnp.stack(dq_parts)
+        dk = jnp.moveaxis(dk, 0, 1).reshape(B, T, K, Dh)
+        dv = jnp.moveaxis(dv, 0, 1).reshape(B, T, K, Dh)
+    else:
+        dq, dk_t, dv_t = jax.lax.map(
+            q_block, (q_t, do_t, o_t, qp_t, lse_t))
+        # dk/dv: (nq,nk,B,ck,K,Dh) → sum over nq → (B,T,K,Dh)
+        dk = jnp.moveaxis(jnp.sum(dk_t, axis=0), 0, 1).reshape(B, T, K, Dh)
+        dv = jnp.moveaxis(jnp.sum(dv_t, axis=0), 0, 1).reshape(B, T, K, Dh)
+    # dq: (nq,B,cq,K,G,Dh) → (B,S,K,G,Dh)
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, S, K, G, Dh).astype(qg.dtype)
+    return (dq, dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(qpos), jnp.zeros_like(window))
+
+
+flash_attention.defvjp(_flash_fwd_vjp, _flash_bwd_vjp)
+
+
+# ------------------------------------------------- TP collective matmul
+def tp_down_proj(h: Array, w: Array, shd: Sharder, eq: str,
+                 h_logical: tuple, w_logical: tuple) -> Array:
+    """Tensor-parallel down-projection with sequence-parallel output.
+
+    GSPMD lowers `einsum(contract over model-sharded dim) + res_seq
+    constraint` to an f32-PROMOTED full all-reduce followed by a slice
+    (measured: 2×1.34 GB/dev/layer on qwen3 prefill_32k — the dominant
+    collective).  This shard_map emits the Megatron-SP lowering instead:
+    local partial matmul → bf16 psum_scatter over 'model' onto the seq
+    dim.  4× fewer bytes (AR→RS ×2, f32→bf16 ×2).  Falls back to the
+    plain einsum when the mesh/shapes don't divide.
+    """
+    mesh = shd.mesh
+    S = h.shape[1]
+    if mesh is None or "model" not in mesh.axis_names:
+        return shd.act(jnp.einsum(eq, h, w), ("batch", "res_seq", "act_embed"))
+    from jax.sharding import PartitionSpec as P
+    h_spec = shd.spec(h.shape, h_logical)
+    w_spec = shd.spec(w.shape, w_logical)
+    msize = mesh.shape["model"]
+    # shard_map path needs: a model-sharded contraction dim (h dims ≥ 2),
+    # seq divisible by the model axis, and not a 1-token decode.
+    contract_ok = any(_spec_uses((ax,), "model") for ax in h_spec[2:] if ax)
+    if S == 1 or S % msize != 0 or not contract_ok:
+        return shd.act(jnp.einsum(eq, h, w), ("batch", "res_seq", "act_embed"))
+
+    from jax.experimental.shard_map import shard_map
+    # weight FSDP axes get re-gathered inside (same traffic as GSPMD's own
+    # FSDP gather)
+    gather_axes = tuple(a for a in ("pod", "data")
+                        if a in mesh.axis_names and _spec_uses(w_spec, a))
+    out_spec = P(h_spec[0], "model", None)
+
+    def local(h_l, w_l):
+        if gather_axes:
+            dim = _spec_dim(w_spec, gather_axes)
+            w_l = jax.lax.all_gather(w_l, gather_axes, axis=dim, tiled=True)
+        partial = jnp.einsum(eq, h_l, w_l)
+        return jax.lax.psum_scatter(partial, "model", scatter_dimension=1,
+                                    tiled=True)
+
+    return shard_map(local, mesh=mesh, in_specs=(h_spec, w_spec),
+                     out_specs=out_spec, check_rep=False)(h, w)
+
+
+def _spec_uses(spec, axis):
+    for e in spec:
+        if e == axis or (isinstance(e, tuple) and axis in e):
+            return True
+    return False
+
+
+def _spec_dim(spec, axes):
+    for i, e in enumerate(spec):
+        if e in axes or (isinstance(e, tuple) and any(a in e for a in axes)) \
+           or e == axes or (isinstance(e, tuple) and tuple(e) == tuple(axes)):
+            return i
+    return 0
+
+
+# --------------------------------------------------------------------- mlp
+def init_mlp(key, cfg, layers=None, d_ff=None, act=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    act = act or cfg.mlp_act
+    ks = jax.random.split(key, 3)
+    t = AxTree()
+    if act in ("swiglu", "geglu"):
+        t.add("wi_gate", _init(ks[0], stacked((D, F), layers), cfg.dtype),
+              st_axes(("embed", "mlp"), layers))
+    t.add("wi", _init(ks[1], stacked((D, F), layers), cfg.dtype),
+          st_axes(("embed", "mlp"), layers))
+    t.add("wo", _init(ks[2], stacked((F, D), layers), cfg.dtype,
+                      scale=1.0 / np.sqrt(F)),
+          st_axes(("mlp", "embed"), layers))
+    return t.build()
+
+
+def apply_mlp(p, cfg, x: Array, shd: Sharder, act=None) -> Array:
+    from jax.ad_checkpoint import checkpoint_name
+    act = act or cfg.mlp_act
+    if x.shape[1] > 1:
+        x = shd.act(jax.lax.optimization_barrier(x),
+                    ("batch", "seq", "act_embed"))      # SP gather in bf16
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    h = checkpoint_name(h, "mlp_up")      # selective-remat target (§Perf)
+    if act == "swiglu":
+        h = jax.nn.silu(checkpoint_name(
+            jnp.einsum("bsd,df->bsf", x, p["wi_gate"]), "mlp_gate")) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(checkpoint_name(
+            jnp.einsum("bsd,df->bsf", x, p["wi_gate"]), "mlp_gate")) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    h = shd.act(h, ("batch", "seq", "act_mlp"))
+    return tp_down_proj(h, p["wo"], shd, "bsf,fd->bsd",
+                        ("batch", "seq", "act_mlp"), ("mlp", "embed"))
+
+
+# --------------------------------------------------------------- embedding
+def init_embedding(key, vocab_padded: int, d: int, dtype):
+    t = AxTree()
+    t.add("table", _init(key, (vocab_padded, d), dtype, scale=1.0),
+          ("vocab", "embed"))
+    return t.build()
+
+
+def embed_tokens(p, tokens: Array, shd: Sharder) -> Array:
+    x = p["table"][tokens]
+    return shd.act(x, ("batch", "res_seq", "act_embed"))
+
+
+def chunked_softmax_xent(x: Array, head: Array, labels: Array,
+                         shd: Sharder, n_chunks: int = 8,
+                         vocab_size: int | None = None) -> Array:
+    """Mean cross-entropy with seq-chunked logits so (B,S,V) never fully
+    materializes outside one chunk.  head: (D, V_padded). labels: (B, S)."""
+    B, S, D = x.shape
+    V = head.shape[-1]
+    n_chunks = min(n_chunks, S)
+    while S % n_chunks:
+        n_chunks -= 1
+    xs = x.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(carry, xl):
+        xc, lc = xl
+        logits = jnp.einsum("bsd,dv->bsv", xc, head).astype(jnp.float32)
+        logits = shd.act(logits, ("batch", "seq", "act_vocab"))
+        if vocab_size is not None and vocab_size < V:
+            pad_mask = jnp.arange(V) >= vocab_size
+            logits = jnp.where(pad_mask[None, None], -1e30, logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), ()
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (xs, ls))
+    return total / (B * S)

@@ -1,0 +1,368 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training uses the chunked matmul ("SSD") form — MXU-friendly: quadratic
+attention-like term within chunks + linear state passing between chunks.
+Decode uses the O(1) recurrent step, optionally Δ-gated (the paper's
+technique applied to the SSM input projection — see DESIGN.md §5).
+
+Block layout (per layer):
+  in_proj: d_model -> [z (d_inner) | x (d_inner) | B (G·N) | C (G·N) | dt (H)]
+  causal depthwise conv (kernel 4) over [x|B|C]
+  SSD:  h_t = exp(dt·A) h_{t-1} + dt·B x_t ;  y = C·h + D x
+  gated RMSNorm (y * silu(z)), out_proj: d_inner -> d_model
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.parallel.sharding import AxTree, Sharder
+
+Array = jax.Array
+CHUNK = 256
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    H = cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    proj_dim = 2 * d_in + 2 * G * N + H
+    return d_in, H, P, G, N, conv_dim, proj_dim
+
+
+def init_mamba_block(key, cfg, layers=None):
+    D = cfg.d_model
+    d_in, H, P, G, N, conv_dim, proj_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    t = AxTree()
+    t.add("w_in", L._init(ks[0], L.stacked((D, proj_dim), layers), cfg.dtype),
+          L.st_axes(("embed", "mlp"), layers))
+    t.add("conv_w", L._init(ks[1], L.stacked((cfg.conv_kernel, conv_dim), layers),
+                            cfg.dtype, scale=1.0 / np.sqrt(cfg.conv_kernel)),
+          L.st_axes(("conv", "mlp"), layers))
+    t.add("conv_b", jnp.zeros(L.stacked((conv_dim,), layers), cfg.dtype),
+          L.st_axes(("mlp",), layers))
+    t.add("a_log", jnp.zeros(L.stacked((H,), layers), jnp.float32),
+          L.st_axes(("heads",), layers))
+    t.add("d_skip", jnp.ones(L.stacked((H,), layers), jnp.float32),
+          L.st_axes(("heads",), layers))
+    t.add("dt_bias", jnp.full(L.stacked((H,), layers), -2.0, jnp.float32),
+          L.st_axes(("heads",), layers))
+    t.add("norm_scale", jnp.ones(L.stacked((d_in,), layers), jnp.float32),
+          L.st_axes(("mlp",), layers))
+    t.add("w_out", L._init(ks[2], L.stacked((d_in, D), layers), cfg.dtype,
+                           scale=1.0 / np.sqrt(d_in)),
+          L.st_axes(("mlp", "embed"), layers))
+    return t.build()
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, H, P, G, N, conv_dim, _ = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg, xbc):
+    d_in, H, P, G, N, _, _ = _dims(cfg)
+    x = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + G * N]
+    Cm = xbc[..., d_in + G * N:]
+    return x, Bm, Cm
+
+
+def _segsum(x: Array) -> Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (j<i)."""
+    T = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    out = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, Bm: Array, Cm: Array,
+                chunk: int = CHUNK) -> Array:
+    """SSD scan in chunked matmul form.
+
+    x: (B,S,H,P)  dt: (B,S,H)  a: (H,) (negative)  Bm/Cm: (B,S,G,N)
+    Returns y: (B,S,H,P).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[-2], Bm.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nc = S // c
+    rep = H // G
+
+    xx = x.reshape(Bsz, nc, c, H, P)
+    dtc = dt.reshape(Bsz, nc, c, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, c, G, N), rep, axis=3)   # (B,nc,c,H,N)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, c, G, N), rep, axis=3)
+
+    da = dtc * a[None, None, None, :]                            # (B,nc,c,H)
+    da_cum = jnp.cumsum(da, axis=2)                              # within chunk
+    # ---- intra-chunk (quadratic) term --------------------------------------
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(da, 2, -1)))             # (B,nc,H,c,c)
+    scores = jnp.einsum("bnihs,bnjhs->bnhij", Cc, Bc)            # (B,nc,H,c,c)
+    y_diag = jnp.einsum("bnhij,bnhij,bnjhp->bnihp",
+                        scores, Lmat, xx * dtc[..., None])
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)        # (B,nc,c,H)
+    states = jnp.einsum("bnchs,bnch,bnchp->bnhps",
+                        Bc, decay_to_end * dtc, xx)              # (B,nc,H,P,N)
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])                   # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                          # emit h_prev
+
+    h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                          # (B,nc,H,P,N)
+    # ---- inter-chunk output ------------------------------------------------
+    decay_from_start = jnp.exp(da_cum)                           # (B,nc,c,H)
+    y_off = jnp.einsum("bnchs,bnhps,bnch->bnchp", Cc, h_prev, decay_from_start)
+    y = (y_diag.reshape(Bsz, S, H, P) + y_off.reshape(Bsz, S, H, P))
+    return y, h_last
+
+
+def apply_mamba_train(p, cfg, x: Array, shd: Sharder, return_state=False):
+    """x: (B,S,D) → (B,S,D). Training/prefill path (chunked SSD)."""
+    B, S, D = x.shape
+    d_in, H, P, G, N, conv_dim, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    zxbcdt = shd.act(zxbcdt, ("batch", "seq", "act_mlp"))
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    # causal depthwise conv over time
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = _split_xbc(cfg, xbc)          # conv already applied silu
+    xs = xs.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    y, h_last = ssd_chunked(xs.astype(jnp.float32), dt, a,
+                            Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    out = shd.act(out, ("batch", "res_seq", "act_embed"))
+    if return_state:
+        K = cfg.conv_kernel
+        conv_tail = xbc_raw[:, S - (K - 1):]                      # (B,K-1,C)
+        return out, (conv_tail.astype(x.dtype), h_last)
+    return out
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d, kernel K: xbc (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(K))
+    return jax.nn.silu(out + b[None, None])
+
+
+def _gated_norm(y: Array, z: Array, scale: Array, eps=1e-6) -> Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf * scale).astype(y.dtype)
+
+
+# ------------------------------------------------------------------ decode
+class MambaCache(NamedTuple):
+    conv: Array    # (L, B, K-1, conv_dim) rolling conv inputs
+    ssm: Array     # (L, B, H, P, N) recurrent state
+    # Δ-gating stream (paper technique): last transmitted input + accumulator
+    x_hat: Array   # (L, B, D)
+    m_acc: Array   # (L, B, proj_dim)
+
+
+def init_mamba_cache(cfg, batch: int, shd: Sharder, layers=None) -> MambaCache:
+    nl = layers if layers is not None else cfg.num_layers
+    d_in, H, P, G, N, conv_dim, proj_dim = _dims(cfg)
+    c = MambaCache(
+        conv=jnp.zeros((nl, batch, cfg.conv_kernel - 1, conv_dim), cfg.dtype),
+        ssm=jnp.zeros((nl, batch, H, P, N), jnp.float32),
+        x_hat=jnp.zeros((nl, batch, cfg.d_model), cfg.dtype),
+        m_acc=jnp.zeros((nl, batch, proj_dim), jnp.float32),
+    )
+    if shd.mesh is not None:
+        c = MambaCache(*[jax.device_put(v, shd.sharding(v.shape, ax))
+                         for v, ax in zip(c, mamba_cache_axes())])
+    return c
+
+
+def mamba_cache_axes():
+    return (("layers", "batch", None, "act_mlp"),
+            ("layers", "batch", "heads", None, None),
+            ("layers", "batch", None),
+            ("layers", "batch", "act_mlp"))
+
+
+def mamba_cache_specs(cfg, batch: int, shd: Sharder, layers=None) -> MambaCache:
+    nl = layers if layers is not None else cfg.num_layers
+    d_in, H, P, G, N, conv_dim, proj_dim = _dims(cfg)
+    shapes = [((nl, batch, cfg.conv_kernel - 1, conv_dim), cfg.dtype),
+              ((nl, batch, H, P, N), jnp.float32),
+              ((nl, batch, cfg.d_model), cfg.dtype),
+              ((nl, batch, proj_dim), jnp.float32)]
+    return MambaCache(*[
+        jax.ShapeDtypeStruct(s, d, sharding=shd.sharding(s, ax))
+        for (s, d), ax in zip(shapes, mamba_cache_axes())])
+
+
+def apply_mamba_decode(p, cfg, x: Array, cache: tuple, shd: Sharder,
+                       delta_threshold: float | None = None):
+    """One-token recurrent step. x: (B,D); cache: per-layer slices of
+    MambaCache (conv (B,K-1,C), ssm (B,H,P,N), x_hat (B,D), m_acc (B,proj)).
+
+    With delta_threshold > 0, the input projection x @ w_in is Δ-gated
+    (incremental accumulator) — the DeltaKWS mechanism on the SSM block.
+    Returns (y (B,D), new_cache_slices, nnz_fraction).
+    """
+    conv_st, ssm_st, x_hat, m_acc = cache
+    B, D = x.shape
+    d_in, H, P, G, N, conv_dim, _ = _dims(cfg)
+    th = cfg.delta_threshold if delta_threshold is None else delta_threshold
+
+    if cfg.use_delta:
+        from repro.core.delta_gru import delta_encode
+        dx, x_hat, mask = delta_encode(x, x_hat, jnp.asarray(th, x.dtype))
+        m_acc = m_acc + jnp.einsum("bd,dk->bk", dx, p["w_in"]).astype(jnp.float32)
+        zxbcdt = m_acc.astype(x.dtype)
+        nnz = jnp.mean(mask.astype(jnp.float32))
+    else:
+        zxbcdt = jnp.einsum("bd,dk->bk", x, p["w_in"])
+        nnz = jnp.float32(1.0)
+
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    # rolling conv state
+    conv_in = jnp.concatenate([conv_st, xbc[:, None]], axis=1)   # (B,K,C)
+    xbc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"])
+                        + p["conv_b"][None])
+    new_conv = conv_in[:, 1:]
+    xs, Bm, Cm = _split_xbc(cfg, xbc_c)        # conv already applied silu
+    xs = xs.reshape(B, H, P)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                             # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None])                                # (B,H)
+    xf = xs.astype(jnp.float32)
+    new_ssm = (ssm_st * decay[..., None, None]
+               + jnp.einsum("bhp,bhn,bh->bhpn", xf, Bh.astype(jnp.float32), dt))
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xf
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bk,kd->bd", y, p["w_out"])
+    return out, (new_conv, new_ssm, x_hat, m_acc), nnz
+
+
+# --------------------------------------------------------------- full model
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 4)
+    t = AxTree()
+    t.sub("embed", L.init_embedding(ks[0], cfg.vocab_padded, cfg.d_model, cfg.dtype))
+    t.sub("mamba", init_mamba_block(ks[1], cfg, layers=cfg.num_layers))
+    t.sub("norm1", L.init_norm(cfg.d_model, layers=cfg.num_layers))
+    t.sub("norm_f", L.init_norm(cfg.d_model))
+    head = AxTree()
+    head.add("w", L._init(ks[2], (cfg.d_model, cfg.vocab_padded), cfg.dtype),
+             ("embed", "vocab"))
+    t.sub("lm_head", head)
+    return t.build()
+
+
+def forward(params, cfg, shd: Sharder, tokens: Array, remat=True) -> Array:
+    x = L.embed_tokens(params["embed"], tokens, shd)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h = apply_mamba_train(lp["mamba"], cfg, h, shd)
+        x = x + h
+        return shd.act(x, ("batch", "res_seq", "act_embed")), ()
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, {"mamba": params["mamba"],
+                                  "norm1": params["norm1"]})
+    return L.apply_norm(params["norm_f"], x, cfg.norm_type)
+
+
+def loss_fn(params, cfg, shd, batch):
+    x = forward(params, cfg, shd, batch["tokens"])
+    ce = L.chunked_softmax_xent(x, params["lm_head"]["w"], batch["labels"],
+                                shd, vocab_size=cfg.vocab_size)
+    return ce, {"ce": ce}
+
+
+def decode_step(params, cfg, shd, cache: MambaCache, tokens: Array):
+    """tokens (B,1) → (logits (B,1,V), cache)."""
+    x = L.embed_tokens(params["embed"], tokens, shd)[:, 0]       # (B,D)
+
+    def body(x, xs):
+        lp, conv_st, ssm_st, x_hat, m_acc = xs
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h, new_cache, _ = apply_mamba_decode(
+            lp["mamba"], cfg, h, (conv_st, ssm_st, x_hat, m_acc), shd)
+        return x + h, new_cache
+
+    x, (conv, ssm, x_hat, m_acc) = jax.lax.scan(
+        body, x, ({"mamba": params["mamba"], "norm1": params["norm1"]},
+                  cache.conv, cache.ssm, cache.x_hat, cache.m_acc))
+    x = L.apply_norm(params["norm_f"], x, cfg.norm_type)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"]["w"])[:, None]
+    logits = shd.act(logits, ("batch", None, "act_vocab"))
+    return logits, MambaCache(conv, ssm, x_hat, m_acc)
+
+
+def prefill(params, cfg, shd, tokens: Array, cache: MambaCache,
+            embeds=None):
+    """Process a full prompt, producing the recurrent cache + last logits."""
+    x = L.embed_tokens(params["embed"], tokens, shd)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h, (conv_tail, ssm) = apply_mamba_train(lp["mamba"], cfg, h, shd,
+                                                return_state=True)
+        return x + h, (conv_tail, ssm)
+
+    x, (conv, ssm) = jax.lax.scan(
+        body, x, {"mamba": params["mamba"], "norm1": params["norm1"]})
+    x = L.apply_norm(params["norm_f"], x, cfg.norm_type)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"]["w"])[:, None]
+    new_cache = MambaCache(conv=conv, ssm=ssm, x_hat=cache.x_hat,
+                           m_acc=cache.m_acc)
+    return new_cache, shd.act(logits, ("batch", None, "act_vocab"))
+
+
+def make_api(cfg, shd: Sharder):
+    from repro.models.transformer import LMApi
+    return LMApi(
+        init=functools.partial(init_lm, cfg=cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, shd, batch),
+        prefill=lambda params, tokens, cache, embeds=None: prefill(
+            params, cfg, shd, tokens, cache, embeds),
+        decode_step=lambda params, cache, tokens: decode_step(
+            params, cfg, shd, cache, tokens),
+        init_cache=lambda batch, seq: init_mamba_cache(cfg, batch, shd),
+        cache_specs=lambda batch, seq: mamba_cache_specs(cfg, batch, shd),
+    )

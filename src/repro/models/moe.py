@@ -1,0 +1,112 @@
+"""Mixture-of-Experts layer — GShard-style einsum dispatch/combine.
+
+The canonical TPU-friendly MoE: top-k routing with a fixed per-group
+capacity; dispatch and combine are einsums, so GSPMD shards them cleanly
+(experts over the 'pod' axis when divisible = expert parallelism; expert
+d_ff over 'model' = tensor parallelism within experts).  FLOPs scale with
+capacity (≈ top_k × tokens × capacity_factor), not with n_experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init, st_axes, stacked
+from repro.parallel.sharding import AxTree, Sharder
+
+Array = jax.Array
+
+
+def init_moe(key, cfg, layers=None):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 8)
+    t = AxTree()
+    t.add("router", _init(ks[0], stacked((D, E), layers), jnp.float32),
+          st_axes(("embed", "expert"), layers))
+    t.add("w_gate", _init(ks[1], stacked((E, D, F), layers), cfg.dtype),
+          st_axes(("expert", "embed", "mlp"), layers))
+    t.add("w_up", _init(ks[2], stacked((E, D, F), layers), cfg.dtype),
+          st_axes(("expert", "embed", "mlp"), layers))
+    t.add("w_down", _init(ks[3], stacked((E, F, D), layers), cfg.dtype,
+                          scale=1.0 / np.sqrt(F)),
+          st_axes(("expert", "mlp", "embed"), layers))
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        t.add("ws_gate", _init(ks[4], stacked((D, Fs), layers), cfg.dtype),
+              st_axes(("embed", "mlp"), layers))
+        t.add("ws_up", _init(ks[5], stacked((D, Fs), layers), cfg.dtype),
+              st_axes(("embed", "mlp"), layers))
+        t.add("ws_down", _init(ks[6], stacked((Fs, D), layers), cfg.dtype,
+                               scale=1.0 / np.sqrt(Fs)),
+              st_axes(("mlp", "embed"), layers))
+        t.add("ws_sgate", _init(ks[7], stacked((D, 1), layers), cfg.dtype),
+              st_axes(("embed", None), layers))
+    return t.build()
+
+
+def moe_group_size(top_k: int) -> int:
+    """Dispatch-group token count.  The (Sg, E, C) combine tensor holds
+    Sg²·k·cf elements per group, so higher top-k gets smaller groups."""
+    return 4096 if top_k <= 4 else 2048
+
+
+def apply_moe(p, cfg, x: Array, shd: Sharder, capacity_factor: float = 1.25):
+    """x: (B, S, D) → (out, aux_loss).  Group = one sequence (or a bounded
+    slice of one: capacity scales with group size, so re-grouping a 32k
+    prefill into 4k/2k groups cuts dispatch-tensor memory ∝ n_groups)."""
+    B, S, D = x.shape
+    grp = moe_group_size(cfg.top_k)
+    if S > grp and S % grp == 0:
+        n = S // grp
+        out, aux = apply_moe(p, cfg, x.reshape(B * n, grp, D), shd,
+                             capacity_factor)
+        return out.reshape(B, S, D), aux
+    E, K = cfg.n_experts, cfg.top_k
+    C = int(np.ceil(K * S * capacity_factor / E))
+    C = max(4, min(C, S))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                # (B,S,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch §2.2).
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # Position of each (token, k) inside its expert's capacity buffer.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)      # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, K, E)  # (B,S,K,E)
+    pos = jnp.sum(pos * onehot, axis=-1)                         # (B,S,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    # combine[b,s,e,c]: weight of token (b,s) at slot c of expert e.
+    pos_oh = jax.nn.one_hot(pos, C, dtype=x.dtype) * keep[..., None]
+    comb = jnp.einsum("bske,bskc->bsec", onehot.astype(x.dtype),
+                      pos_oh * gate_vals[..., None].astype(x.dtype))
+    comb = shd.act(comb, ("batch", "seq", "expert", None))
+    disp = (comb > 0).astype(x.dtype)
+
+    # Dispatch → expert FFN (swiglu) → combine.
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)                   # (B,E,C,D)
+    xe = shd.act(xe, ("batch", "expert", None, "act_embed"))
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    h = shd.act(h, ("batch", "expert", None, "act_mlp"))
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out = jnp.einsum("bsec,becd->bsd", comb, ye)
+
+    if cfg.n_shared_experts:
+        hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["ws_gate"]))
+        hs = hs * jnp.einsum("bsd,df->bsf", x, p["ws_up"])
+        ys = jnp.einsum("bsf,fd->bsd", hs, p["ws_down"])
+        sg = jax.nn.sigmoid(jnp.einsum("bsd,do->bso", x, p["ws_sgate"]))
+        out = out + sg * ys
+
+    return shd.act(out, ("batch", "res_seq", "act_embed")), aux

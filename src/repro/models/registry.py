@@ -1,0 +1,22 @@
+"""Family → model API dispatch."""
+from __future__ import annotations
+
+from repro.parallel.sharding import Sharder
+
+
+def get_api(cfg, shd: Sharder | None = None):
+    shd = shd or Sharder(mesh=None)
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        return transformer.make_api(cfg, shd)
+    if cfg.family == "ssm":
+        from repro.models import mamba2
+        return mamba2.make_api(cfg, shd)
+    if cfg.family == "hybrid":
+        from repro.models import hybrid
+        return hybrid.make_api(cfg, shd)
+    if cfg.family == "audio":
+        from repro.models import encdec
+        return encdec.make_api(cfg, shd)
+    raise ValueError(f"no LM api for family {cfg.family!r} "
+                     f"(kws uses repro.models.kws directly)")

@@ -1,0 +1,227 @@
+"""Decoder-only transformer LM (dense / MoE / VLM) — scan-over-layers.
+
+Uniform model API (shared by all families, see ``get_api`` in registry.py):
+  init(key)                          -> (params, logical_axes)
+  loss(params, batch)                -> (loss, metrics)
+  prefill(params, tokens[, embeds])  -> (cache, last_logits)
+  decode_step(params, cache, tokens) -> (logits, cache)
+  init_cache(batch, seq)             -> cache pytree
+
+Layers are stacked (leading L dim) and scanned; the layer body is
+``jax.checkpoint``-ed (full remat) for training memory.  MoE layers carry an
+auxiliary load-balance loss through the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.parallel.sharding import AxTree, Sharder
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- init
+def init_lm(key, cfg) -> tuple[dict, dict]:
+    nl = cfg.num_layers
+    ks = jax.random.split(key, 8)
+    t = AxTree()
+    t.sub("embed", L.init_embedding(ks[0], cfg.vocab_padded, cfg.d_model, cfg.dtype))
+    t.sub("attn", L.init_attention(ks[1], cfg, layers=nl))
+    t.sub("norm1", L.init_norm(cfg.d_model, layers=nl,
+                               bias=cfg.norm_type == "layernorm"))
+    t.sub("norm2", L.init_norm(cfg.d_model, layers=nl,
+                               bias=cfg.norm_type == "layernorm"))
+    if cfg.family == "moe":
+        t.sub("moe", moe_lib.init_moe(ks[2], cfg, layers=nl))
+    else:
+        t.sub("mlp", L.init_mlp(ks[2], cfg, layers=nl))
+    t.sub("norm_f", L.init_norm(cfg.d_model, bias=cfg.norm_type == "layernorm"))
+    head = AxTree()
+    head.add("w", L._init(ks[3], (cfg.d_model, cfg.vocab_padded), cfg.dtype),
+             ("embed", "vocab"))
+    t.sub("lm_head", head)
+    return t.build()
+
+
+def layer_windows(cfg) -> np.ndarray | None:
+    """Per-layer attention window (int32); None = all-full-attention."""
+    if cfg.window_size <= 0:
+        return None
+    nl = cfg.num_layers
+    w = np.full((nl,), cfg.window_size, np.int32)
+    if cfg.global_every > 0:
+        is_global = (np.arange(nl) % cfg.global_every) == (cfg.global_every - 1)
+        w[is_global] = L.BIG_WINDOW
+    return w
+
+
+def _layer_params(params, cfg):
+    """The stacked per-layer subtree (scanned xs)."""
+    keys = ["attn", "norm1", "norm2"] + (["moe"] if cfg.family == "moe" else ["mlp"])
+    return {k: params[k] for k in keys}
+
+
+# ---------------------------------------------------------------- forward
+def forward(params, cfg, shd: Sharder, tokens: Array,
+            embeds: Array | None = None, remat: bool = True) -> tuple[Array, Array]:
+    """Causal forward pass → (hidden (B,S,D), moe_aux_loss)."""
+    x = L.embed_tokens(params["embed"], tokens, shd)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+        x = shd.act(x, ("batch", "res_seq", "act_embed"))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, win = xs
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h, _ = L.apply_attention(lp["attn"], cfg, h, shd, positions=positions,
+                                 window=win)
+        x = x + h
+        h = L.apply_norm(lp["norm2"], x, cfg.norm_type)
+        if cfg.family == "moe":
+            h, a = moe_lib.apply_moe(lp["moe"], cfg, h, shd)
+            aux = aux + a
+        else:
+            h = L.apply_mlp(lp["mlp"], cfg, h, shd)
+        x = x + h
+        x = shd.act(x, ("batch", "res_seq", "act_embed"))
+        return (x, aux), ()
+
+    if remat:
+        policy = None
+        if cfg.remat_policy == "save_mlp":
+            # Selective remat (§Perf): keep the two (B,S,F) MLP
+            # intermediates; the backward pass then skips recomputing all
+            # three MLP GEMMs (~70% of the layer's forward FLOPs).
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "mlp_up", "mlp_gate")
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    win_xs = (jnp.asarray(windows) if windows is not None
+              else jnp.full((cfg.num_layers,), L.BIG_WINDOW, jnp.int32))
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               (_layer_params(params, cfg), win_xs))
+    x = L.apply_norm(params["norm_f"], x, cfg.norm_type)
+    return x, aux
+
+
+def loss_fn(params, cfg, shd: Sharder, batch: dict) -> tuple[Array, dict]:
+    """batch: tokens (B,S_t), labels (B,S_t), optional embeds (B,S_p,D)."""
+    x, aux = forward(params, cfg, shd, batch["tokens"], batch.get("embeds"))
+    if batch.get("embeds") is not None:
+        x = x[:, batch["embeds"].shape[1]:]       # loss on the token region
+    ce = L.chunked_softmax_xent(x, params["lm_head"]["w"], batch["labels"],
+                                shd, vocab_size=cfg.vocab_size)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg, batch: int, seq: int, shd: Sharder) -> dict:
+    K, Dh, nl = cfg.n_kv_heads, cfg.d_head, cfg.num_layers
+    shape = (nl, batch, seq, K, Dh)
+    logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    k = jnp.zeros(shape, cfg.dtype)
+    v = jnp.zeros(shape, cfg.dtype)
+    if shd.mesh is not None:
+        k = jax.device_put(k, shd.sharding(shape, logical))
+        v = jax.device_put(v, shd.sharding(shape, logical))
+    return {"k": k, "v": v, "index": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg, batch: int, seq: int, shd: Sharder) -> dict:
+    K, Dh, nl = cfg.n_kv_heads, cfg.d_head, cfg.num_layers
+    shape = (nl, batch, seq, K, Dh)
+    logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    sd = shd.sharding(shape, logical)
+    kv = jax.ShapeDtypeStruct(shape, cfg.dtype, sharding=sd)
+    return {"k": kv, "v": kv,
+            "index": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _decode_forward(params, cfg, shd, tokens: Array, cache: dict,
+                    embeds: Array | None = None) -> tuple[Array, dict]:
+    """Shared by prefill (S>1, index=0) and decode (S=1, index=pos)."""
+    x = L.embed_tokens(params["embed"], tokens, shd)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    idx = cache["index"]
+    positions = idx + jnp.arange(S)
+    windows = layer_windows(cfg)
+    win_xs = (jnp.asarray(windows) if windows is not None
+              else jnp.full((cfg.num_layers,), L.BIG_WINDOW, jnp.int32))
+
+    def body(carry, xs):
+        # The full stacked KV cache rides in the carry so XLA keeps ONE
+        # aliased buffer (dynamic-slice/update in place); passing it as
+        # scan xs/ys would double-buffer the whole cache.
+        x, ck_all, cv_all = carry
+        lp, win, li = xs
+        ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, keepdims=False)
+        h = L.apply_norm(lp["norm1"], x, cfg.norm_type)
+        h, (nk, nv) = L.apply_attention(
+            lp["attn"], cfg, h, shd, positions=positions, window=win,
+            kv_cache=(ck, cv), cache_index=idx)
+        x = x + h
+        h = L.apply_norm(lp["norm2"], x, cfg.norm_type)
+        if cfg.family == "moe":
+            h, _ = moe_lib.apply_moe(lp["moe"], cfg, h, shd)
+        else:
+            h = L.apply_mlp(lp["mlp"], cfg, h, shd)
+        x = x + h
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, nk, li, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, nv, li, 0)
+        return (x, ck_all, cv_all), ()
+
+    (x, nk, nv), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (_layer_params(params, cfg), win_xs, jnp.arange(cfg.num_layers)))
+    x = L.apply_norm(params["norm_f"], x, cfg.norm_type)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"]["w"])
+    logits = shd.act(logits, ("batch", None, "act_vocab"))
+    new_cache = {"k": nk, "v": nv, "index": idx + S}
+    return logits, new_cache
+
+
+def prefill(params, cfg, shd, tokens: Array, cache: dict,
+            embeds: Array | None = None):
+    logits, cache = _decode_forward(params, cfg, shd, tokens, cache, embeds)
+    return cache, logits
+
+
+def decode_step(params, cfg, shd, cache: dict, tokens: Array):
+    """tokens (B,1) → (logits (B,1,V), updated cache)."""
+    return _decode_forward(params, cfg, shd, tokens, cache)
+
+
+class LMApi(NamedTuple):
+    init: Any
+    loss: Any
+    prefill: Any
+    decode_step: Any
+    init_cache: Any
+    cache_specs: Any
+
+
+def make_api(cfg, shd: Sharder) -> LMApi:
+    return LMApi(
+        init=functools.partial(init_lm, cfg=cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, shd, batch),
+        prefill=lambda params, tokens, cache, embeds=None: prefill(
+            params, cfg, shd, tokens, cache, embeds),
+        decode_step=lambda params, cache, tokens: _decode_forward(
+            params, cfg, shd, tokens, cache),
+        init_cache=lambda batch, seq: init_cache(cfg, batch, seq, shd),
+        cache_specs=lambda batch, seq: cache_specs(cfg, batch, seq, shd),
+    )

@@ -1,0 +1,172 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every tensor in the framework carries *logical* dimension names
+("batch", "embed", "mlp", "heads", ...).  A :class:`Sharder` resolves them
+to a concrete ``PartitionSpec`` for the active mesh:
+
+  * each logical name has an ordered list of candidate mesh-axis tuples;
+  * a candidate is accepted only if all its axes exist in the mesh, none is
+    already used by an earlier dimension of the same tensor, and the dim is
+    evenly divisible by the product of the axis sizes;
+  * otherwise the next candidate is tried, ending at ``None`` (replicated).
+
+This guarantees the multi-pod dry-run always compiles: an awkward dimension
+(e.g. gemma3's 8 heads on a 16-way model axis) degrades to replication — a
+§Perf finding, not a failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Ordered candidates per logical axis name.  Tuples = joint sharding over
+# several mesh axes.  None = replicate.
+DEFAULT_RULES: dict[str, list[Any]] = {
+    # --- parameters -------------------------------------------------------
+    "vocab": [("model",)],
+    "embed": [("pod", "data"), ("data",)],          # FSDP weight sharding
+    "mlp": [("model",)],                             # tensor parallel
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "qkv": [("model",)],                             # fused qkv output dim
+    "expert": [("pod",), ("model",)],                # EP across pods
+    "layers": [],
+    "conv": [], "state": [], "head_dim": [], "dt": [],
+    # --- activations ------------------------------------------------------
+    "batch": [("pod", "data"), ("data",)],
+    "seq": [],                                       # unsharded in train
+    "res_seq": [("model",)],                         # sequence parallelism:
+    # the residual stream between layers (and its activation checkpoints)
+    # is seq-sharded over the model axis (Megatron-SP style); GSPMD inserts
+    # all-gather before attention/MLP and reduce-scatter after.
+    "kv_seq": [("data",), ("model",)],               # context parallelism
+    "act_embed": [],
+    "act_mlp": [("model",)],
+    "act_heads": [("model",)],
+    "act_vocab": [("model",)],
+    "frames": [], "channels": [],
+    None: [],
+}
+
+
+# Decode overrides: FSDP weight-sharding pays a per-layer all-gather that a
+# one-token step cannot amortize (measured: 618 GB/step on nemotron
+# decode_32k).  Serving replicates weights over the data axes and keeps
+# tensor parallelism on 'model' — weights stream from local HBM instead.
+DECODE_RULES: dict[str, list[Any]] = {
+    # 'model' (not data/FSDP): weights stay TP-sharded for storage, the
+    # contraction-dim sharding costs a tiny (B,1,·) psum per layer, and no
+    # per-layer weight all-gather is ever issued.  (The CPU backend
+    # materializes f32 excess-precision weight copies around the promoted
+    # psums — a compile artifact v5e does not allocate; noted per-cell in
+    # EXPERIMENTS.md §Dry-run.)
+    "embed": [("model",)],
+}
+
+
+@dataclasses.dataclass
+class Sharder:
+    """Resolves logical axis names to PartitionSpecs for one mesh.
+
+    ``mesh=None`` → all methods become identity (single-device tests).
+    """
+
+    mesh: Mesh | None = None
+    rules: dict[str, list[Any]] | None = None
+
+    def __post_init__(self):
+        merged = dict(DEFAULT_RULES)
+        merged.update(self.rules or {})
+        self.rules = merged
+        if self.mesh is not None:
+            self._axis_sizes = dict(zip(self.mesh.axis_names,
+                                        self.mesh.devices.shape))
+        else:
+            self._axis_sizes = {}
+
+    # ------------------------------------------------------------------ api
+    def spec(self, shape: Sequence[int], logical: Sequence[str | None]) -> P:
+        """PartitionSpec for a tensor of ``shape`` with logical dim names."""
+        assert len(shape) == len(logical), (shape, logical)
+        used: set[str] = set()
+        parts = []
+        for dim, name in zip(shape, logical):
+            parts.append(self._resolve(dim, name, used))
+        return P(*parts)
+
+    def _resolve(self, dim: int, name: str | None, used: set[str]):
+        for cand in self.rules.get(name, []):
+            axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            if not all(a in self._axis_sizes for a in axes):
+                continue
+            if any(a in used for a in axes):
+                continue
+            size = int(np.prod([self._axis_sizes[a] for a in axes]))
+            if size <= 1 or dim % size != 0:
+                continue
+            used.update(axes)
+            return axes if len(axes) > 1 else axes[0]
+        return None
+
+    def sharding(self, shape, logical) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(shape, logical))
+
+    def act(self, x: jax.Array, logical: Sequence[str | None]) -> jax.Array:
+        """Apply a sharding constraint to an activation (no-op without mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, logical)))
+
+    def shard_params(self, params, axes_tree):
+        """Device-put a param pytree according to its logical-axes pytree."""
+        if self.mesh is None:
+            return params
+        return jax.tree.map(
+            lambda p, ax: jax.device_put(
+                p, NamedSharding(self.mesh, self.spec(p.shape, ax))),
+            params, axes_tree, is_leaf=_is_leaf_axes)
+
+    def param_shardings(self, shapes_tree, axes_tree):
+        """NamedSharding pytree matching a shape-struct pytree."""
+        if self.mesh is None:
+            return jax.tree.map(lambda s: None, shapes_tree)
+        return jax.tree.map(
+            lambda s, ax: NamedSharding(self.mesh, self.spec(s.shape, ax)),
+            shapes_tree, axes_tree, is_leaf=_is_leaf_axes)
+
+
+def _is_leaf_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+class AxTree:
+    """Helper to build a params pytree together with its logical-axes pytree."""
+
+    def __init__(self):
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def add(self, name: str, value, logical: tuple):
+        assert len(logical) == np.ndim(value), (name, logical, np.shape(value))
+        self.params[name] = value
+        self.axes[name] = logical
+        return value
+
+    def sub(self, name: str, tree: "AxTree | tuple"):
+        if isinstance(tree, AxTree):
+            self.params[name] = tree.params
+            self.axes[name] = tree.axes
+        else:
+            params, axes = tree
+            self.params[name] = params
+            self.axes[name] = axes
+
+    def build(self):
+        return self.params, self.axes

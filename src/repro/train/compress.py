@@ -1,0 +1,60 @@
+"""Top-k gradient compression with error feedback (Deep Gradient
+Compression, Lin et al. arXiv:1712.01887) — for the slow cross-pod axis.
+
+At 1000+ nodes the 'pod' axis rides DCN (≈ 25 GB/s vs 4×50 GB/s ICI), so
+cross-pod gradient all-reduce is the scaling bottleneck.  Error-feedback
+top-k keeps a residual of the un-sent coordinates so the update remains
+unbiased over time:
+
+    acc   = residual + grad
+    mask  = |acc| in top-k fraction
+    sent  = acc * mask          (communicated — k·(idx+val) bytes)
+    residual' = acc - sent
+
+The compressed all-reduce itself is expressed as a dense masked psum here
+(the sparsity is what a DCN-side implementation exploits); the compression
+RATIO and the convergence behaviour are what we test and report.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: Any          # pytree like grads (f32)
+
+
+def init_state(grads_like) -> CompressState:
+    return CompressState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    k = max(1, int(x.size * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress(grads, state: CompressState, frac: float = 0.01
+             ) -> tuple[Any, CompressState, dict]:
+    """Returns (sparse grads to communicate, new state, metrics)."""
+    def one(g, r):
+        acc = r + g.astype(jnp.float32)
+        mask = _topk_mask(acc, frac)
+        sent = acc * mask
+        return sent, acc - sent, jnp.mean(mask)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    sent = tdef.unflatten([o[0] for o in outs])
+    resid = tdef.unflatten([o[1] for o in outs])
+    density = sum(o[2] for o in outs) / len(outs)
+    # bytes if sent as (int32 idx, bf16 val) pairs vs dense bf16
+    ratio = (6.0 * frac) / 2.0
+    return sent, CompressState(resid), {"density": density,
+                                        "wire_ratio": ratio}

@@ -1,0 +1,101 @@
+"""AdamW + schedules — pure-pytree implementation (no optax dependency).
+
+Mixed-precision discipline: model params live in bf16; the optimizer state
+keeps an f32 master copy plus f32 (m, v).  Gradients arrive in the param
+dtype, are upcast, clipped by global norm, and applied to the master; the
+bf16 params are re-derived by casting.  All optimizer-state leaves inherit
+the parameter's logical sharding axes (ZeRO-style: fully sharded with the
+params, since our params are already FSDP/TP-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    master: Any          # f32 param copy
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    # copy=True even for already-f32 leaves: the master must never alias a
+    # param buffer (both are donated to train_step)
+    f32 = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=f32,
+                      m=jax.tree.map(jnp.zeros_like, f32),
+                      v=jax.tree.map(jnp.zeros_like, f32))
+
+
+def opt_axes(param_axes) -> AdamWState:
+    """Logical-axes pytree for the optimizer state (mirrors params)."""
+    return AdamWState(step=(), master=param_axes, m=param_axes, v=param_axes)
+
+
+def lr_at(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params
+           ) -> tuple[Any, AdamWState, dict]:
+    """Returns (new_params (param dtype), new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mst, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        new = mst - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * mst)
+        return new, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mst = treedef.flatten_up_to(state.master)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, mst, m, v) for g, mst, m, v in
+           zip(flat_g, flat_mst, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype),
+                              new_master, params)
+    new_state = AdamWState(step=step, master=new_master, m=new_m, v=new_v)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,4 @@
+import os
+# Keep the real device count for tests (dry-run sets its own 512 in its own
+# process). Cap compilation parallelism for the 1-CPU container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

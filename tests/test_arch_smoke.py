@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step + one decode step on CPU, asserting shapes + no NaNs.
+(The FULL configs are exercised via the dry-run only.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import get_api
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend != "none":
+        batch["embeds"] = jax.random.normal(
+            KEY, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_loss_and_decode(arch):
+    cfg = get_smoke_config(arch)
+    api = get_api(cfg)
+    params, axes = api.init(KEY)
+    # axes tree matches params tree structure
+    assert set(params.keys()) == set(axes.keys())
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(api.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), arch
+    # decode one token
+    cache = api.init_cache(2, 64)
+    logits, cache2 = jax.jit(api.decode_step)(
+        params, cache, batch["tokens"][:, :1])
+    assert logits.shape == (2, 1, cfg.vocab_padded)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config must carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+    # family-specific invariants
+    if arch == "qwen2-moe-a2.7b":
+        assert (cfg.n_experts, cfg.top_k, cfg.n_shared_experts) == (60, 4, 4)
+    if arch == "granite-moe-3b-a800m":
+        assert (cfg.n_experts, cfg.top_k) == (40, 8)
+    if arch == "mamba2-370m":
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-2.7b":
+        assert cfg.ssm_state == 64 and cfg.shared_attn_every > 0
+    if arch == "gemma3-4b":
+        assert cfg.window_size == 1024 and cfg.global_every == 6
+    if arch == "qwen3-32b":
+        assert cfg.qk_norm
+    if arch == "qwen2-0.5b":
+        assert cfg.qkv_bias
+    if arch == "nemotron-4-15b":
+        assert cfg.mlp_act == "relu2"
+    if arch == "seamless-m4t-large-v2":
+        assert cfg.enc_layers + cfg.dec_layers == cfg.num_layers
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-370m", "zamba2-2.7b",
+                                  "seamless-m4t-large-v2"])
+def test_prefill_then_decode_consistency(arch):
+    """prefill(t0..tn) then decode(t_{n+1}) ≈ prefill(t0..t_{n+1}) logits."""
+    cfg = get_smoke_config(arch)
+    api = get_api(cfg)
+    params, _ = api.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.frontend != "none":
+        kw["embeds"] = jax.random.normal(
+            KEY, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    cache = api.init_cache(B, 64)
+    cache, logits_a = api.prefill(params, toks[:, :S], cache, kw.get("embeds"))
+    logits_step, _ = api.decode_step(params, cache, toks[:, S:S + 1])
+    cache2 = api.init_cache(B, 64)
+    cache2, logits_b = api.prefill(params, toks, cache2, kw.get("embeds"))
+    np.testing.assert_allclose(
+        np.asarray(logits_step, np.float32).squeeze(),
+        np.asarray(logits_b, np.float32).squeeze(), rtol=0.15, atol=0.15)
+
+
+def test_train_step_reduces_loss_qwen_smoke():
+    """A few optimizer steps on one repeated batch reduce the loss."""
+    from repro.launch.steps import build_train_step
+    from repro.configs.base import ShapeConfig
+    from repro.parallel.sharding import Sharder
+    from repro.train import optimizer as opt
+    cfg = get_smoke_config("qwen2-0.5b")
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    shd = Sharder(mesh=None)
+    ocfg = opt.AdamWConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0,
+                           total_steps=1000)
+    fn, (p_specs, o_specs, b_specs) = build_train_step(cfg, shape, shd,
+                                                       opt_cfg=ocfg)
+    from repro.models import get_api
+    api = get_api(cfg, shd)
+    params, _ = api.init(KEY)
+    state = opt.init(params)
+    batch = _batch(cfg, B=4, S=32)
+    losses = []
+    for _ in range(12):
+        params, state, metrics = fn(params, state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses

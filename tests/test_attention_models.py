@@ -1,0 +1,171 @@
+"""Flash attention, MoE dispatch, and Mamba2 SSD correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.parallel.sharding import Sharder
+
+KEY = jax.random.PRNGKey(0)
+SHD = Sharder(mesh=None)
+
+
+# ---------------------------------------------------------------- flash
+def _ref_attn(q, k, v, qpos, window=None, causal=True):
+    Dh = q.shape[-1]
+    T = k.shape[1]
+    s = jnp.einsum("bskge,btke->bkgst", q, k) / np.sqrt(Dh)
+    if causal:
+        m = jnp.arange(T)[None, :] <= qpos[:, None]
+        if window is not None:
+            m &= jnp.arange(T)[None, :] > (qpos[:, None] - window)
+        s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bkgst,btke->bskge", p, v)
+
+
+@pytest.mark.parametrize("S,T,win", [(256, 8192, None), (128, 4096, 64),
+                                     (1, 8192, None), (512, 16384, 1024)])
+def test_flash_vs_ref(S, T, win):
+    B, K, G, Dh = 2, 2, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, Dh))
+    k = jax.random.normal(ks[1], (B, T, K, Dh))
+    v = jax.random.normal(ks[2], (B, T, K, Dh))
+    qpos = (T - S - 5 + jnp.arange(S)).astype(jnp.int32)
+    w = jnp.asarray(L.BIG_WINDOW if win is None else win, jnp.int32)
+    out = L.flash_attention(q, k, v, qpos, w, True)
+    r = _ref_attn(q, k, v, qpos, win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_grads_vs_ref():
+    B, S, K, G, Dh, T = 1, 128, 2, 2, 16, 4096
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, Dh))
+    k = jax.random.normal(ks[1], (B, T, K, Dh))
+    v = jax.random.normal(ks[2], (B, T, K, Dh))
+    qpos = (T - S + jnp.arange(S)).astype(jnp.int32)
+    w = jnp.asarray(L.BIG_WINDOW, jnp.int32)
+
+    f1 = lambda q, k, v: jnp.sum(jnp.tanh(
+        L.flash_attention(q, k, v, qpos, w, True)))
+    f2 = lambda q, k, v: jnp.sum(jnp.tanh(_ref_attn(q, k, v, qpos)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ moe
+def _moe_cfg(**kw):
+    from repro.configs import get_smoke_config
+    import dataclasses
+    return dataclasses.replace(get_smoke_config("qwen2-moe-a2.7b"), **kw)
+
+
+def test_moe_combine_weights_normalized():
+    from repro.models.moe import apply_moe, init_moe
+    cfg = _moe_cfg()
+    p, _ = init_moe(KEY, cfg, layers=None)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), cfg.dtype)
+    out, aux = apply_moe(p, cfg, x, SHD, capacity_factor=4.0)
+    assert out.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+    assert float(aux) > 0.5         # load-balance loss near E·(1/E)·1 = 1
+
+
+def test_moe_grouped_equals_ungrouped():
+    """Splitting a long sequence into dispatch groups must be ~equivalent
+    at high capacity (no drops)."""
+    from repro.models import moe as moe_lib
+    cfg = _moe_cfg()
+    p, _ = moe_lib.init_moe(KEY, cfg, layers=None)
+    x = jax.random.normal(KEY, (1, 64, cfg.d_model), jnp.float32)
+    out_full, _ = moe_lib.apply_moe(p, cfg, x, SHD, capacity_factor=8.0)
+    # force grouping path by reshaping as two 32-token groups
+    out_grp, _ = moe_lib.apply_moe(
+        p, cfg, x.reshape(2, 32, cfg.d_model), SHD, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(out_full, np.float32).reshape(-1),
+                               np.asarray(out_grp, np.float32).reshape(-1),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    from repro.models.moe import apply_moe, init_moe
+    cfg = _moe_cfg()
+    p, _ = init_moe(KEY, cfg, layers=None)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), cfg.dtype)
+    out, _ = apply_moe(p, cfg, x, SHD, capacity_factor=0.1)
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+# ---------------------------------------------------------------- mamba2
+def _naive_ssm(x, dt, a, Bm, Cm):
+    """O(S·N·P) recurrence oracle for SSD."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[-2], Bm.shape[-1]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a[None])                     # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N))
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(x, 1, 0),
+                                    jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(Bh, 1, 0),
+                                    jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (96, 256)])
+def test_ssd_chunked_matches_recurrence(S, chunk):
+    from repro.models.mamba2 import ssd_chunked
+    B, H, P, G, N = 2, 4, 8, 2, 16
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)) - 1)
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[0], (B, S, G, N)) * 0.5
+    y, h_last = ssd_chunked(x, dt, a, Bm, Cm, chunk=chunk)
+    y_ref = _naive_ssm(x, dt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_train_decode_equivalence():
+    """Chunked-SSD prefill state == step-by-step recurrent decode state,
+    and continued decode logits agree."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models import get_api
+    # f32: this asserts MATH equivalence (bf16 adds ~1% path-dependent
+    # rounding between chunked-SSD and sequential recurrence)
+    cfg = dataclasses.replace(get_smoke_config("mamba2-370m"),
+                              use_delta=False, dtype=jnp.float32)
+    api = get_api(cfg)
+    params, _ = api.init(KEY)
+    B, S = 1, 12
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    # path A: prefill S tokens, decode token S
+    cache = api.init_cache(B, S)
+    cache, _ = api.prefill(params, toks[:, :S], cache)
+    la, _ = api.decode_step(params, cache, toks[:, S:S + 1])
+    # path B: decode everything token by token
+    cache_b = api.init_cache(B, S)
+    for t in range(S + 1):
+        lb, cache_b = api.decode_step(params, cache_b, toks[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(la, np.float32),
+                               np.asarray(lb, np.float32),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,99 @@
+"""Core ΔGRU behaviour: exactness at Δ_TH=0, sparsity properties, training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (delta_encode, delta_gru_scan, dense_gru_scan,
+                        init_delta_gru, temporal_sparsity)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(T=24, B=3, I=10, H=16, seed=0):
+    p = init_delta_gru(jax.random.PRNGKey(seed), I, H)
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, B, I))
+    return p, xs
+
+
+def test_threshold_zero_equals_dense_gru():
+    p, xs = _setup()
+    hs_d, _, stats = delta_gru_scan(p, xs, threshold=0.0)
+    hs_ref = dense_gru_scan(p, xs)
+    np.testing.assert_allclose(np.asarray(hs_d), np.asarray(hs_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_sparsity_zero_at_zero_threshold_is_low():
+    p, xs = _setup()
+    _, _, stats = delta_gru_scan(p, xs, threshold=0.0)
+    # only exact-zero deltas skip at th=0 (h=0 initial states)
+    assert float(temporal_sparsity(stats)) < 0.2
+
+
+@settings(max_examples=10, deadline=None)
+@given(th1=st.floats(0.0, 0.5), th2=st.floats(0.0, 0.5))
+def test_sparsity_monotone_in_threshold(th1, th2):
+    lo, hi = sorted([th1, th2])
+    p, xs = _setup(T=12, B=2)
+    _, _, s_lo = delta_gru_scan(p, xs, threshold=lo)
+    _, _, s_hi = delta_gru_scan(p, xs, threshold=hi)
+    assert float(temporal_sparsity(s_hi)) >= float(temporal_sparsity(s_lo)) - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(th=st.floats(0.0, 1.0))
+def test_delta_encode_invariants(th):
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+    x_hat = jax.random.normal(jax.random.PRNGKey(3), (4, 8))
+    d, new_hat, mask = delta_encode(x, x_hat, th)
+    # transmitted components: delta exact, memory updated to x
+    np.testing.assert_allclose(np.where(mask, d, 0), np.where(mask, x - x_hat, 0),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.where(mask, new_hat, 0), np.where(mask, x, 0),
+                               rtol=1e-6)
+    # silent components: zero delta, memory unchanged
+    assert np.all(np.where(mask, 0, d) == 0)
+    np.testing.assert_array_equal(np.asarray(jnp.where(mask, 0, new_hat)),
+                                  np.asarray(jnp.where(mask, 0, x_hat)))
+    # sub-threshold deviations bounded: |x - x̂_new| ≤ th where not transmitted
+    assert float(jnp.max(jnp.abs(jnp.where(mask, 0, x - new_hat)))) <= th + 1e-6
+
+
+def test_accumulator_consistency():
+    """M_t must equal W_x x̂_t + W_h ĥ_t at every step (the IC invariant)."""
+    from repro.core.delta_gru import DeltaGRUCell, init_delta_state
+    p, xs = _setup(T=10, B=2)
+    cell = jax.jit(lambda s, x: DeltaGRUCell(16, 0.3)(p, s, x))
+    s = init_delta_state(2, 10, 16, p)
+    for t in range(10):
+        s, h, _ = cell(s, xs[t])
+        m_expect = s.x_hat @ p.w_x + p.b
+        np.testing.assert_allclose(np.asarray(s.m_x), np.asarray(m_expect),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(s.m_h),
+                                   np.asarray(s.h_hat @ p.w_h),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_bounded_divergence_from_dense():
+    """Hidden state deviation stays bounded (delta networks' key property)."""
+    p, xs = _setup(T=40, B=2)
+    hs_ref = dense_gru_scan(p, xs)
+    for th in [0.05, 0.1, 0.2]:
+        hs, _, _ = delta_gru_scan(p, xs, threshold=th)
+        dev = float(jnp.max(jnp.abs(hs - hs_ref)))
+        assert dev < 12 * th, (th, dev)
+
+
+def test_gradients_flow():
+    p, xs = _setup()
+
+    def loss(params):
+        hs, _, _ = delta_gru_scan(params, xs, threshold=0.1)
+        return jnp.sum(hs ** 2)
+
+    g = jax.grad(loss)(p)
+    assert all(np.all(np.isfinite(np.asarray(x))) for x in jax.tree.leaves(g))
+    assert float(jnp.max(jnp.abs(g.w_x))) > 0

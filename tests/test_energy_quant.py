@@ -1,0 +1,65 @@
+"""Energy model calibration + fixed-point quantization properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy_model as em
+from repro.core.quantize import QFormat, qformat_for
+
+
+def test_energy_model_reproduces_paper_anchors():
+    out = em.self_check()
+    # paper: 121.2 → 36.11 nJ (3.4×), 16.4 → 6.9 ms (2.4×)
+    assert abs(out["dense_nj"] - 121.2) < 1.0
+    assert abs(out["sparse_nj"] - 36.11) < 1.0
+    assert abs(out["energy_ratio"] - 3.4) < 0.15
+    assert abs(out["latency_ratio"] - 2.4) < 0.1
+
+
+def test_energy_monotone_in_sparsity():
+    es = [em.cost_from_sparsity(s).energy_nj_per_decision
+          for s in np.linspace(0, 0.95, 12)]
+    assert all(a > b for a, b in zip(es, es[1:]))
+
+
+def test_near_vth_sram_factor():
+    near = em.cost_from_sparsity(0.5)
+    foundry = em.cost_from_sparsity(0.5, foundry_sram=True)
+    ratio = foundry.sram_energy_nj / near.sram_energy_nj
+    assert abs(ratio - 6.6) < 1e-6
+
+
+def test_channel_scaling_matches_paper():
+    """16 → 10 channels saves ~30% FEx power (paper §II-C2)."""
+    e10 = em.cost_from_sparsity(0.87, n_channels=10).fex_energy_nj
+    e16 = em.cost_from_sparsity(0.87, n_channels=16).fex_energy_nj
+    assert abs(e10 / e16 - 0.7) < 0.02
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 14))
+def test_qformat_roundtrip_and_error_bound(int_bits, frac_bits):
+    fmt = QFormat(int_bits, frac_bits)
+    rng = np.random.default_rng(0)
+    x = rng.uniform(fmt.min_val, fmt.max_val, 256)
+    q = fmt.quantize(x)
+    # idempotent
+    np.testing.assert_allclose(fmt.quantize(q), q, rtol=0, atol=0)
+    # error bounded by half a step inside the representable range
+    assert np.max(np.abs(q - x)) <= fmt.step / 2 + 1e-12
+    # saturation
+    assert fmt.quantize(np.array([1e9])) == fmt.max_val
+    assert fmt.quantize(np.array([-1e9])) == fmt.min_val
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1e-3, 100.0), st.integers(4, 16))
+def test_qformat_for_covers_range(max_abs, bits):
+    fmt = qformat_for(max_abs, bits)
+    # int bits are set by the dynamic range FIRST (paper §II-C3); the
+    # fraction absorbs whatever budget remains
+    assert fmt.total_bits <= max(bits, 1 + fmt.int_bits)
+    assert fmt.frac_bits == max(0, bits - 1 - fmt.int_bits)
+    # format must represent max_abs without clipping more than one step
+    q = fmt.quantize(np.array([max_abs]))
+    assert q[0] >= max_abs - fmt.step or q[0] == fmt.max_val

@@ -1,0 +1,107 @@
+"""IIR filter design + feature extractor tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.frontend import (FExConfig, FeatureExtractor, build_sos_bank,
+                            design_butter_bandpass_sos, make_filterbank,
+                            sos_freq_response, sosfilt_np)
+from repro.frontend.fex import quantize_sos
+from repro.frontend.filters import mel_center_frequencies
+
+
+def test_bandpass_response():
+    sos = design_butter_bandpass_sos(500, 1000, 8000)
+    f0 = np.sqrt(500 * 1000)
+    h = sos_freq_response(sos, np.array([f0, 500, 1000, 100, 3000]), 8000)
+    np.testing.assert_allclose(h[0], 1.0, atol=1e-6)          # center unity
+    np.testing.assert_allclose(h[1:3], 0.7071, atol=0.01)     # -3 dB edges
+    assert h[3] < 0.05 and h[4] < 0.05                        # stopband
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(80, 1500), st.floats(1.2, 3.0))
+def test_design_always_stable(f_lo, ratio):
+    f_hi = min(f_lo * ratio, 3900.0)
+    sos = design_butter_bandpass_sos(f_lo, f_hi, 8000)
+    for b0, b1, b2, _, a1, a2 in sos:
+        roots = np.roots([1, a1, a2])
+        assert np.all(np.abs(roots) < 1.0), (f_lo, f_hi, roots)
+    # hardware-friendly symmetric numerator b1=0, b2=-b0
+    np.testing.assert_allclose(sos[:, 1], 0, atol=1e-12)
+    np.testing.assert_allclose(sos[:, 2], -sos[:, 0], atol=1e-12)
+
+
+def test_mixed_precision_quantization_on_selected_channels():
+    """Paper §II-C3: 12b/8b (b/a) suffices — true for the SELECTED
+    10-channel bank (≥516 Hz).  All quantized poles stay inside the unit
+    circle and the passband response shifts < 8%."""
+    cfg = FExConfig()
+    bank = make_filterbank()[list(cfg.selection)]
+    q = quantize_sos(bank, b_bits=12, a_bits=8)
+    centers = mel_center_frequencies()[list(cfg.selection)]
+    for ch in range(q.shape[0]):
+        for sec in range(2):
+            _, _, _, _, a1, a2 = q[ch, sec]
+            assert np.all(np.abs(np.roots([1, a1, a2])) < 1.0), (ch, sec)
+        h_ref = sos_freq_response(bank[ch], np.array([centers[ch]]), 8000)
+        h_q = sos_freq_response(q[ch], np.array([centers[ch]]), 8000)
+        assert abs(h_q[0] - h_ref[0]) < 0.08, ch
+
+
+def test_low_channels_need_more_a_bits():
+    """Reproduction insight: the low-frequency channels (poles nearest the
+    unit circle) do NOT survive 8-bit a-coefficients — channels 0 and 15
+    land exactly on |z|=1.  This independently explains why the paper's
+    10-channel selection starts at 516 Hz."""
+    bank = make_filterbank()                  # all 16 channels
+    q = quantize_sos(bank, b_bits=12, a_bits=8)
+    radii = [max(np.max(np.abs(np.roots([1, *q[ch, s, 4:]])))
+                 for s in range(2)) for ch in range(16)]
+    assert max(radii[:4] + radii[14:]) >= 1.0     # edge channels marginal
+    # ...but 12-bit a fixes every channel except the Nyquist-capped ch15
+    # (30 Hz-wide band — also outside the paper's selection)
+    q12 = quantize_sos(bank, b_bits=12, a_bits=12)
+    for ch in range(15):
+        for sec in range(2):
+            assert np.all(np.abs(np.roots([1, *q12[ch, sec, 4:]])) < 1.0), ch
+
+
+def test_fex_output_shape_and_range():
+    fex = FeatureExtractor()
+    rng = np.random.default_rng(0)
+    audio = jnp.asarray(rng.uniform(-0.5, 0.5, (3, 8000)).astype(np.float32))
+    feats = fex(audio)
+    assert feats.shape == (3, 62, 10)
+    a = np.asarray(feats)
+    assert np.all(np.isfinite(a))
+    assert a.min() >= -1.0 and a.max() < 1.0
+    # 12-bit grid
+    steps = a / 2.0 ** -11
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-3)
+
+
+def test_fex_channel_selectivity():
+    """A pure tone excites the channel whose band contains it most."""
+    cfg = FExConfig()
+    fex = FeatureExtractor(cfg)
+    centers = mel_center_frequencies()[list(cfg.selection)]
+    t = np.arange(8000) / 8000.0
+    for probe_ch in [1, 4, 8]:
+        tone = 0.5 * np.sin(2 * np.pi * centers[probe_ch] * t)
+        feats = np.asarray(fex(jnp.asarray(tone[None], jnp.float32)))[0]
+        mean_e = feats[10:].mean(axis=0)            # after settle
+        assert np.argmax(mean_e) == probe_ch
+
+
+def test_sosfilt_np_matches_freq_response():
+    """Time-domain oracle agrees with the analytic frequency response."""
+    sos = design_butter_bandpass_sos(600, 1200, 8000)
+    t = np.arange(4000) / 8000.0
+    f_probe = 850.0
+    x = np.sin(2 * np.pi * f_probe * t)
+    y = sosfilt_np(sos, x)
+    gain = np.abs(y[2000:]).max()
+    h = sos_freq_response(sos, np.array([f_probe]), 8000)[0]
+    assert abs(gain - h) < 0.05

@@ -1,0 +1,100 @@
+"""End-to-end paper pipeline: FEx → ΔGRU → FC on SynthCommands."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.gscd import synth_batch
+from repro.frontend import FeatureExtractor
+from repro.models import kws
+from repro.train import optimizer as opt
+
+KEY = jax.random.PRNGKey(0)
+
+
+TRAIN_TH = 0.1   # threshold-aware training (the DeltaRNN recipe the IC
+                 # uses; the paper's Δ_TH=0.2 is on its 12-bit feature
+                 # scale — ours normalizes to [0,1), knee ≈ 0.1)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train a small ΔGRU KWS model for a few hundred steps (module-scoped:
+    several tests share it).  Trains WITH the delta threshold in the loop."""
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(KEY, cfg)
+    ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
+                           total_steps=300)
+    state = opt.init(params)
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def step(params, state, feats, labels):
+        (loss, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
+            params, cfg, {"feats": feats, "labels": labels}, TRAIN_TH)
+        params, state, _ = opt.update(ocfg, g, state, params)
+        return params, state, loss, m["acc"]
+
+    for i in range(300):
+        audio, labels = synth_batch(rng, 64)
+        feats = fex(jnp.asarray(audio))
+        params, state, loss, acc = step(params, state, feats,
+                                        jnp.asarray(labels))
+    # eval batch
+    audio, labels = synth_batch(np.random.default_rng(1234), 256)
+    feats = fex(jnp.asarray(audio))
+    return cfg, params, feats, jnp.asarray(labels)
+
+
+def test_kws_trains_above_chance(trained):
+    cfg, params, feats, labels = trained
+    logits, _ = kws.forward(params, cfg, feats, threshold=TRAIN_TH)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == labels))
+    assert acc > 0.5, acc          # 12-class chance = 8.3%
+
+
+def test_sparsity_accuracy_tradeoff(trained):
+    """Paper's key claim (Fig. 12 shape): at the design-point threshold,
+    high temporal sparsity with (near-)zero accuracy drop vs Δ_TH=0."""
+    cfg, params, feats, labels = trained
+    from repro.core import temporal_sparsity
+    accs, spars = {}, {}
+    for th in [0.0, TRAIN_TH, 0.3]:
+        logits, stats = kws.forward(params, cfg, feats, threshold=th)
+        accs[th] = float(jnp.mean(jnp.argmax(logits, -1) == labels))
+        spars[th] = float(temporal_sparsity(stats))
+    assert spars[TRAIN_TH] > 0.75             # ≈ paper's 87%
+    assert spars[0.3] >= spars[TRAIN_TH] >= spars[0.0]
+    # threshold-aware training: design point ≥ dense accuracy − 2%
+    assert accs[TRAIN_TH] > accs[0.0] - 0.02, (accs, spars)
+
+
+def test_energy_reduction_from_measured_sparsity(trained):
+    """Energy/decision at the design-point threshold must be far below the
+    dense baseline (paper: 3.4× at 87% sparsity)."""
+    cfg, params, feats, labels = trained
+    from repro.core import temporal_sparsity
+    from repro.core.energy_model import cost_from_sparsity
+    _, stats = kws.forward(params, cfg, feats, threshold=TRAIN_TH)
+    s = float(temporal_sparsity(stats))
+    e_sparse = cost_from_sparsity(s).energy_nj_per_decision
+    e_dense = cost_from_sparsity(0.0).energy_nj_per_decision
+    assert e_dense / e_sparse > 2.5, (s, e_dense, e_sparse)
+
+
+def test_quantized_weights_preserve_accuracy(trained):
+    cfg, params, feats, labels = trained
+    lo, _ = kws.forward(params, cfg, feats, threshold=0.0)
+    lq, _ = kws.forward(params, cfg, feats, threshold=0.0, quantize_8b=True)
+    acc_o = float(jnp.mean(jnp.argmax(lo, -1) == labels))
+    acc_q = float(jnp.mean(jnp.argmax(lq, -1) == labels))
+    assert acc_q > acc_o - 0.08, (acc_o, acc_q)
+
+
+def test_11_class_metric(trained):
+    cfg, params, feats, labels = trained
+    logits, _ = kws.forward(params, cfg, feats)
+    acc11 = float(kws.accuracy_11class(logits, labels))
+    assert 0.0 <= acc11 <= 1.0

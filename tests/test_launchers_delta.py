@@ -1,0 +1,104 @@
+"""Launcher smoke tests + the paper's technique on the SSM decode path."""
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _run(mod, *args):
+    import os, pathlib
+    repo = pathlib.Path(__file__).parent.parent
+    return subprocess.run(
+        [sys.executable, "-m", mod, *args], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(repo / "src")}, timeout=500)
+
+
+def test_train_launcher(tmp_path):
+    r = _run("repro.launch.train", "--arch", "qwen2-0.5b", "--steps", "6",
+             "--ckpt-dir", str(tmp_path))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss" in r.stdout
+
+
+def test_serve_launcher():
+    r = _run("repro.launch.serve", "--arch", "qwen2-0.5b", "--requests", "2",
+             "--slots", "2", "--max-new", "4")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "served 2 requests" in r.stdout
+
+
+# --------------------- paper technique on the SSM decode (DESIGN.md §5) ---
+def _mamba_setup(use_delta, th):
+    from repro.configs import get_smoke_config
+    from repro.models import mamba2 as M
+    from repro.parallel.sharding import Sharder
+    cfg = dataclasses.replace(get_smoke_config("mamba2-370m"),
+                              use_delta=use_delta, delta_threshold=th,
+                              dtype=jnp.float32)
+    shd = Sharder(mesh=None)
+    p, _ = M.init_mamba_block(KEY, cfg, layers=None)
+    return cfg, shd, p, M
+
+
+def test_delta_decode_exact_at_zero_threshold():
+    """Δ-gated SSM decode with th=0 must equal the dense decode exactly
+    (the accumulator identity M_t == x̂_t · W_in)."""
+    cfg_d, shd, p, M = _mamba_setup(True, 0.0)
+    cfg_n = dataclasses.replace(cfg_d, use_delta=False)
+    d_in, H, P, G, N, conv_dim, proj_dim = M._dims(cfg_d)
+    B = 2
+    conv = jnp.zeros((B, cfg_d.conv_kernel - 1, conv_dim))
+    ssm = jnp.zeros((B, H, P, N))
+    xh = jnp.zeros((B, cfg_d.d_model))
+    ma = jnp.zeros((B, proj_dim))
+    cd = cn = (conv, ssm, xh, ma)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, B, cfg_d.d_model)) * 0.5
+    for t in range(6):
+        od, cd, nnz_d = M.apply_mamba_decode(p, cfg_d, xs[t], cd, shd)
+        on, cn, nnz_n = M.apply_mamba_decode(p, cfg_n, xs[t], cn, shd)
+        np.testing.assert_allclose(np.asarray(od), np.asarray(on),
+                                   rtol=1e-5, atol=1e-5)
+    assert float(nnz_d) == 1.0          # th=0: every channel transmits
+
+
+def test_delta_decode_sparsity_on_slow_stream():
+    """A slowly-varying input stream (the regime the paper exploits) gives
+    high input sparsity with bounded output deviation."""
+    cfg, shd, p, M = _mamba_setup(True, 0.05)
+    cfg_dense = dataclasses.replace(cfg, use_delta=False)
+    d_in, H, P, G, N, conv_dim, proj_dim = M._dims(cfg)
+    B = 2
+    mk = lambda: (jnp.zeros((B, cfg.conv_kernel - 1, conv_dim)),
+                  jnp.zeros((B, H, P, N)), jnp.zeros((B, cfg.d_model)),
+                  jnp.zeros((B, proj_dim)))
+    cd, cn = mk(), mk()
+    base = jax.random.normal(jax.random.PRNGKey(2), (B, cfg.d_model))
+    nnzs, devs = [], []
+    for t in range(10):
+        x = base + 0.01 * jax.random.normal(jax.random.PRNGKey(t), base.shape)
+        od, cd, nnz = M.apply_mamba_decode(p, cfg, x, cd, shd)
+        on, cn, _ = M.apply_mamba_decode(p, cfg_dense, x, cn, shd)
+        nnzs.append(float(nnz))
+        devs.append(float(jnp.max(jnp.abs(od - on))))
+    # after the first step (full transmit) the stream is very sparse
+    assert np.mean(nnzs[1:]) < 0.2, nnzs
+    assert max(devs) < 0.5, devs
+
+
+def test_delta_matvec_kernel_traffic_scales_with_sparsity():
+    """The TPU mechanism: weight tiles for inactive delta blocks are never
+    fetched — block mask density == traffic fraction."""
+    from repro.kernels.delta_matvec import make_block_mask
+    B, I = 2, 1024
+    dx = jnp.zeros((B, I)).at[:, :128].set(1.0)     # 1 of 8 blocks active
+    mask = make_block_mask(dx, 128)
+    assert int(mask.sum()) == 1
+    # 87% temporal sparsity (paper design point) → ~8× weight-traffic cut
+    # at block granularity when actives cluster; worst-case scattered
+    # actives degrade toward dense — quantified in kernel_bench.
