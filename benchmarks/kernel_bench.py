@@ -1,21 +1,43 @@
-"""Kernel microbenchmarks: delta_matvec block-skip scaling + iir_fex.
+"""Kernel microbenchmarks: block-skip delta_matvec, fused ΔGRU, iir_fex.
 
 On this CPU container the kernels run in interpret mode, so wall-clock is
-NOT TPU time; the meaningful outputs are the MODELED weight-traffic
-savings (the TPU win: skipped HBM→VMEM tiles) versus block density, and
-the interpret-mode validation timing for reference.
+NOT TPU time; the meaningful outputs are (a) the MODELED weight-traffic
+savings versus block density (the TPU win: skipped HBM→VMEM tiles),
+(b) the kernel-INVOCATION count per utterance — the fused sequence
+kernel launches once where the per-step cell launches T times — and
+(c) interpret-mode per-frame timing for the perf trajectory, written to
+``BENCH_kernels.json`` at the repo root so successive PRs can be diffed.
+
+Block-activity masks are SCATTERED (active blocks spread across the
+index space), not front-packed — a front-packed mask is the best case
+for any prefetcher and overstates the skip win.
 """
 from __future__ import annotations
+
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_csv, time_call
+from repro.core import delta_gru as dg
 from repro.kernels import ops
 
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_kernels.json"
 
-def run():
+
+def _scattered_mask(nblk: int, k_active: int) -> jnp.ndarray:
+    """k active blocks spread evenly across [0, nblk) — not front-packed."""
+    idx = np.unique(np.linspace(0, nblk - 1, k_active).round().astype(int))
+    mask = np.zeros(nblk, np.int32)
+    mask[idx] = 1
+    return jnp.asarray(mask)
+
+
+def run_delta_matvec():
     rows = []
     B, I, O, blk = 8, 1024, 768, 128
     w = jax.random.normal(jax.random.PRNGKey(0), (I, O), jnp.bfloat16)
@@ -23,11 +45,10 @@ def run():
     nblk = I // blk
     for density in [1.0, 0.5, 0.25, 0.125]:
         k_active = max(1, int(nblk * density))
-        mask = jnp.asarray([1] * k_active + [0] * (nblk - k_active),
-                           jnp.int32)
+        mask = _scattered_mask(nblk, k_active)
         dx = jax.random.normal(jax.random.PRNGKey(1), (B, I), jnp.bfloat16)
-        dx = (dx.reshape(B, nblk, blk) * mask[None, :, None].astype(jnp.bfloat16)
-              ).reshape(B, I)
+        dx = (dx.reshape(B, nblk, blk)
+              * mask[None, :, None].astype(jnp.bfloat16)).reshape(B, I)
         us = time_call(lambda: ops.delta_matvec(dx, w, m, mask), iters=3)
         weight_bytes_dense = I * O * 2
         weight_bytes_read = k_active * blk * O * 2
@@ -38,7 +59,94 @@ def run():
             "traffic_saving_x": weight_bytes_dense / weight_bytes_read,
             "macs_executed": k_active * blk * O * B,
         })
-    # iir_fex
+    return rows
+
+
+def _count_pallas_calls(closed) -> int:
+    """Count RUNTIME pallas_call launches in a (closed) jaxpr: recurses
+    into sub-jaxprs and multiplies a scan body's count by its trip count
+    (the blocked ΔGRU fallback composes pallas inside lax.scan)."""
+    import jax.core as core
+    n = 0
+    for eqn in closed.jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+            continue
+        sub = 0
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vs:
+                if isinstance(u, core.ClosedJaxpr):
+                    sub += _count_pallas_calls(u)
+                elif isinstance(u, core.Jaxpr):
+                    sub += _count_pallas_calls(core.ClosedJaxpr(u, ()))
+        if eqn.primitive.name == "scan":
+            sub *= eqn.params["length"]
+        n += sub
+    return n
+
+
+def pallas_calls_per_utterance(fn, *args) -> int:
+    """MEASURED kernel-launch count: trace ``fn`` fresh, count
+    pallas_call eqns (scan-body counts scaled by trip count)."""
+    return _count_pallas_calls(jax.make_jaxpr(fn)(*args))
+
+
+def run_delta_gru(T: int = 100, B: int = 8, I: int = 64, H: int = 64,
+                  th: float = 0.2):
+    """Fused full-sequence kernel vs per-step cell vs lax.scan on the
+    acceptance workload (T=100, B=8): per-frame latency and, decisively,
+    pallas_call invocations per utterance (1 vs T)."""
+    p = dg.init_delta_gru(jax.random.PRNGKey(0), I, H)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, I)) * 0.5
+    s0 = dg.init_delta_state(B, I, H, p)
+
+    def seq_once():
+        return ops.delta_gru_seq(xs, s0.h, s0.x_hat, s0.h_hat, s0.m_x,
+                                 s0.m_h, p.w_x, p.w_h, th)
+
+    def cell_loop():
+        h, xh, hh, mx, mh = s0.h, s0.x_hat, s0.h_hat, s0.m_x, s0.m_h
+        for t in range(T):
+            h, xh, hh, mx, mh = ops.delta_gru_cell(
+                xs[t], h, xh, hh, mx, mh, p.w_x, p.w_h, th)
+        return h
+
+    scan_fn = jax.jit(lambda xs: dg.delta_gru_scan(p, xs, threshold=th)[0])
+
+    rows = []
+    for name, fn, iters in [
+        ("delta_gru_seq", seq_once, 3),
+        ("delta_gru_cell_loop", cell_loop, 1),
+        ("delta_gru_lax_scan", scan_fn, 3),
+    ]:
+        if name == "delta_gru_lax_scan":
+            us = time_call(fn, xs, iters=iters)
+            calls = pallas_calls_per_utterance(fn, xs)
+        else:
+            us = time_call(fn, iters=iters)
+            calls = pallas_calls_per_utterance(fn)
+        rows.append({
+            "kernel": name, "T": T, "B": B, "I": I, "H": H,
+            "threshold": th,
+            "pallas_calls_per_utterance": calls,
+            "us_per_frame_interpret": us / T,
+            "frames_per_s_interpret": 1e6 / (us / T),
+        })
+    seq_row = next(r for r in rows if r["kernel"] == "delta_gru_seq")
+    cell_row = next(r for r in rows if r["kernel"] == "delta_gru_cell_loop")
+    assert (cell_row["pallas_calls_per_utterance"]
+            >= 5 * seq_row["pallas_calls_per_utterance"]), \
+        "fused sequence kernel must cut kernel invocations >= 5x"
+    return rows
+
+
+def run():
+    """Schema-stable rows for benchmarks/run.py (one CSV block)."""
+    return run_delta_matvec() + run_iir_fex()
+
+
+def run_iir_fex():
     from repro.frontend.fex import FExConfig, build_sos_bank
     cfg = FExConfig()
     coef = ops.pack_coefficients(build_sos_bank(cfg))
@@ -46,18 +154,30 @@ def run():
                     jnp.float32)
     us = time_call(lambda: ops.iir_fex(x, coef, env_alpha=cfg.env_alpha),
                    iters=3)
-    rows.append({
+    return [{
         "kernel": "iir_fex", "block_density": 1.0,
         "us_per_call_interpret": us,
         "weight_bytes_read": int(coef.size * 4),
         "traffic_saving_x": 1.0,
         "macs_executed": 8000 * cfg.n_active * 5,
-    })
-    return rows
+    }]
 
 
 def main():
-    print_csv(run(), "kernel_bench")
+    matvec_rows = run_delta_matvec()
+    gru_rows = run_delta_gru()
+    fex_rows = run_iir_fex()
+    print_csv(matvec_rows + fex_rows, "kernel_bench")
+    print_csv(gru_rows, "delta_gru_seq_vs_per_step")
+    BENCH_JSON.write_text(json.dumps({
+        "note": "interpret-mode CPU timings (kernels target TPU); "
+                "invocation counts and modeled traffic are the tracked "
+                "quantities",
+        "delta_matvec": matvec_rows,
+        "delta_gru": gru_rows,
+        "iir_fex": fex_rows,
+    }, indent=2) + "\n")
+    print(f"# wrote {BENCH_JSON}")
 
 
 if __name__ == "__main__":

@@ -38,6 +38,8 @@ def main() -> None:
 
     # Kernels + roofline
     print_csv(kernel_bench.run(), "kernel_bench")
+    print_csv(kernel_bench.run_delta_gru(T=50 if quick else 100),
+              "delta_gru_seq_vs_per_step")
     print_csv(roofline_table.run(), "roofline_table")
 
     print(f"# total_bench_wall_s,{time.time() - t0:.1f}")

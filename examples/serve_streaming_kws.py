@@ -1,41 +1,41 @@
-"""Serving example: streaming always-on KWS — frame-by-frame ΔGRU decode
-with live temporal-sparsity and energy telemetry (the IC's deployment
-mode: one decision per 16 ms frame).
+"""Serving example: streaming always-on KWS with ZERO per-frame host syncs.
 
-Uses the fused Pallas cell (interpret mode on CPU) for the per-frame step,
-demonstrating kernels as the serving hot path.
+The IC's deployment mode is one decision per 16 ms frame with all ΔRNN
+state resident on-chip.  This example mirrors that with a
+``StreamingKwsSession``: audio arrives in chunks, each chunk is ONE fused
+sequence-resident Pallas kernel launch (``kernels.delta_gru_seq`` —
+weights + x̂/ĥ/M state stay in VMEM across all frames of the chunk), the
+ΔGRU state carries across chunk boundaries on device, and op-count
+telemetry accumulates on device.  The host fetches device results once
+per chunk and the energy/sparsity summary once at the end — no
+``float()``/``int()`` per frame forcing a device sync every 16 ms.
 
 Run:  PYTHONPATH=src python examples/serve_streaming_kws.py
 """
 import pathlib
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))  # benchmarks/
 from benchmarks.common import train_kws
 from repro.core.energy_model import frame_cost
-from repro.data.gscd import synth_batch
-from repro.kernels import ops
-from repro.models import kws
+from repro.data.gscd import _SPECS, _synth_keyword, _synth_silence, _synth_unknown
+from repro.launch.streaming import StreamingKwsSession
 from repro.models.kws import CLASSES
+
+CHUNK = 31          # frames per chunk (~0.5 s of audio at 16 ms/frame)
 
 
 def main():
     print("training detector ...")
     cfg, params, fex, _, _ = train_kws(n_steps=200)
-    gru = kws._gru_params(params, False)
-    th = 0.1
 
     # a 4-second stream: yes → silence → stop → unknown
     rng = np.random.default_rng(5)
     segs, truth = [], []
     for name in ["yes", "silence", "stop", "unknown"]:
-        audio, labels = synth_batch(rng, 1)
-        from repro.data.gscd import (_SPECS, _synth_keyword, _synth_silence,
-                                     _synth_unknown)
         if name == "silence":
             segs.append(_synth_silence(rng))
         elif name == "unknown":
@@ -46,40 +46,33 @@ def main():
     stream = np.concatenate(segs)
 
     feats = fex(jnp.asarray(stream[None]))[0]        # (frames, C)
-    B, I, H = 1, feats.shape[1], cfg.d_model
-    x_hat = jnp.zeros((B, I))
-    h = jnp.zeros((B, H))
-    h_hat = jnp.zeros((B, H))
-    m_x = jnp.broadcast_to(gru.b[None], (B, 3 * H))
-    m_h = jnp.zeros((B, 3 * H))
+    frames_per_seg = len(feats) // len(truth)
 
-    print(f"\nstreaming {len(feats)} frames "
-          f"(16 ms each; fused ΔGRU Pallas cell):")
-    total_macs = dense_macs = 0
-    votes = []
-    for f in range(len(feats)):
-        x = feats[f][None]
-        nz_before = (jnp.sum(jnp.abs(x - x_hat) > th)
-                     + jnp.sum(jnp.abs(h - h_hat) > th))
-        h, x_hat, h_hat, m_x, m_h = ops.delta_gru_cell(
-            x, h, x_hat, h_hat, m_x, m_h, gru.w_x, gru.w_h, th)
-        macs = float(nz_before) * 3 * H
-        total_macs += macs
-        dense_macs += (I + H) * 3 * H
-        logits = h @ params["w_fc"] + params["b_fc"]
-        votes.append(int(jnp.argmax(logits)))
-        if f % 62 == 20:        # mid-utterance snapshot
-            seg = min(f // 62, len(truth) - 1)
-            c = frame_cost(macs)
-            print(f"  frame {f:3d} [truth={truth[seg]:8s}] "
-                  f"pred={CLASSES[votes[-1]]:8s} "
-                  f"macs={macs:6.0f} energy={c.energy_nj_per_decision:6.1f}nJ")
-    sparsity = 1 - total_macs / dense_macs
-    c = frame_cost(total_macs / len(feats))
-    print(f"\nstream sparsity: {sparsity:.3f}  "
-          f"avg energy {c.energy_nj_per_decision:.1f} nJ/decision  "
-          f"avg latency {c.latency_ms:.2f} ms "
-          f"(dense would be {frame_cost(dense_macs/len(feats)).energy_nj_per_decision:.1f} nJ)")
+    sess = StreamingKwsSession(params, cfg, threshold=0.1,
+                               input_dim=feats.shape[1])
+    n_chunks = -(-len(feats) // CHUNK)
+    print(f"\nstreaming {len(feats)} frames in {n_chunks} chunks of {CHUNK} "
+          f"(one fused ΔGRU pallas_call per chunk, state carried on device):")
+    for c in range(n_chunks):
+        lo = c * CHUNK
+        chunk = feats[lo:lo + CHUNK]
+        out = sess.process_chunk(chunk)              # device arrays, no sync
+        # ONE host fetch per chunk: frame votes + per-frame transmit counts.
+        votes, nz = np.asarray(out.votes[:, 0]), np.asarray(out.nz[:, 0])
+        mid = lo + len(chunk) // 2
+        seg = min(mid // frames_per_seg, len(truth) - 1)
+        top = np.bincount(votes, minlength=len(CLASSES)).argmax()
+        macs_pf = nz.mean() * 3 * cfg.d_model
+        print(f"  chunk {c} frames {lo:3d}-{lo + len(chunk) - 1:3d} "
+              f"[truth={truth[seg]:8s}] vote={CLASSES[top]:8s} "
+              f"avg_macs/frame={macs_pf:6.0f} "
+              f"energy={frame_cost(macs_pf).energy_nj_per_decision:6.1f}nJ")
+
+    s = sess.summary()                               # ONE telemetry fetch
+    print(f"\nstream sparsity: {s.sparsity:.3f}  "
+          f"avg energy {s.energy_nj_per_decision:.1f} nJ/decision  "
+          f"avg latency {s.latency_ms:.2f} ms "
+          f"(dense would be {s.dense_energy_nj:.1f} nJ)")
 
 
 if __name__ == "__main__":

@@ -54,6 +54,7 @@ class ArchConfig:
     # --- paper technique ---
     use_delta: bool = False
     delta_threshold: float = 0.0
+    gru_backend: str = "xla"         # xla | pallas (DESIGN.md §3)
     # --- performance knobs (§Perf) ---
     remat_policy: str = "full"       # full | save_mlp (selective remat)
     # --- numerics ---

@@ -111,11 +111,8 @@ def delta_encode(x: Array, x_hat: Array, threshold: Array | float):
     semantics — *not* an unconditional update, which would let small drifts
     accumulate unseen).
     """
-    diff = x - x_hat
-    mask = jnp.abs(diff) > threshold
-    delta = jnp.where(mask, diff, 0.0)
-    new_x_hat = jnp.where(mask, x, x_hat)
-    return delta, new_x_hat, mask
+    from repro.kernels.gru_math import delta_branch
+    return delta_branch(x, x_hat, threshold)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,40 +135,133 @@ class DeltaGRUCell:
         # to gathering the non-zero columns (what the IC / Pallas kernel do).
         m_x = state.m_x + dx @ params.w_x          # (B, 3H)
         m_h = state.m_h + dh @ params.w_h          # (B, 3H)
+        h = _gru_gates(m_x, m_h, state.h, H)
 
-        r = jax.nn.sigmoid(m_x[:, :H] + m_h[:, :H])
-        u = jax.nn.sigmoid(m_x[:, H:2 * H] + m_h[:, H:2 * H])
-        c = jnp.tanh(m_x[:, 2 * H:] + r * m_h[:, 2 * H:])
-        h = u * state.h + (1.0 - u) * c
-
-        nz_dx = jnp.sum(mx, axis=-1)
-        nz_dh = jnp.sum(mh, axis=-1)
-        in_dim = x.shape[-1]
-        macs = (nz_dx + nz_dh) * (3 * H)
-        macs_dense = jnp.full_like(macs, (in_dim + H) * 3 * H)
-        stats = DeltaStats(
-            nz_dx=nz_dx, nz_dh=nz_dh, macs=macs, macs_dense=macs_dense,
-            sram_reads=macs,  # one weight word per MAC (16b word = 2×8b wts
-        )                      # in the IC; accounted in the energy model)
+        # sram_reads == macs: one weight word per MAC (16b word = 2×8b wts
+        # in the IC; accounted in the energy model).
+        stats = _stats_from_counts(jnp.sum(mx, axis=-1),
+                                   jnp.sum(mh, axis=-1), x.shape[-1], H)
         new_state = DeltaState(h=h, x_hat=x_hat, h_hat=h_hat, m_x=m_x, m_h=m_h)
         return new_state, h, stats
 
 
+# VMEM budget for the sequence-resident Pallas kernel: beyond this the
+# weights cannot stay resident and the block-sparse path takes over.
+_SEQ_KERNEL_VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+
+def _auto_block(n: int, target: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= target (static Python int)."""
+    for d in range(min(n, target), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _stats_from_counts(nz_dx: Array, nz_dh: Array, in_dim: int,
+                       hidden_dim: int) -> DeltaStats:
+    """Rebuild DeltaStats from per-frame transmit counts (device-side)."""
+    macs = (nz_dx + nz_dh) * (3 * hidden_dim)
+    macs_dense = jnp.full_like(macs, (in_dim + hidden_dim) * 3 * hidden_dim)
+    return DeltaStats(nz_dx=nz_dx, nz_dh=nz_dh, macs=macs,
+                      macs_dense=macs_dense, sram_reads=macs)
+
+
+def _gru_gates(m_x: Array, m_h: Array, h: Array, hidden_dim: int) -> Array:
+    """The type-2 GRU nonlinearity (single source: kernels/gru_math.py)."""
+    from repro.kernels.gru_math import gru_gates
+    return gru_gates(m_x, m_h, h, hidden_dim)
+
+
+def _delta_gru_scan_blocked(params: DeltaGRUParams, xs: Array,
+                            threshold: float, state: DeltaState,
+                            block_i: int | None, block_o: int | None,
+                            interpret: bool,
+                            ) -> tuple[Array, DeltaState, DeltaStats]:
+    """Scan composing the block-sparse ``delta_matvec`` kernel per step.
+
+    For models whose weights exceed the sequence kernel's VMEM budget:
+    each step derives a block-activity mask from the thresholded deltas
+    and skips the HBM→VMEM weight-tile fetch (and the MAC) for inactive
+    blocks — the DESIGN.md §2 re-blocking applied inside the recurrence.
+    """
+    from repro.kernels.delta_matvec import delta_matvec, make_block_mask
+
+    T, B, I = xs.shape
+    H = params.w_h.shape[0]
+    # block_i describes the INPUT axis; it only carries over to the
+    # hidden-state matvec when it also divides H (delta_matvec requires
+    # exact tiling) — otherwise each axis picks its own divisor.
+    bi_x = block_i if block_i and I % block_i == 0 else _auto_block(I)
+    bi_h = block_i if block_i and H % block_i == 0 else _auto_block(H)
+    bo = block_o if block_o and (3 * H) % block_o == 0 else _auto_block(3 * H)
+    th = jnp.asarray(threshold, xs.dtype)
+
+    def body(carry: DeltaState, x):
+        dx, x_hat, mx_mask = delta_encode(x, carry.x_hat, th)
+        dh, h_hat, mh_mask = delta_encode(carry.h, carry.h_hat, th)
+        m_x = delta_matvec(dx, params.w_x, carry.m_x,
+                           make_block_mask(dx, bi_x),
+                           block_i=bi_x, block_o=bo, interpret=interpret)
+        m_h = delta_matvec(dh, params.w_h, carry.m_h,
+                           make_block_mask(dh, bi_h),
+                           block_i=bi_h, block_o=bo, interpret=interpret)
+        h = _gru_gates(m_x, m_h, carry.h, H)
+        stats = _stats_from_counts(jnp.sum(mx_mask, axis=-1),
+                                   jnp.sum(mh_mask, axis=-1), I, H)
+        new_state = DeltaState(h=h, x_hat=x_hat, h_hat=h_hat,
+                               m_x=m_x, m_h=m_h)
+        return new_state, (h, stats)
+
+    final_state, (hs, stats) = jax.lax.scan(body, state, xs)
+    return hs, final_state, stats
+
+
 def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
-                   state: DeltaState | None = None,
+                   state: DeltaState | None = None, *,
+                   backend: str = "xla", interpret: bool = True,
+                   block_b: int | None = None, block_i: int | None = None,
+                   block_o: int | None = None,
+                   vmem_budget_bytes: int = _SEQ_KERNEL_VMEM_BUDGET_BYTES,
                    ) -> tuple[Array, DeltaState, DeltaStats]:
     """Run a ΔGRU over ``xs`` of shape (T, B, I).
 
     Returns (hs (T,B,H), final_state, per-step stats stacked over T).
-    Differentiable: the delta threshold acts as a piecewise-constant gate;
-    gradients flow through the transmitted path (straight-through on the
-    gate), matching how DeltaRNN networks are trained.
+
+    ``backend`` selects the implementation (identical numerics):
+      * ``"xla"``    — ``jax.lax.scan`` over ``DeltaGRUCell`` (default;
+        differentiable — the training path).
+      * ``"pallas"`` — ONE fused ``pallas_call`` for the whole sequence
+        with weights and delta state VMEM-resident across grid steps
+        (``kernels.delta_gru_seq``); falls back to a per-step composition
+        of the block-sparse ``delta_matvec`` kernel when the weights
+        exceed ``vmem_budget_bytes``.
+
+    The XLA path is differentiable: the delta threshold acts as a
+    piecewise-constant gate; gradients flow through the transmitted path
+    (straight-through on the gate), matching how DeltaRNN networks are
+    trained.  The Pallas paths are inference/serving hot paths.
     """
     T, B, I = xs.shape
     H = params.w_h.shape[0]
-    cell = DeltaGRUCell(hidden_dim=H, threshold=threshold)
     if state is None:
         state = init_delta_state(B, I, H, params, xs.dtype)
+
+    if backend == "pallas":
+        weight_bytes = (I + H) * 3 * H * 4
+        if weight_bytes > vmem_budget_bytes:
+            return _delta_gru_scan_blocked(params, xs, threshold, state,
+                                           block_i, block_o, interpret)
+        from repro.kernels.delta_gru_seq import delta_gru_seq
+        hs, final, nz_dx, nz_dh = delta_gru_seq(
+            xs, state.h, state.x_hat, state.h_hat, state.m_x, state.m_h,
+            params.w_x, params.w_h, threshold,
+            block_b=block_b, interpret=interpret)
+        return hs, DeltaState(*final), _stats_from_counts(nz_dx, nz_dh, I, H)
+    if backend != "xla":
+        raise ValueError(f"unknown ΔGRU backend: {backend!r}")
+
+    cell = DeltaGRUCell(hidden_dim=H, threshold=threshold)
 
     def body(carry, x):
         new_state, h, stats = cell(params, carry, x)
@@ -192,10 +282,7 @@ def dense_gru_scan(params: DeltaGRUParams, xs: Array,
     def body(h, x):
         zx = x @ params.w_x + params.b
         zh = h @ params.w_h
-        r = jax.nn.sigmoid(zx[:, :H] + zh[:, :H])
-        u = jax.nn.sigmoid(zx[:, H:2 * H] + zh[:, H:2 * H])
-        c = jnp.tanh(zx[:, 2 * H:] + r * zh[:, 2 * H:])
-        h = u * h + (1.0 - u) * c
+        h = _gru_gates(zx, zh, h, H)
         return h, h
 
     _, hs = jax.lax.scan(body, h0, xs)

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.gru_math import delta_branch, gru_gates
+
 
 def _kernel(x_ref, h_ref, xh_ref, hh_ref, mx_ref, mh_ref,
             wx_ref, wh_ref, th_ref,
@@ -23,18 +25,11 @@ def _kernel(x_ref, h_ref, xh_ref, hh_ref, mx_ref, mh_ref,
     th = th_ref[0, 0]
     x = x_ref[...]
     h = h_ref[...]
-    x_hat = xh_ref[...]
-    h_hat = hh_ref[...]
 
-    dxf = x - x_hat
-    mx_mask = jnp.abs(dxf) > th
-    dx = jnp.where(mx_mask, dxf, 0.0)
-    xh_out[...] = jnp.where(mx_mask, x, x_hat)
-
-    dhf = h - h_hat
-    mh_mask = jnp.abs(dhf) > th
-    dh = jnp.where(mh_mask, dhf, 0.0)
-    hh_out[...] = jnp.where(mh_mask, h, h_hat)
+    dx, new_xh, _ = delta_branch(x, xh_ref[...], th)
+    xh_out[...] = new_xh
+    dh, new_hh, _ = delta_branch(h, hh_ref[...], th)
+    hh_out[...] = new_hh
 
     m_x = mx_ref[...] + jnp.dot(dx, wx_ref[...],
                                 preferred_element_type=jnp.float32)
@@ -43,11 +38,7 @@ def _kernel(x_ref, h_ref, xh_ref, hh_ref, mx_ref, mh_ref,
     mx_out[...] = m_x
     mh_out[...] = m_h
 
-    H = hidden
-    r = jax.nn.sigmoid(m_x[:, :H] + m_h[:, :H])
-    u = jax.nn.sigmoid(m_x[:, H:2 * H] + m_h[:, H:2 * H])
-    c = jnp.tanh(m_x[:, 2 * H:] + r * m_h[:, 2 * H:])
-    h_out[...] = u * h + (1.0 - u) * c
+    h_out[...] = gru_gates(m_x, m_h, h, hidden)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,0 +1,148 @@
+"""Full-sequence fused ΔGRU — one ``pallas_call`` per utterance/stream.
+
+``delta_gru_cell`` images the ASIC's datapath for a single 16 ms frame, but
+invoking it per timestep betrays the chip's actual win: DeltaKWS keeps x̂,
+ĥ and the M accumulators resident in on-chip SRAM for the *whole* stream,
+so a skipped delta skips the MAC **and** the weight read, and nothing
+round-trips off-chip between frames.  This kernel is the TPU image of that
+state-resident loop (DESIGN.md §3):
+
+  * grid = (n_batch_tiles, T) — the time axis is the innermost grid
+    dimension, executed sequentially on one core;
+  * the five state buffers (h, x̂, ĥ, M_x, M_h) are *output* refs whose
+    index map is constant along t, so Pallas keeps them revisited in VMEM
+    across all T grid steps (the accumulator pattern) and flushes them to
+    HBM exactly once, as the final state;
+  * the weights' index map is constant along the whole grid, so W_x/W_h
+    are DMA'd HBM→VMEM once and stay resident — the SRAM image;
+  * only the per-frame hidden vector and the per-frame non-zero-delta
+    counts stream back to HBM (block index advancing with t).
+
+One kernel launch per sequence instead of T launches, zero HBM traffic
+for state, and the op-count statistics the energy model needs are
+accumulated on-device.  Weights that do NOT fit VMEM take the
+block-sparse path instead (``core.delta_gru`` composes ``delta_matvec``'s
+scalar-prefetch block mask per step — see DESIGN.md §2/§3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gru_math import delta_branch, gru_gates
+
+
+def _kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
+            wx_ref, wh_ref, th_ref,
+            hs_ref, nzx_ref, nzh_ref,
+            h_ref, xh_ref, hh_ref, mx_ref, mh_ref, *, hidden: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _load_state():
+        # Fresh batch tile: seed the resident state buffers from the
+        # caller's initial state (once per sequence, not per frame).
+        h_ref[...] = h0_ref[...]
+        xh_ref[...] = xh0_ref[...]
+        hh_ref[...] = hh0_ref[...]
+        mx_ref[...] = mx0_ref[...]
+        mh_ref[...] = mh0_ref[...]
+
+    th = th_ref[0, 0]
+    x = x_ref[0]
+    h = h_ref[...]
+
+    dx, new_xh, mx_mask = delta_branch(x, xh_ref[...], th)
+    xh_ref[...] = new_xh
+    dh, new_hh, mh_mask = delta_branch(h, hh_ref[...], th)
+    hh_ref[...] = new_hh
+
+    m_x = mx_ref[...] + jnp.dot(dx, wx_ref[...],
+                                preferred_element_type=jnp.float32)
+    m_h = mh_ref[...] + jnp.dot(dh, wh_ref[...],
+                                preferred_element_type=jnp.float32)
+    mx_ref[...] = m_x
+    mh_ref[...] = m_h
+
+    h_new = gru_gates(m_x, m_h, h, hidden)
+
+    h_ref[...] = h_new
+    hs_ref[0] = h_new
+    nzx_ref[0, :] = jnp.sum(mx_mask, axis=-1).astype(jnp.int32)
+    nzh_ref[0, :] = jnp.sum(mh_mask, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
+                  *, block_b: int | None = None, interpret: bool = True):
+    """Run a ΔGRU over a whole sequence in ONE kernel invocation.
+
+    Args:
+      xs:      (T, B, I) inputs, one row per 16 ms frame.
+      h0, x_hat0, h_hat0, m_x0, m_h0: initial delta state (see
+        ``core.delta_gru.DeltaState``; m_x0 carries the bias).
+      w_x: (I, 3H); w_h: (H, 3H); threshold: scalar Δ_TH.
+      block_b: batch-tile size (must divide B; default B, one tile).
+
+    Returns ``(hs, (h, x_hat, h_hat, m_x, m_h), nz_dx, nz_dh)`` with
+    hs (T, B, H) and nz_* (T, B) int32 per-frame transmit counts.
+    """
+    T, B, I = xs.shape
+    H = h0.shape[1]
+    # Shape discipline: block specs are derived from xs/h0, and a
+    # mismatched operand would be silently padded by interpret mode —
+    # corrupting resident state instead of erroring.
+    assert h0.shape == h_hat0.shape == (B, H), (h0.shape, h_hat0.shape)
+    assert x_hat0.shape == (B, I), (x_hat0.shape, (B, I))
+    assert m_x0.shape == m_h0.shape == (B, 3 * H), (m_x0.shape, m_h0.shape)
+    assert w_x.shape == (I, 3 * H), (w_x.shape, (I, 3 * H))
+    assert w_h.shape == (H, 3 * H), (w_h.shape, (H, 3 * H))
+    bb = B if block_b is None else block_b
+    assert B % bb == 0, (B, bb)
+    n_b = B // bb
+
+    f32 = lambda a: a.astype(jnp.float32)
+    th = jnp.full((1, 1), threshold, jnp.float32)
+    kernel = functools.partial(_kernel, hidden=H)
+
+    state_spec = lambda d: pl.BlockSpec((bb, d), lambda b, t: (b, 0))
+    fixed_spec = lambda s: pl.BlockSpec(s, lambda b, t: tuple(
+        0 for _ in s))
+    seq_spec = lambda d: pl.BlockSpec((1, bb, d), lambda b, t: (t, b, 0))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((T, B, H), jnp.float32),   # hs
+        jax.ShapeDtypeStruct((T, B), jnp.int32),        # nz_dx
+        jax.ShapeDtypeStruct((T, B), jnp.int32),        # nz_dh
+        jax.ShapeDtypeStruct((B, H), jnp.float32),      # h
+        jax.ShapeDtypeStruct((B, I), jnp.float32),      # x_hat
+        jax.ShapeDtypeStruct((B, H), jnp.float32),      # h_hat
+        jax.ShapeDtypeStruct((B, 3 * H), jnp.float32),  # m_x
+        jax.ShapeDtypeStruct((B, 3 * H), jnp.float32),  # m_h
+    )
+    out_specs = (
+        seq_spec(H),
+        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
+        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
+        state_spec(H), state_spec(I), state_spec(H),
+        state_spec(3 * H), state_spec(3 * H),
+    )
+    hs, nz_dx, nz_dh, h, x_hat, h_hat, m_x, m_h = pl.pallas_call(
+        kernel,
+        grid=(n_b, T),
+        in_specs=[
+            seq_spec(I),
+            state_spec(H), state_spec(I), state_spec(H),
+            state_spec(3 * H), state_spec(3 * H),
+            fixed_spec((I, 3 * H)), fixed_spec((H, 3 * H)),
+            fixed_spec((1, 1)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(f32(xs), f32(h0), f32(x_hat0), f32(h_hat0), f32(m_x0), f32(m_h0),
+      f32(w_x), f32(w_h), th)
+    return hs, (h, x_hat, h_hat, m_x, m_h), nz_dx, nz_dh

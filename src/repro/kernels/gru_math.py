@@ -1,0 +1,37 @@
+"""The ΔGRU datapath as pure jnp ops — the single source of truth.
+
+Shared by the per-step Pallas cell, the sequence-resident Pallas kernel,
+and the XLA reference path in ``core.delta_gru``: all are under a
+bit-exactness contract (tests/test_delta_gru_seq.py), so the
+delta-encoder and gate math must exist exactly once.  Pure element-wise
+/ slice ops only — traceable both inside Pallas kernel bodies and in
+ordinary jitted code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_branch(v, v_hat, threshold):
+    """Δ encoder: (delta, new_v_hat, transmitted_mask).
+
+    delta[i] = v[i] - v_hat[i] where |v - v_hat| > threshold, else 0.
+    v_hat only advances for transmitted components (the IC's Δ-encoder
+    semantics — *not* an unconditional update, which would let small
+    drifts accumulate unseen).
+    """
+    diff = v - v_hat
+    mask = jnp.abs(diff) > threshold
+    delta = jnp.where(mask, diff, 0.0)
+    new_v_hat = jnp.where(mask, v, v_hat)
+    return delta, new_v_hat, mask
+
+
+def gru_gates(m_x, m_h, h, hidden_dim: int):
+    """Type-2 GRU nonlinearity on accumulated pre-activations [r|u|c]."""
+    H = hidden_dim
+    r = jax.nn.sigmoid(m_x[:, :H] + m_h[:, :H])
+    u = jax.nn.sigmoid(m_x[:, H:2 * H] + m_h[:, H:2 * H])
+    c = jnp.tanh(m_x[:, 2 * H:] + r * m_h[:, 2 * H:])
+    return u * h + (1.0 - u) * c

@@ -10,10 +10,11 @@ import jax.numpy as jnp
 
 from repro.kernels.delta_matvec import delta_matvec, make_block_mask
 from repro.kernels.delta_gru_cell import delta_gru_cell
+from repro.kernels.delta_gru_seq import delta_gru_seq
 from repro.kernels.iir_fex import iir_fex, pack_coefficients
 
 __all__ = [
-    "delta_matvec", "make_block_mask", "delta_gru_cell",
+    "delta_matvec", "make_block_mask", "delta_gru_cell", "delta_gru_seq",
     "iir_fex", "pack_coefficients", "delta_matvec_auto",
 ]
 

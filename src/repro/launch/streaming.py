@@ -1,0 +1,192 @@
+"""Zero-sync streaming KWS sessions (DESIGN.md §4).
+
+The IC's deployment mode is an always-on stream: one decision per 16 ms
+frame, all ΔRNN state resident on-chip.  The serving image of that is a
+session whose delta state and op-count telemetry live on DEVICE between
+chunks: the host hands over a chunk of frames, gets device arrays back,
+and never forces a per-frame sync — the previous serving example called
+``float()``/``int()`` every frame, stalling the device every 16 ms.
+
+``StreamingKwsSession`` wraps the fused sequence-resident ΔGRU kernel
+(one ``pallas_call`` per chunk, ``backend="pallas"``) behind a
+carry-across-chunks API:
+
+    sess = StreamingKwsSession(params, cfg, threshold=0.1)
+    for chunk in audio_feature_chunks:        # (frames, channels)
+        out = sess.process_chunk(chunk)       # device arrays, NO sync
+        votes = np.asarray(out.votes)         # ONE fetch per chunk
+    print(sess.summary())                     # one fetch for telemetry
+
+Chunk boundaries are invisible to the model: processing [a|b] equals
+processing the concatenation in one shot (tested in
+tests/test_delta_gru_seq.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delta_gru as dg
+from repro.core.energy_model import frame_cost
+from repro.models import kws
+
+Array = jax.Array
+
+
+class ChunkResult(NamedTuple):
+    """Device-side per-chunk outputs — nothing here has been synced."""
+
+    logits: Array   # (frames, batch, n_classes) per-frame logits
+    votes: Array    # (frames, batch) int32 per-frame argmax
+    nz: Array       # (frames, batch) transmitted deltas per frame
+
+
+class _Accum(NamedTuple):
+    """Device-resident telemetry accumulated across chunks."""
+
+    macs: Array        # () f32 — ΔGRU MACs actually executed
+    macs_dense: Array  # () f32 — dense-equivalent MACs
+    frames: Array      # () i32
+
+
+@dataclasses.dataclass
+class StreamSummary:
+    frames: int
+    chunks: int
+    sparsity: float
+    energy_nj_per_decision: float
+    latency_ms: float
+    dense_energy_nj: float
+
+
+def _zero_accum() -> _Accum:
+    return _Accum(macs=jnp.zeros((), jnp.float32),
+                  macs_dense=jnp.zeros((), jnp.float32),
+                  frames=jnp.zeros((), jnp.int32))
+
+
+def _process_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, state: dg.DeltaState,
+                   acc: _Accum, feats, *, threshold: float, backend: str,
+                   interpret: bool):
+    """Pure chunk step: (state, acc, feats (F,B,C)) -> (state', acc', out)."""
+    hs, state, stats = dg.delta_gru_scan(
+        gru, feats, threshold=threshold, state=state,
+        backend=backend, interpret=interpret)
+    logits = hs @ w_fc + b_fc                     # (F, B, 12)
+    votes = jnp.argmax(logits, -1).astype(jnp.int32)
+    acc = _Accum(
+        macs=acc.macs + jnp.sum(stats.macs).astype(jnp.float32),
+        macs_dense=acc.macs_dense + jnp.sum(stats.macs_dense
+                                            ).astype(jnp.float32),
+        frames=acc.frames + jnp.asarray(feats.shape[0], jnp.int32),
+    )
+    out = ChunkResult(logits=logits, votes=votes,
+                      nz=stats.nz_dx + stats.nz_dh)
+    return state, acc, out
+
+
+class StreamingKwsSession:
+    """Carries ΔGRU state + telemetry on device across audio chunks.
+
+    Args:
+      params: the trained KWS parameter tree (``models.kws.init_kws``).
+      cfg: an ArchConfig (``d_model`` = GRU width).
+      threshold: Δ_TH override (default ``cfg.delta_threshold``).
+      batch: number of parallel streams sharing the session.
+      input_dim: feature channels per frame (default: inferred lazily
+        from the first chunk).
+      backend: "pallas" (default — one kernel launch per chunk) or "xla".
+    """
+
+    def __init__(self, params, cfg, *, threshold: float | None = None,
+                 batch: int = 1, input_dim: int | None = None,
+                 quantize_8b: bool = False, backend: str = "pallas",
+                 interpret: bool = True):
+        self.cfg = cfg
+        self.batch = batch
+        self.threshold = (cfg.delta_threshold if threshold is None
+                          else threshold)
+        self._gru = kws._gru_params(params, quantize_8b)
+        self._w_fc, self._b_fc = params["w_fc"], params["b_fc"]
+        self._state: dg.DeltaState | None = None
+        self._acc = _zero_accum()
+        self._chunks = 0
+        self._input_dim = input_dim
+        self._step = jax.jit(functools.partial(
+            _process_chunk, threshold=self.threshold, backend=backend,
+            interpret=interpret))
+        if input_dim is not None:
+            self._init_state(input_dim)
+
+    def _init_state(self, input_dim: int):
+        self._input_dim = input_dim
+        self._state = dg.init_delta_state(
+            self.batch, input_dim, self.cfg.d_model, self._gru)
+
+    def process_chunk(self, feats) -> ChunkResult:
+        """Run one chunk of frames through the resident ΔGRU.
+
+        ``feats``: (frames, channels) for a single stream, or
+        (frames, batch, channels).  Returns DEVICE arrays — call
+        ``np.asarray``/``jax.device_get`` on the result at most once per
+        chunk; nothing in here blocks on the device.
+
+        The step is compiled per chunk LENGTH: feeding equal-sized
+        chunks reuses the compiled kernel, while every new length pays
+        a one-off retrace/compile (a host stall).  For jitter-free
+        serving, buffer audio to a fixed frames-per-chunk; a single
+        ragged tail chunk at end-of-stream costs one extra compile.
+        """
+        feats = jnp.asarray(feats, jnp.float32)
+        if feats.ndim == 2:
+            feats = feats[:, None, :]                 # (F, 1, C)
+        if feats.shape[0] == 0:
+            raise ValueError("empty chunk: need at least one frame")
+        if feats.shape[1] != self.batch:
+            raise ValueError(f"chunk carries {feats.shape[1]} streams, "
+                             f"session was created with batch={self.batch}")
+        if self._state is None:
+            self._init_state(feats.shape[-1])
+        elif feats.shape[-1] != self._input_dim:
+            raise ValueError(f"chunk has {feats.shape[-1]} feature channels,"
+                             f" session state is {self._input_dim}-wide")
+        self._state, self._acc, out = self._step(
+            self._gru, self._w_fc, self._b_fc, self._state, self._acc, feats)
+        self._chunks += 1
+        return out
+
+    @property
+    def state(self) -> dg.DeltaState | None:
+        return self._state
+
+    def reset(self):
+        """Forget stream state + telemetry (keeps weights/compiled step)."""
+        if self._input_dim is not None:
+            self._init_state(self._input_dim)
+        self._acc = _zero_accum()
+        self._chunks = 0
+
+    def summary(self) -> StreamSummary:
+        """Fetch device telemetry ONCE and price it with the IC model."""
+        acc = jax.device_get(self._acc)
+        if int(acc.frames) == 0:
+            # Nothing processed yet: report an identifiable empty state,
+            # not a spurious 100%-sparsity / 0-energy datapoint.
+            return StreamSummary(frames=0, chunks=0, sparsity=0.0,
+                                 energy_nj_per_decision=0.0, latency_ms=0.0,
+                                 dense_energy_nj=0.0)
+        frames = max(int(acc.frames), 1)
+        macs_pf = float(acc.macs) / frames
+        dense_pf = float(acc.macs_dense) / frames
+        c = frame_cost(macs_pf)
+        return StreamSummary(
+            frames=int(acc.frames), chunks=self._chunks,
+            sparsity=1.0 - float(acc.macs) / max(float(acc.macs_dense), 1.0),
+            energy_nj_per_decision=c.energy_nj_per_decision,
+            latency_ms=c.latency_ms,
+            dense_energy_nj=frame_cost(dense_pf).energy_nj_per_decision,
+        )

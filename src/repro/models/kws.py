@@ -46,12 +46,18 @@ def _gru_params(params, quantize_8b: bool):
 
 
 def forward(params, cfg, feats: Array, threshold: float | None = None,
-            quantize_8b: bool = False):
-    """feats: (B, F, C) → (logits (B, 12), stats)."""
+            quantize_8b: bool = False, backend: str | None = None):
+    """feats: (B, F, C) → (logits (B, 12), stats).
+
+    ``backend`` overrides ``cfg.gru_backend``: "xla" (differentiable
+    training path) or "pallas" (fused sequence-resident serving kernel,
+    identical numerics — see core.delta_gru.delta_gru_scan).
+    """
     th = cfg.delta_threshold if threshold is None else threshold
+    be = (getattr(cfg, "gru_backend", "xla") if backend is None else backend)
     gru = _gru_params(params, quantize_8b)
     xs = jnp.moveaxis(feats, 1, 0)                    # (F, B, C)
-    hs, _, stats = dg.delta_gru_scan(gru, xs, threshold=th)
+    hs, _, stats = dg.delta_gru_scan(gru, xs, threshold=th, backend=be)
     h_mean = jnp.mean(hs, axis=0)                     # mean-pool over frames
     logits = h_mean @ params["w_fc"] + params["b_fc"]
     return logits, stats

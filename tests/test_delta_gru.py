@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (delta_encode, delta_gru_scan, dense_gru_scan,
                         init_delta_gru, temporal_sparsity)

@@ -1,0 +1,177 @@
+"""Sequence-resident fused ΔGRU kernel + streaming-session parity tests.
+
+The fused full-sequence kernel (one pallas_call per utterance) must be a
+drop-in replacement for the per-step scan: bit-for-bit at Δ_TH=0 (where
+the scan itself equals the dense GRU), elementwise-close at Δ_TH>0
+across batch tilings, with identical op-count statistics.  Streaming
+sessions must make chunk boundaries invisible.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delta_gru as dg
+from repro.core.delta_gru import (DeltaState, delta_gru_scan,
+                                  dense_gru_scan, init_delta_gru,
+                                  init_delta_state)
+from repro.kernels.delta_gru_seq import delta_gru_seq
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(T=24, B=8, I=10, H=16, seed=0):
+    p = init_delta_gru(jax.random.PRNGKey(seed), I, H)
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, B, I))
+    return p, xs
+
+
+def _run_seq(p, xs, th, block_b=None, state=None):
+    T, B, I = xs.shape
+    H = p.w_h.shape[0]
+    s = state or init_delta_state(B, I, H, p)
+    return delta_gru_seq(xs, s.h, s.x_hat, s.h_hat, s.m_x, s.m_h,
+                         p.w_x, p.w_h, th, block_b=block_b)
+
+
+def test_seq_bitexact_at_threshold_zero_vs_scan_and_dense():
+    p, xs = _setup()
+    hs, final, nz_dx, nz_dh = _run_seq(p, xs, 0.0)
+    hs_scan, fs_scan, _ = delta_gru_scan(p, xs, threshold=0.0)
+    # bit-for-bit against the scan (same op order, same f32 math)
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(hs_scan))
+    for a, b in zip(final, fs_scan):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and allclose against the dense GRU oracle (different op order)
+    hs_dense = dense_gru_scan(p, xs)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_dense),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("block_b", [None, 4, 2, 1])
+@pytest.mark.parametrize("th", [0.05, 0.2, 0.5])
+def test_seq_matches_scan_across_thresholds_and_batch_tiles(th, block_b):
+    p, xs = _setup(T=20, B=8, I=12, H=24, seed=3)
+    hs, final, nz_dx, nz_dh = _run_seq(p, xs, th, block_b=block_b)
+    hs_scan, fs_scan, stats = delta_gru_scan(p, xs, threshold=th)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_scan),
+                               rtol=1e-6, atol=1e-6)
+    for a, b in zip(final, fs_scan):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    # op-count telemetry identical: same frames transmitted
+    np.testing.assert_array_equal(np.asarray(nz_dx), np.asarray(stats.nz_dx))
+    np.testing.assert_array_equal(np.asarray(nz_dh), np.asarray(stats.nz_dh))
+
+
+def test_backend_dispatch_pallas_equals_xla():
+    p, xs = _setup(T=16, B=4, I=10, H=16, seed=7)
+    for th in [0.0, 0.15]:
+        hs_p, fs_p, st_p = delta_gru_scan(p, xs, threshold=th,
+                                          backend="pallas")
+        hs_x, fs_x, st_x = delta_gru_scan(p, xs, threshold=th, backend="xla")
+        np.testing.assert_allclose(np.asarray(hs_p), np.asarray(hs_x),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(st_p.macs),
+                                      np.asarray(st_x.macs))
+        assert isinstance(fs_p, DeltaState)
+
+
+def test_backend_rejects_unknown():
+    p, xs = _setup(T=4, B=2)
+    with pytest.raises(ValueError):
+        delta_gru_scan(p, xs, backend="cuda")
+
+
+def test_pallas_blocked_fallback_when_weights_exceed_vmem():
+    """Weights over the VMEM budget must route through the block-sparse
+    delta_matvec composition and still match the XLA scan."""
+    p = init_delta_gru(jax.random.PRNGKey(5), 256, 128)
+    xs = jax.random.normal(jax.random.PRNGKey(6), (8, 4, 256))
+    hs_b, fs_b, st_b = delta_gru_scan(p, xs, threshold=0.3,
+                                      backend="pallas",
+                                      vmem_budget_bytes=1024)
+    hs_x, fs_x, st_x = delta_gru_scan(p, xs, threshold=0.3, backend="xla")
+    np.testing.assert_allclose(np.asarray(hs_b), np.asarray(hs_x),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(st_b.nz_dx),
+                                  np.asarray(st_x.nz_dx))
+
+
+def test_seq_carried_state_resumes_mid_sequence():
+    """Splitting a sequence at an arbitrary frame and feeding the final
+    state back must equal the one-shot run (the streaming contract at
+    kernel level)."""
+    p, xs = _setup(T=30, B=4, I=10, H=16, seed=9)
+    th = 0.2
+    hs_once = _run_seq(p, xs, th)[0]
+    hs_a, final_a, _, _ = _run_seq(p, xs[:13], th)
+    state_a = DeltaState(*final_a)
+    hs_b, _, _, _ = _run_seq(p, xs[13:], th, state=state_a)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate([hs_a, hs_b], axis=0)),
+        np.asarray(hs_once))
+
+
+def test_kws_forward_backend_parity():
+    from repro.configs import get_config
+    from repro.models import kws
+    cfg = get_config("deltakws")
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg, input_dim=10)
+    feats = jax.random.normal(jax.random.PRNGKey(1), (4, 20, 10)) * 0.5
+    lg_x, st_x = kws.forward(params, cfg, feats, threshold=0.1,
+                             backend="xla")
+    lg_p, st_p = kws.forward(params, cfg, feats, threshold=0.1,
+                             backend="pallas")
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_x),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(st_p.macs),
+                                  np.asarray(st_x.macs))
+
+
+class TestStreamingSession:
+    def _session(self, batch=1, threshold=0.1):
+        from repro.configs import get_config
+        from repro.launch.streaming import StreamingKwsSession
+        from repro.models import kws
+        cfg = get_config("deltakws")
+        params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg, input_dim=10)
+        sess = StreamingKwsSession(params, cfg, threshold=threshold,
+                                   batch=batch)
+        return cfg, params, sess
+
+    def test_chunked_equals_oneshot(self):
+        from repro.models import kws
+        cfg, params, sess = self._session()
+        feats = jax.random.normal(jax.random.PRNGKey(1), (32, 10)) * 0.5
+        outs = [sess.process_chunk(feats[a:b])
+                for a, b in [(0, 10), (10, 17), (17, 32)]]
+        logits_chunked = jnp.concatenate([o.logits for o in outs], axis=0)
+
+        gru = kws._gru_params(params, False)
+        hs, _, _ = delta_gru_scan(gru, feats[:, None, :], threshold=0.1,
+                                  backend="pallas")
+        logits_once = hs @ params["w_fc"] + params["b_fc"]
+        np.testing.assert_array_equal(np.asarray(logits_chunked),
+                                      np.asarray(logits_once))
+
+    def test_batched_streams_and_summary(self):
+        cfg, params, sess = self._session(batch=3)
+        feats = jax.random.normal(jax.random.PRNGKey(2), (12, 3, 10)) * 0.5
+        out = sess.process_chunk(feats)
+        assert out.votes.shape == (12, 3)
+        out = sess.process_chunk(feats)
+        s = sess.summary()
+        assert s.frames == 24 and s.chunks == 2
+        assert 0.0 <= s.sparsity <= 1.0
+        assert s.energy_nj_per_decision <= s.dense_energy_nj + 1e-9
+
+    def test_reset_forgets_state(self):
+        cfg, params, sess = self._session()
+        feats = jax.random.normal(jax.random.PRNGKey(3), (8, 10)) * 0.5
+        first = sess.process_chunk(feats)
+        sess.reset()
+        again = sess.process_chunk(feats)
+        np.testing.assert_array_equal(np.asarray(first.logits),
+                                      np.asarray(again.logits))
+        assert sess.summary().frames == 8

@@ -1,7 +1,7 @@
 """Energy model calibration + fixed-point quantization properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import energy_model as em
 from repro.core.quantize import QFormat, qformat_for
