@@ -14,6 +14,7 @@ for any prefetcher and overstates the skip win.
 """
 from __future__ import annotations
 
+import functools
 import json
 import pathlib
 
@@ -146,6 +147,134 @@ def run():
     return run_delta_matvec() + run_iir_fex()
 
 
+def run_fex_bench(th: float = 0.2):
+    """Audio-in pipeline: per-sample scan FEx vs batched Pallas FEx vs the
+    FUSED audio→decision step, on 1 s of 8 kHz audio at B=1 and B=8.
+
+    The decisive comparison is the last two rows per batch: the fused
+    single-dispatch step (FEx → ΔGRU → FC in one jitted graph, the
+    StreamingKwsSession audio path) against the path it replaces —
+    scan-FEx and a separate ΔGRU dispatch with the features
+    ROUND-TRIPPING THROUGH THE HOST between the two calls, which is how
+    every pre-PR deployment (fex(audio) → host → process_chunk) ran.
+    """
+    from repro.configs import get_config
+    from repro.frontend.fex import FeatureExtractor, init_fex_state
+    from repro.launch import streaming as st
+    from repro.models import kws
+
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=fex.cfg.n_active)
+    gru = kws._gru_params(params, False)
+    w_fc, b_fc = params["w_fc"], params["b_fc"]
+    # Under the interpreter the XLA scan body is the faster FEx inside the
+    # fused step (identical numerics); compiled (TPU) uses the kernel.
+    fex_backend = "xla" if ops.default_interpret() else "pallas"
+
+    rows = []
+    for B in (1, 8):
+        audio = jnp.asarray(np.random.default_rng(B).uniform(
+            -0.5, 0.5, (B, 8000)), jnp.float32)
+        n_frames = 8000 // fex.cfg.frame_shift
+
+        scan_fex = jax.jit(lambda a: fex.scan(a, None, backend="xla")[0])
+        pallas_fex = jax.jit(lambda a: fex.scan(a, None,
+                                                backend="pallas")[0])
+
+        def gru_fc(feats):
+            xs = jnp.moveaxis(feats, 1, 0)
+            hs, _, _ = dg.delta_gru_scan(gru, xs, threshold=th,
+                                         backend="pallas")
+            return hs @ w_fc + b_fc
+        gru_fc_j = jax.jit(gru_fc)
+
+        def separate(a):
+            # two dispatches + the features' host round trip (device sync,
+            # H2D re-upload) that the fused step eliminates
+            feats = np.asarray(scan_fex(a))
+            return gru_fc_j(jnp.asarray(feats))
+
+        fused_step = jax.jit(functools.partial(
+            st._process_audio_chunk, threshold=th, backend="pallas",
+            fex_backend=fex_backend, interpret=None,
+            frame_shift=fex.cfg.frame_shift, env_alpha=fex.cfg.env_alpha,
+            log_eps=fex.cfg.log_eps))
+        fstate = init_fex_state(B, fex.cfg.n_active)
+        gstate = dg.init_delta_state(B, fex.cfg.n_active, cfg.d_model, gru)
+        acc = st._zero_accum()
+
+        def fused(a):
+            return fused_step(gru, w_fc, b_fc, fex.coef, fstate, gstate,
+                              acc, a)
+
+        def row(name, us):
+            return {
+                "kernel": name, "B": B, "audio_s": 1.0,
+                "frames": n_frames, "threshold": th,
+                "us_per_call_interpret": us,
+                "us_per_frame_interpret": us / n_frames,
+                "realtime_factor": 1e6 / us,
+            }
+
+        rows.append(row("fex_scan_xla", time_call(scan_fex, audio, iters=5)))
+        rows.append(row("fex_pallas_batched",
+                        time_call(pallas_fex, audio, iters=5)))
+        # The decisive pair is timed INTERLEAVED so slow phases of the
+        # shared-CPU container hit both sides equally; each iteration is
+        # a PAIRED sample (separate then fused back-to-back), and the
+        # sign statistic over the pairs is what survives the container's
+        # ±30% noise — point medians/mins alone flip run to run.
+        sep_med, fused_med, wins, n_pairs, med_diff = _time_interleaved(
+            separate, fused, audio)
+        rows.append(row("scan_fex_plus_separate_gru", sep_med))
+        rows.append(dict(row("fused_audio_step", fused_med),
+                         pair_wins_vs_separate=wins, pairs=n_pairs,
+                         paired_median_diff_us=med_diff))
+    return rows
+
+
+def _time_interleaved(fn_a, fn_b, *args, iters: int = 60):
+    """Strictly alternate a/b; returns (median_a_us, median_b_us,
+    pairs_won_by_b, n_pairs, median_paired_diff_us[a−b])."""
+    import time as _time
+    for _ in range(2):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append(_time.perf_counter() - t0)
+    ta, tb = np.array(ta) * 1e6, np.array(tb) * 1e6
+    return (float(np.median(ta)), float(np.median(tb)),
+            int(np.sum(tb < ta)), iters, float(np.median(ta - tb)))
+
+
+def check_fex_win(rows, strict: bool = True):
+    """Acceptance: the fused audio-in step beats scan-FEx + a separate
+    ΔGRU dispatch at B=8 — judged by the PAIRED SIGN TEST over the
+    interleaved iterations (fused must win the majority of back-to-back
+    pairs; winning ≥42/60 has p < 0.002 under a no-difference null),
+    which detects the consistent one-dispatch margin that the container's
+    ±30% wall-clock noise hides from point comparisons.  ``strict=False``
+    (BENCH_STRICT=0, set on shared CI runners) warns instead of raising;
+    the recorded JSON rows are the tracked evidence either way."""
+    fused8 = next(r for r in rows
+                  if r["kernel"] == "fused_audio_step" and r["B"] == 8)
+    wins, pairs = fused8["pair_wins_vs_separate"], fused8["pairs"]
+    msg = (f"fused audio-in step vs scan-FEx + separate ΔGRU at B=8: "
+           f"wins {wins}/{pairs} interleaved pairs, "
+           f"median paired diff {fused8['paired_median_diff_us']:+.0f}us")
+    if wins <= pairs // 2 and strict:
+        raise AssertionError("fused step must win the pair majority: " + msg)
+    print(("# " if wins > pairs // 2 else "# WARNING (not faster): ") + msg)
+
+
 def run_iir_fex():
     from repro.frontend.fex import FExConfig, build_sos_bank
     cfg = FExConfig()
@@ -167,8 +296,10 @@ def main():
     matvec_rows = run_delta_matvec()
     gru_rows = run_delta_gru()
     fex_rows = run_iir_fex()
+    fex_bench_rows = run_fex_bench()
     print_csv(matvec_rows + fex_rows, "kernel_bench")
     print_csv(gru_rows, "delta_gru_seq_vs_per_step")
+    print_csv(fex_bench_rows, "fex_bench_audio_in")
     BENCH_JSON.write_text(json.dumps({
         "note": "interpret-mode CPU timings (kernels target TPU); "
                 "invocation counts and modeled traffic are the tracked "
@@ -176,8 +307,12 @@ def main():
         "delta_matvec": matvec_rows,
         "delta_gru": gru_rows,
         "iir_fex": fex_rows,
+        "fex_bench": fex_bench_rows,
     }, indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}")
+    import os
+    check_fex_win(fex_bench_rows,
+                  strict=os.environ.get("BENCH_STRICT", "1") != "0")
 
 
 if __name__ == "__main__":

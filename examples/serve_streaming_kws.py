@@ -1,21 +1,22 @@
-"""Serving example: streaming always-on KWS with ZERO per-frame host syncs.
+"""Serving example: always-on KWS from RAW AUDIO with ZERO per-frame syncs.
 
-The IC's deployment mode is one decision per 16 ms frame with all ΔRNN
-state resident on-chip.  This example mirrors that with a
-``StreamingKwsSession``: audio arrives in chunks, each chunk is ONE fused
-sequence-resident Pallas kernel launch (``kernels.delta_gru_seq`` —
-weights + x̂/ĥ/M state stay in VMEM across all frames of the chunk), the
-ΔGRU state carries across chunk boundaries on device, and op-count
-telemetry accumulates on device.  The host fetches device results once
-per chunk and the energy/sparsity summary once at the end — no
-``float()``/``int()`` per frame forcing a device sync every 16 ms.
+The IC's deployment mode is audio in, decisions out: 8 kHz samples enter
+the FEx, one decision leaves per 16 ms frame, every register stays
+on-chip.  This example mirrors that end to end with a
+``StreamingKwsSession`` in audio mode: raw audio arrives in chunks, each
+chunk is ONE fused jitted step — batched sequence-resident FEx
+(``kernels.iir_fex``, biquad/envelope state VMEM-carried) feeding the
+fused sequence-resident ΔGRU (``kernels.delta_gru_seq``) and the FC head
+with no host hop between the stages.  FEx state, ΔGRU state and op-count
+telemetry all carry across chunk boundaries on device; the host fetches
+device results once per chunk and the energy/sparsity summary once at
+the end.
 
 Run:  PYTHONPATH=src python examples/serve_streaming_kws.py
 """
 import pathlib
 import sys
 
-import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))  # benchmarks/
@@ -25,7 +26,7 @@ from repro.data.gscd import _SPECS, _synth_keyword, _synth_silence, _synth_unkno
 from repro.launch.streaming import StreamingKwsSession
 from repro.models.kws import CLASSES
 
-CHUNK = 31          # frames per chunk (~0.5 s of audio at 16 ms/frame)
+CHUNK = 4000        # raw samples per chunk (~0.5 s of 8 kHz audio)
 
 
 def main():
@@ -43,34 +44,37 @@ def main():
         else:
             segs.append(_synth_keyword(rng, _SPECS[name]))
         truth.append(name)
-    stream = np.concatenate(segs)
+    stream = np.concatenate(segs).astype(np.float32)
+    samples_per_seg = len(stream) // len(truth)
 
-    feats = fex(jnp.asarray(stream[None]))[0]        # (frames, C)
-    frames_per_seg = len(feats) // len(truth)
-
-    sess = StreamingKwsSession(params, cfg, threshold=0.1,
-                               input_dim=feats.shape[1])
-    n_chunks = -(-len(feats) // CHUNK)
-    print(f"\nstreaming {len(feats)} frames in {n_chunks} chunks of {CHUNK} "
-          f"(one fused ΔGRU pallas_call per chunk, state carried on device):")
+    sess = StreamingKwsSession(params, cfg, threshold=0.1, fex=fex)
+    n_chunks = -(-len(stream) // CHUNK)
+    print(f"\nstreaming {len(stream)} raw samples in {n_chunks} chunks of "
+          f"{CHUNK} (one fused FEx→ΔGRU→FC step per chunk, all state "
+          f"carried on device):")
+    frame0 = 0
     for c in range(n_chunks):
         lo = c * CHUNK
-        chunk = feats[lo:lo + CHUNK]
-        out = sess.process_chunk(chunk)              # device arrays, no sync
+        out = sess.process_audio(stream[lo:lo + CHUNK])   # raw audio, no sync
         # ONE host fetch per chunk: frame votes + per-frame transmit counts.
         votes, nz = np.asarray(out.votes[:, 0]), np.asarray(out.nz[:, 0])
-        mid = lo + len(chunk) // 2
-        seg = min(mid // frames_per_seg, len(truth) - 1)
+        if len(votes) == 0:
+            continue
+        mid = lo + CHUNK // 2
+        seg = min(mid // samples_per_seg, len(truth) - 1)
         top = np.bincount(votes, minlength=len(CLASSES)).argmax()
         macs_pf = nz.mean() * 3 * cfg.d_model
-        print(f"  chunk {c} frames {lo:3d}-{lo + len(chunk) - 1:3d} "
+        print(f"  chunk {c} frames {frame0:3d}-{frame0 + len(votes) - 1:3d} "
               f"[truth={truth[seg]:8s}] vote={CLASSES[top]:8s} "
               f"avg_macs/frame={macs_pf:6.0f} "
               f"energy={frame_cost(macs_pf).energy_nj_per_decision:6.1f}nJ")
+        frame0 += len(votes)
 
     s = sess.summary()                               # ONE telemetry fetch
     print(f"\nstream sparsity: {s.sparsity:.3f}  "
-          f"avg energy {s.energy_nj_per_decision:.1f} nJ/decision  "
+          f"avg energy {s.energy_nj_per_decision:.1f} nJ/decision "
+          f"(FEx share {s.fex_energy_nj_per_decision:.1f} nJ from "
+          f"{s.fex_samples} counted samples)  "
           f"avg latency {s.latency_ms:.2f} ms "
           f"(dense would be {s.dense_energy_nj:.1f} nJ)")
 

@@ -176,7 +176,7 @@ def _gru_gates(m_x: Array, m_h: Array, h: Array, hidden_dim: int) -> Array:
 def _delta_gru_scan_blocked(params: DeltaGRUParams, xs: Array,
                             threshold: float, state: DeltaState,
                             block_i: int | None, block_o: int | None,
-                            interpret: bool,
+                            interpret: bool | None,
                             ) -> tuple[Array, DeltaState, DeltaStats]:
     """Scan composing the block-sparse ``delta_matvec`` kernel per step.
 
@@ -219,7 +219,7 @@ def _delta_gru_scan_blocked(params: DeltaGRUParams, xs: Array,
 
 def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
                    state: DeltaState | None = None, *,
-                   backend: str = "xla", interpret: bool = True,
+                   backend: str = "xla", interpret: bool | None = None,
                    block_b: int | None = None, block_i: int | None = None,
                    block_o: int | None = None,
                    vmem_budget_bytes: int = _SEQ_KERNEL_VMEM_BUDGET_BYTES,

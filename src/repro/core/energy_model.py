@@ -127,6 +127,19 @@ def _fex_channel_scale(n_channels: int) -> float:
     return max(0.25, 1.0 + slope * (n_channels - 10))
 
 
+# FEx accounting for audio-in serving: the 0.084 mm² FEx block runs one
+# serial MAC per cycle at 16 ch × 8 kHz; its measured power prices each
+# processed audio sample, independent of ΔRNN sparsity.
+FEX_SAMPLES_PER_FRAME = int(FRAME_S * 8000)                  # 128
+E_FEX_SAMPLE_NJ = E_FEX_FRAME_NJ * _scale_fix / FEX_SAMPLES_PER_FRAME
+
+
+def fex_energy_nj(n_samples: float, n_channels: int = 10) -> float:
+    """Energy of the FEx block for ``n_samples`` raw audio samples, scaled
+    by the active-channel count (paper: 16→10 ch saves 30%)."""
+    return n_samples * E_FEX_SAMPLE_NJ * _fex_channel_scale(n_channels)
+
+
 def cost_from_sparsity(sparsity: float, **kw) -> CostReport:
     """Convenience: cost at a given average temporal sparsity."""
     return frame_cost(macs_exec=(1.0 - sparsity) * DENSE_GRU_MACS, **kw)

@@ -1,5 +1,7 @@
 """IIR BPF-based feature extractor (paper §II-C)."""
-from repro.frontend.fex import FExConfig, FeatureExtractor, build_sos_bank, quantize_sos
+from repro.frontend.fex import (FExConfig, FExState, FeatureExtractor,
+                                build_sos_bank, fex_scan, init_fex_state,
+                                quantize_sos)
 from repro.frontend.filters import (
     design_butter_bandpass_sos,
     make_filterbank,

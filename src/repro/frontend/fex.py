@@ -7,6 +7,20 @@ Pipeline (paper Fig. 4):  12-bit audio @ 8 kHz
   → channel-wise offset/scale, log₂ compression, normalization
   → 12-bit feature vectors (C channels per 16 ms frame).
 
+Two execution paths, identical numerics (float-exact — both run the same
+``kernels.iir_fex.fex_sample_step``/``compress_env`` math in the same
+order; asserted in tests/test_fex_stream.py):
+
+  * ``backend="xla"``    — nested ``lax.scan`` (frames outer, samples
+    inner).  The bit-exact reference; differentiable.
+  * ``backend="pallas"`` — ONE batched sequence-resident kernel per chunk
+    (``kernels.iir_fex.batched_iir_fex``): biquad/envelope state lives in
+    a VMEM-revisited block across all frame steps, log₂ compression and
+    12-bit quantization run in-kernel, and only final features leave VMEM.
+
+Both paths carry an explicit ``FExState`` so audio can be streamed in
+chunks with bit-invisible boundaries (the ``delta_gru_seq`` contract).
+
 Faithfulness notes
   * Channel geometry: the paper gives 16 reconfigurable channels and a
     10-channel selection "covering 516 Hz – 4.22 kHz" while processing 8 kHz
@@ -24,13 +38,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantize import QFormat, qformat_for, quantize_audio_12b
+from repro.core.quantize import qformat_for, quantize_audio_12b
 from repro.frontend import filters
+from repro.kernels.iir_fex import (STATE_ROWS, batched_iir_fex, compress_env,
+                                   fex_sample_step, pack_coefficients)
 
 Array = jax.Array
 
@@ -59,6 +76,92 @@ class FExConfig:
     @property
     def env_alpha(self) -> float:
         return float(1.0 - np.exp(-1.0 / (self.fs * self.env_tau_s)))
+
+
+class FExState(NamedTuple):
+    """Carried FEx state: all on-chip registers of the filter datapath.
+
+    ``filt``: (B, 4, C) DF2T registers (2 sections × 2 per channel);
+    ``env``:  (B, C) envelope-detector output.
+    Packed to the kernel's (B, 5, C) layout at the call boundary.
+    """
+
+    filt: Array
+    env: Array
+
+
+def init_fex_state(batch: int, n_channels: int, dtype=jnp.float32) -> FExState:
+    """Quiescent filters, zero envelope."""
+    return FExState(filt=jnp.zeros((batch, 4, n_channels), dtype),
+                    env=jnp.zeros((batch, n_channels), dtype))
+
+
+def _pack_state(state: FExState) -> Array:
+    return jnp.concatenate([state.filt, state.env[:, None, :]],
+                           axis=1).astype(jnp.float32)
+
+
+def _unpack_state(buf: Array) -> FExState:
+    return FExState(filt=buf[:, :4], env=buf[:, STATE_ROWS - 1])
+
+
+@functools.partial(jax.jit, static_argnames=("frame_shift", "env_alpha",
+                                             "log_eps", "compress"))
+def _fex_scan_xla(audio: Array, coef: Array, state_buf: Array,
+                  frame_shift: int, env_alpha: float, log_eps: float,
+                  compress: bool):
+    """Nested-scan reference: frames outer, samples inner — per-sample op
+    order identical to the Pallas kernel body (single-source math)."""
+    B, T = audio.shape
+    n_frames = T // frame_shift
+    xf = audio[:, :n_frames * frame_shift].astype(jnp.float32)
+    xf = jnp.moveaxis(xf.reshape(B, n_frames, frame_shift), 1, 0)
+    coef = coef.astype(jnp.float32)
+
+    def frame_step(s, x_frame):                      # x_frame: (B, S)
+        def sample_step(s, x_col):                   # x_col: (B,)
+            return fex_sample_step(x_col, s, coef, env_alpha), None
+
+        s, _ = jax.lax.scan(sample_step, s, x_frame.T)
+        env = s[:, STATE_ROWS - 1]
+        return s, (compress_env(env, log_eps) if compress else env)
+
+    state_buf, feats = jax.lax.scan(frame_step,
+                                    state_buf.astype(jnp.float32), xf)
+    return jnp.moveaxis(feats, 0, 1), state_buf      # (B, F, C)
+
+
+def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
+             frame_shift: int = FRAME_SHIFT, env_alpha: float = 0.0606,
+             log_eps: float = 2.0 ** -11, compress: bool = True,
+             backend: str = "xla", block_b: int | None = None,
+             interpret: bool | None = None) -> tuple[Array, FExState]:
+    """Run the FEx over a chunk of audio, carrying explicit state.
+
+    audio: (B, T) float samples (callers quantize; trailing
+    ``T % frame_shift`` samples are ignored — carry them to the next
+    chunk).  Returns (features (B, T//frame_shift, C), new state).
+
+    ``backend="xla"`` (bit-exact reference, differentiable) or
+    ``"pallas"`` (one sequence-resident kernel per chunk).  Both are
+    float-exact against each other and make chunk boundaries invisible.
+    """
+    B = audio.shape[0]
+    C = coef.shape[1]
+    if state is None:
+        state = init_fex_state(B, C)
+    buf = _pack_state(state)
+    if backend == "pallas":
+        feats, buf = batched_iir_fex(
+            audio, coef, buf, frame_shift=frame_shift, env_alpha=env_alpha,
+            log_eps=log_eps, compress=compress, block_b=block_b,
+            interpret=interpret)
+    elif backend == "xla":
+        feats, buf = _fex_scan_xla(audio, coef, buf, frame_shift,
+                                   env_alpha, log_eps, compress)
+    else:
+        raise ValueError(f"unknown FEx backend: {backend!r}")
+    return feats, _unpack_state(buf)
 
 
 def build_sos_bank(cfg: FExConfig) -> np.ndarray:
@@ -90,64 +193,40 @@ def sos_formats(bank: np.ndarray, b_bits: int, a_bits: int):
     return b_fmt, a_fmt
 
 
-@functools.partial(jax.jit, static_argnames=("frame_shift",))
-def _fex_core(audio: Array, sos: Array, env_alpha: Array, log_eps: Array,
-              frame_shift: int) -> Array:
-    """audio (B, T) → features (B, frames, C).  sos: (C, 2, 6)."""
-    B, T = audio.shape
-    C = sos.shape[0]
-    b0 = sos[:, :, 0]          # (C, 2)
-    b1 = sos[:, :, 1]
-    b2 = sos[:, :, 2]
-    a1 = sos[:, :, 4]
-    a2 = sos[:, :, 5]
-
-    def step(carry, x_t):
-        # carry: (s1, s2) each (B, C, 2 sections), env (B, C)
-        (s1, s2, env) = carry
-        x = jnp.broadcast_to(x_t[:, None], (B, C))          # section 0 input
-        # --- section 0 ---
-        y0 = b0[:, 0] * x + s1[..., 0]
-        ns1_0 = b1[:, 0] * x - a1[:, 0] * y0 + s2[..., 0]
-        ns2_0 = b2[:, 0] * x - a2[:, 0] * y0
-        # --- section 1 ---
-        y1 = b0[:, 1] * y0 + s1[..., 1]
-        ns1_1 = b1[:, 1] * y0 - a1[:, 1] * y1 + s2[..., 1]
-        ns2_1 = b2[:, 1] * y0 - a2[:, 1] * y1
-        s1n = jnp.stack([ns1_0, ns1_1], axis=-1)
-        s2n = jnp.stack([ns2_0, ns2_1], axis=-1)
-        # --- envelope detector: full-wave rectifier + one-pole LP ---
-        env_n = (1.0 - env_alpha) * env + env_alpha * jnp.abs(y1)
-        return (s1n, s2n, env_n), env_n
-
-    init = (jnp.zeros((B, C, 2), audio.dtype), jnp.zeros((B, C, 2), audio.dtype),
-            jnp.zeros((B, C), audio.dtype))
-    _, env_seq = jax.lax.scan(step, init, audio.T)          # (T, B, C)
-
-    # Frame decimation: envelope sampled every frame_shift samples.
-    n_frames = T // frame_shift
-    env_frames = env_seq[frame_shift - 1::frame_shift][:n_frames]  # (F, B, C)
-    # Log compression + fixed normalization into ~[-1, 1).
-    feats = jnp.log2(env_frames + log_eps)
-    feats = (feats + 11.0) / 11.0            # log2 range [-11, 0] → [0, 1]
-    feats = jnp.clip(feats, -1.0, 1.0 - 2.0 ** -11)
-    return jnp.transpose(feats, (1, 0, 2))   # (B, F, C)
-
-
 class FeatureExtractor:
-    """Callable FEx: audio (B, T) float in [-1,1) → 12-bit features (B, F, C)."""
+    """Callable FEx: audio (B, T) float in [-1,1) → 12-bit features (B, F, C).
 
-    def __init__(self, cfg: FExConfig | None = None):
+    ``backend`` selects the default execution path ("xla" — differentiable
+    reference — or "pallas", the sequence-resident serving kernel);
+    per-call override via ``__call__``/``scan``.  For streaming, use
+    ``init_state``/``scan`` to carry ``FExState`` across chunks.
+    """
+
+    def __init__(self, cfg: FExConfig | None = None, *,
+                 backend: str = "xla", interpret: bool | None = None):
         self.cfg = cfg or FExConfig()
+        self.backend = backend
+        self.interpret = interpret
         self.sos = jnp.asarray(build_sos_bank(self.cfg), jnp.float32)
+        self.coef = pack_coefficients(self.sos)
 
-    def __call__(self, audio: Array) -> Array:
+    def __call__(self, audio: Array, backend: str | None = None) -> Array:
+        feats, _ = self.scan(audio, None, backend=backend)
+        return feats
+
+    def init_state(self, batch: int) -> FExState:
+        return init_fex_state(batch, self.cfg.n_active)
+
+    def scan(self, audio: Array, state: FExState | None,
+             backend: str | None = None) -> tuple[Array, FExState]:
+        """Streaming entry point: 12-bit-quantize a chunk of raw audio and
+        run it through the bank, carrying ``state`` across chunks."""
         cfg = self.cfg
         audio = quantize_audio_12b(audio.astype(jnp.float32))
-        feats = _fex_core(audio, self.sos, jnp.float32(cfg.env_alpha),
-                          jnp.float32(cfg.log_eps), cfg.frame_shift)
-        # 12-bit feature quantization (paper: 12-bit feature precision).
-        return QFormat(0, 11).quantize(feats)
+        return fex_scan(
+            audio, self.coef, state, frame_shift=cfg.frame_shift,
+            env_alpha=cfg.env_alpha, log_eps=cfg.log_eps, compress=True,
+            backend=backend or self.backend, interpret=self.interpret)
 
     # -- hardware accounting (per input sample, serial datapath) ------------
     def ops_per_sample(self) -> dict:

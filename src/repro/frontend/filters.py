@@ -12,7 +12,9 @@ two second-order sections (SOS), via the classic analog-prototype route:
      multiplier and two a multipliers).
 
 Also provides the Mel-spaced filterbank used by the FEx (16 channels,
-100 Hz – 7.9 kHz; the 10-channel selection covers 516 Hz – 4.22 kHz).
+100 Hz – 3.95 kHz, Nyquist-limited for 8 kHz audio; the 10-channel
+selection covers ≈506 Hz – 3.2 kHz — see frontend/fex.py's faithfulness
+notes on the paper's "516 Hz – 4.22 kHz").
 """
 from __future__ import annotations
 

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.gru_math import delta_branch, gru_gates
+from repro.kernels.platform import resolve_interpret
 
 
 def _kernel(x_ref, h_ref, xh_ref, hh_ref, mx_ref, mh_ref,
@@ -43,7 +44,7 @@ def _kernel(x_ref, h_ref, xh_ref, hh_ref, mx_ref, mh_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def delta_gru_cell(x, h, x_hat, h_hat, m_x, m_h, w_x, w_h,
-                   threshold, *, interpret: bool = True):
+                   threshold, *, interpret: bool | None = None):
     """One fused ΔGRU step.  Shapes: x (B,I), h (B,H), m_* (B,3H),
     w_x (I,3H), w_h (H,3H).  Returns (h', x̂', ĥ', M_x', M_h')."""
     B, I = x.shape
@@ -65,5 +66,5 @@ def delta_gru_cell(x, h, x_hat, h_hat, m_x, m_h, w_x, w_h,
                   full((I, 3 * H)), full((H, 3 * H)), full((1, 1))],
         out_specs=tuple(full(s.shape) for s in out_shapes),
         out_shape=out_shapes,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, h, x_hat, h_hat, m_x, m_h, w_x, w_h, th)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.gru_math import delta_branch, gru_gates
+from repro.kernels.platform import resolve_interpret
 
 
 def _kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
@@ -77,7 +78,8 @@ def _kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
-                  *, block_b: int | None = None, interpret: bool = True):
+                  *, block_b: int | None = None,
+                  interpret: bool | None = None):
     """Run a ΔGRU over a whole sequence in ONE kernel invocation.
 
     Args:
@@ -142,7 +144,7 @@ def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
         ],
         out_specs=out_specs,
         out_shape=out_shapes,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(f32(xs), f32(h0), f32(x_hat0), f32(h_hat0), f32(m_x0), f32(m_h0),
       f32(w_x), f32(w_h), th)
     return hs, (h, x_hat, h_hat, m_x, m_h), nz_dx, nz_dh

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.platform import resolve_interpret
+
 
 def _kernel(mask_ref, dx_ref, w_ref, m_ref, out_ref):
     i = pl.program_id(1)
@@ -46,7 +48,8 @@ def _kernel(mask_ref, dx_ref, w_ref, m_ref, out_ref):
                                              "interpret"))
 def delta_matvec(dx: jax.Array, w: jax.Array, m: jax.Array,
                  block_mask: jax.Array, *, block_i: int = 128,
-                 block_o: int = 128, interpret: bool = True) -> jax.Array:
+                 block_o: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
     """dx: (B, I) thresholded deltas; w: (I, O); m: (B, O) accumulator;
     block_mask: (I // block_i,) int32 — 1 if the block has any nonzero.
 
@@ -71,7 +74,7 @@ def delta_matvec(dx: jax.Array, w: jax.Array, m: jax.Array,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, O), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_mask.astype(jnp.int32), dx, w, m)
 
 

@@ -1,14 +1,30 @@
-"""IIR BPF feature-extractor kernel — all channels in the lane dimension.
+"""Batched sequence-resident IIR BPF feature extractor — audio in, features out.
 
-The ASIC runs one serial MAC datapath at 128 kHz (16 channels × 8 kHz).
-The TPU-native layout turns the channel loop into the VPU lane dimension:
-all C channels' biquad cascades advance in lock-step, one audio sample per
-inner iteration.  Filter state (2 sections × 2 DF2T registers × C) lives
-in VMEM scratch and persists across the sequential grid (one grid step per
-16 ms frame), so HBM traffic is exactly: audio in, features out.
+The ASIC runs one serial MAC datapath at 128 kHz (16 channels × 8 kHz) and
+keeps every biquad register on-chip for the lifetime of the stream.  The
+TPU-native image of that 0.084 mm² FEx block:
 
-  grid = (n_frames,);  x block = (frame_shift,) samples;
-  out block = (1, C) — the envelope sample at the frame boundary.
+  * all C channels' biquad cascades advance in lock-step in the VPU lane
+    dimension, all B streams in the sublane dimension;
+  * grid = (n_batch_tiles, n_frames) — the frame axis is the innermost,
+    sequentially executed grid dimension;
+  * the filter/envelope state (2 sections × 2 DF2T registers + envelope,
+    per stream × channel) is an *output* ref whose index map is constant
+    along the frame axis, so Pallas keeps the revisited block VMEM-resident
+    across all frame steps (the accumulator pattern) and flushes it to HBM
+    exactly once, as the final state;
+  * explicit ``state``-in / ``state``-out operands make chunk boundaries
+    bit-invisible — the same carry contract as ``delta_gru_seq``;
+  * log₂ compression, normalization and 12-bit quantization run in-kernel,
+    so HBM traffic is exactly: audio in, final 12-bit features out.
+
+State layout (B, 5, C) float32, rows = [s0_1, s0_2, s1_1, s1_2, env]
+(section-0 DF2T registers, section-1 DF2T registers, envelope).
+
+``fex_sample_step``/``compress_env`` are the single source of the per-sample
+math: the XLA ``lax.scan`` reference path in ``frontend/fex.py`` executes
+the *same* functions in the *same* order, so the two backends are
+float-exact against each other (asserted in tests/test_fex_stream.py).
 """
 from __future__ import annotations
 
@@ -17,71 +33,155 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.platform import resolve_interpret
+
+STATE_ROWS = 5      # [s0_1, s0_2, s1_1, s1_2, env]
+
+# The feature grid is fixed by the IC: 12-bit features, log2 range
+# [-11, 0] mapped to [0, 1] (one 12-bit LSB of headroom below 1.0).
+_FEAT_STEP = 2.0 ** -11
+_LOG_RANGE = 11.0
 
 
-def _kernel(x_ref, coef_ref, out_ref, state_ref, env_ref, *,
-            frame_shift: int, env_alpha: float):
-    f = pl.program_id(0)
+def fex_sample_step(x_col, s, coef, env_alpha):
+    """Advance every (stream, channel) cascade by ONE audio sample.
+
+    x_col: (B,) sample per stream; s: (B, 5, C) state; coef: (6, C) rows
+    [b0_0, a1_0, a2_0, b0_1, a1_1, a2_1] in the symmetric form (b1 = 0,
+    b2 = −b0 — see frontend/filters).  Returns the new (B, 5, C) state.
+    """
+    b0_0, a1_0, a2_0 = coef[0], coef[1], coef[2]
+    b0_1, a1_1, a2_1 = coef[3], coef[4], coef[5]
+    x = x_col[:, None]                          # (B, 1) → broadcast lanes
+    # section 0 (DF2T, symmetric numerator)
+    y0 = b0_0 * x + s[:, 0]
+    ns0_1 = -a1_0 * y0 + s[:, 1]
+    ns0_2 = -b0_0 * x - a2_0 * y0
+    # section 1
+    y1 = b0_1 * y0 + s[:, 2]
+    ns1_1 = -a1_1 * y1 + s[:, 3]
+    ns1_2 = -b0_1 * y0 - a2_1 * y1
+    # envelope detector: full-wave rectifier + one-pole low-pass
+    env = (1.0 - env_alpha) * s[:, 4] + env_alpha * jnp.abs(y1)
+    return jnp.stack([ns0_1, ns0_2, ns1_1, ns1_2, env], axis=1)
+
+
+def compress_env(env, log_eps):
+    """In-datapath feature compression: log₂ + normalize + 12-bit quantize.
+
+    env (..., C) → features on the 12-bit Q0.11 grid in [-1, 1-2^-11].
+    Matches core.quantize.QFormat(0, 11) op-for-op.
+    """
+    v = (jnp.log2(env + log_eps) + _LOG_RANGE) / _LOG_RANGE
+    v = jnp.clip(v, -1.0, 1.0 - _FEAT_STEP)
+    return jnp.clip(jnp.round(v / _FEAT_STEP) * _FEAT_STEP,
+                    -1.0, 1.0 - _FEAT_STEP)
+
+
+def _kernel(x_ref, coef_ref, s0_ref, feat_ref, state_ref, *,
+            frame_shift: int, env_alpha: float, log_eps: float,
+            compress: bool):
+    f = pl.program_id(1)
 
     @pl.when(f == 0)
-    def _init():
-        state_ref[...] = jnp.zeros_like(state_ref)
-        env_ref[...] = jnp.zeros_like(env_ref)
+    def _load_state():
+        # Fresh batch tile: seed the resident state from the caller's
+        # carry (once per stream chunk, not per frame).
+        state_ref[...] = s0_ref[...]
 
-    # coef layout: (6, C) rows = [b0_0, a1_0, a2_0, b0_1, a1_1, a2_1]
-    b0_0, a1_0, a2_0 = coef_ref[0], coef_ref[1], coef_ref[2]
-    b0_1, a1_1, a2_1 = coef_ref[3], coef_ref[4], coef_ref[5]
+    coef = coef_ref[...]
 
     def step(t, carry):
-        s = state_ref[...]                       # (4, C)
-        env = env_ref[...]                       # (1, C)
-        x = x_ref[t]                             # scalar → broadcast lanes
-        # section 0 (b = g·[1,0,-1] symmetric form)
-        y0 = b0_0 * x + s[0]
-        ns0_1 = -a1_0 * y0 + s[1]
-        ns0_2 = -b0_0 * x - a2_0 * y0
-        # section 1
-        y1 = b0_1 * y0 + s[2]
-        ns1_1 = -a1_1 * y1 + s[3]
-        ns1_2 = -b0_1 * y0 - a2_1 * y1
-        state_ref[...] = jnp.stack([ns0_1, ns0_2, ns1_1, ns1_2])
-        env_ref[...] = ((1.0 - env_alpha) * env
-                        + env_alpha * jnp.abs(y1)[None])
+        state_ref[...] = fex_sample_step(x_ref[:, t], state_ref[...],
+                                         coef, env_alpha)
         return carry
 
     jax.lax.fori_loop(0, frame_shift, step, 0)
-    out_ref[...] = env_ref[...]
+    env = state_ref[:, STATE_ROWS - 1]
+    feat_ref[...] = (compress_env(env, log_eps) if compress
+                     else env)[:, None, :]
 
 
-@functools.partial(jax.jit, static_argnames=("frame_shift", "env_alpha",
-                                             "interpret"))
-def iir_fex(x: jax.Array, coef: jax.Array, *, frame_shift: int = 128,
-            env_alpha: float = 0.0606, interpret: bool = True) -> jax.Array:
-    """x: (T,) audio; coef: (6, C) per-channel biquad-cascade coefficients
-    in the symmetric form (b1=0, b2=−b0 exploited — see frontend/filters).
+@functools.partial(jax.jit, static_argnames=(
+    "frame_shift", "env_alpha", "log_eps", "compress", "block_b",
+    "interpret"))
+def batched_iir_fex(x: jax.Array, coef: jax.Array, state: jax.Array, *,
+                    frame_shift: int = 128, env_alpha: float = 0.0606,
+                    log_eps: float = 2.0 ** -11, compress: bool = True,
+                    block_b: int | None = None,
+                    interpret: bool | None = None):
+    """Run the full FEx over a chunk of raw audio in ONE kernel invocation.
 
-    Returns (T // frame_shift, C) envelope features (pre-log).
+    Args:
+      x:     (B, T) audio samples (T need not be frame-aligned; the
+             trailing ``T % frame_shift`` samples are ignored — callers
+             carry them to the next chunk).
+      coef:  (6, C) symmetric-form biquad-cascade rows (``pack_coefficients``).
+      state: (B, 5, C) carried filter/envelope state (``STATE_ROWS``).
+      compress: apply in-kernel log₂ + 12-bit quantization (the deployed
+             datapath); False emits raw pre-log envelopes (oracle tests).
+      block_b: batch-tile size (must divide B; default B — one tile).
+
+    Returns (features (B, T // frame_shift, C), new state (B, 5, C)).
+    Feeding ``[a | b]`` through two calls with the state carried equals
+    one call on the concatenation, bit for bit.
     """
-    T = x.shape[0]
+    B, T = x.shape
     C = coef.shape[1]
+    assert state.shape == (B, STATE_ROWS, C), (state.shape, (B, STATE_ROWS, C))
     n_frames = T // frame_shift
-    x = x[:n_frames * frame_shift].astype(jnp.float32)
+    if n_frames == 0:
+        # Shorter than one frame: nothing to consume (the XLA path's
+        # behavior); a 0-length grid axis is not expressible in Pallas.
+        return (jnp.zeros((B, 0, C), jnp.float32),
+                state.astype(jnp.float32))
+    x = x[:, :n_frames * frame_shift].astype(jnp.float32)
+    bb = B if block_b is None else block_b
+    assert B % bb == 0, (B, bb)
+
     kernel = functools.partial(_kernel, frame_shift=frame_shift,
-                               env_alpha=env_alpha)
-    return pl.pallas_call(
+                               env_alpha=env_alpha, log_eps=log_eps,
+                               compress=compress)
+    feats, state_out = pl.pallas_call(
         kernel,
-        grid=(n_frames,),
+        grid=(B // bb, n_frames),
         in_specs=[
-            pl.BlockSpec((frame_shift,), lambda f: (f,)),
-            pl.BlockSpec((6, C), lambda f: (0, 0)),
+            pl.BlockSpec((bb, frame_shift), lambda b, f: (b, f)),
+            pl.BlockSpec((6, C), lambda b, f: (0, 0)),
+            pl.BlockSpec((bb, STATE_ROWS, C), lambda b, f: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, C), lambda f: (f, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_frames, C), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((4, C), jnp.float32),
-                        pltpu.VMEM((1, C), jnp.float32)],
-        interpret=interpret,
-    )(x, coef.astype(jnp.float32))
+        out_specs=(
+            pl.BlockSpec((bb, 1, C), lambda b, f: (b, f, 0)),
+            # Constant index map along f: VMEM-revisited accumulator,
+            # flushed to HBM once as the final carried state.
+            pl.BlockSpec((bb, STATE_ROWS, C), lambda b, f: (b, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, n_frames, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, STATE_ROWS, C), jnp.float32),
+        ),
+        interpret=resolve_interpret(interpret),
+    )(x, coef.astype(jnp.float32), state.astype(jnp.float32))
+    return feats, state_out
+
+
+def init_fex_kernel_state(batch: int, n_channels: int) -> jax.Array:
+    """Zero (B, 5, C) carry — quiescent filters, zero envelope."""
+    return jnp.zeros((batch, STATE_ROWS, n_channels), jnp.float32)
+
+
+def iir_fex(x: jax.Array, coef: jax.Array, *, frame_shift: int = 128,
+            env_alpha: float = 0.0606,
+            interpret: bool | None = None) -> jax.Array:
+    """Single-stream compatibility wrapper: (T,) audio → (F, C) raw
+    (pre-log) envelope features, zero initial state."""
+    C = coef.shape[1]
+    feats, _ = batched_iir_fex(
+        x[None], coef, init_fex_kernel_state(1, C),
+        frame_shift=frame_shift, env_alpha=env_alpha, compress=False,
+        interpret=interpret)
+    return feats[0]
 
 
 def pack_coefficients(sos) -> jax.Array:

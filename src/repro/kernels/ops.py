@@ -1,8 +1,10 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True in this CPU container (the kernels TARGET
-TPU; interpret mode executes the kernel body for correctness validation).
-On a real TPU pass interpret=False.
+``interpret`` defaults to ``None`` everywhere: platform detection
+(``kernels.platform``) picks the compiled path on TPU and the Pallas
+interpreter elsewhere (the kernels TARGET TPU; interpret mode executes
+the kernel body for correctness validation).  Pass ``interpret=True`` /
+``False`` to force a mode, or set ``REPRO_PALLAS_INTERPRET``.
 """
 from __future__ import annotations
 
@@ -11,16 +13,20 @@ import jax.numpy as jnp
 from repro.kernels.delta_matvec import delta_matvec, make_block_mask
 from repro.kernels.delta_gru_cell import delta_gru_cell
 from repro.kernels.delta_gru_seq import delta_gru_seq
-from repro.kernels.iir_fex import iir_fex, pack_coefficients
+from repro.kernels.iir_fex import (batched_iir_fex, iir_fex,
+                                   init_fex_kernel_state, pack_coefficients)
+from repro.kernels.platform import default_interpret, resolve_interpret
 
 __all__ = [
     "delta_matvec", "make_block_mask", "delta_gru_cell", "delta_gru_seq",
-    "iir_fex", "pack_coefficients", "delta_matvec_auto",
+    "iir_fex", "batched_iir_fex", "init_fex_kernel_state",
+    "pack_coefficients", "delta_matvec_auto", "default_interpret",
+    "resolve_interpret",
 ]
 
 
 def delta_matvec_auto(dx, w, m, *, block_i: int = 128, block_o: int = 128,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """Convenience: derive the block mask from the delta vector itself."""
     mask = make_block_mask(dx, block_i)
     return delta_matvec(dx, w, m, mask, block_i=block_i, block_o=block_o,

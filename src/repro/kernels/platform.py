@@ -1,0 +1,32 @@
+"""Platform detection for Pallas kernel execution mode.
+
+The kernels in this package TARGET TPU; every other backend (the CPU
+container, GPU hosts) runs them through the Pallas interpreter, which
+executes the kernel body with jnp ops — bit-identical math, no Mosaic.
+Callers pass ``interpret=None`` (the default everywhere) to get the
+platform-appropriate mode and may still force either mode per call.
+
+``REPRO_PALLAS_INTERPRET=0|1`` overrides detection globally — useful to
+smoke-test the compiled path from a TPU-attached CI lane or to force
+interpretation while debugging on TPU.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """True unless running on TPU (or overridden via env)."""
+    env = os.environ.get(_ENV_VAR)
+    if env is not None and env != "":
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Per-call override wins; ``None`` means platform detection."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -1,14 +1,23 @@
-"""Serving launcher: batched autoregressive decoding with a request queue.
+"""Serving launchers: LM decode slots AND audio-in streaming KWS.
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --requests 12``
+``python -m repro.launch.serve --mode kws-audio --slots 4 --requests 12``
 
-Implements the minimal production serving pattern the decode dry-run cells
-model: a fixed decode batch of slots, continuous batching (a finished
-request's slot is refilled from the queue; its KV region is reused since
-every slot tracks its own length via per-slot positions would require
-per-slot masks — here slots restart at index 0 per admission, matching the
-prefill-at-0 semantics of the framework), greedy sampling, and per-step
-telemetry (tokens/s, slot occupancy).
+LM mode implements the minimal production serving pattern the decode
+dry-run cells model: a fixed decode batch of slots, continuous batching
+(a finished request's slot is refilled from the queue; its KV region is
+reused since every slot tracks its own length via per-slot positions
+would require per-slot masks — here slots restart at index 0 per
+admission, matching the prefill-at-0 semantics of the framework), greedy
+sampling, and per-step telemetry (tokens/s, slot occupancy).
+
+KWS mode serves RAW AUDIO utterances through one ``StreamingKwsSession``
+whose batch dimension is the slot pool: every serve step is ONE fused
+device-side FEx→ΔGRU→FC chunk step across all slots, a finished
+utterance's slot is re-admitted from the queue via ``reset_stream`` (a
+device-side row reset — the other streams' state is untouched), and the
+host fetches one vote block per chunk plus one energy/sparsity summary at
+the end (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -17,15 +26,134 @@ import sys
 import time
 
 
+def _kws_audio_main(args) -> int:
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.data.gscd import T as UTT_SAMPLES
+    from repro.data.gscd import synth_batch
+    from repro.frontend import FeatureExtractor
+    from repro.launch.streaming import StreamingKwsSession
+    from repro.models import kws
+    from repro.train import optimizer as opt
+
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=fex.cfg.n_active)
+    rng = np.random.default_rng(0)
+
+    if args.train_steps:
+        import jax.numpy as jnp
+        ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
+                               total_steps=args.train_steps)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(params, state, feats, labels):
+            (_, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
+                params, cfg, {"feats": feats, "labels": labels}, 0.1)
+            params, state, _ = opt.update(ocfg, g, state, params)
+            return params, state
+
+        print(f"training detector for {args.train_steps} steps ...")
+        for _ in range(args.train_steps):
+            audio, labels = synth_batch(rng, 64)
+            params, state = step(params, state, fex(jnp.asarray(audio)),
+                                 jnp.asarray(labels))
+
+    # Request queue: synthesized 1 s utterances with ground-truth labels.
+    audio_q, label_q = synth_batch(np.random.default_rng(1), args.requests)
+    queue = list(range(args.requests))
+    chunk = args.chunk_samples
+    chunks_per_utt = -(-UTT_SAMPLES // chunk)
+
+    sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
+                               batch=args.slots, fex=fex)
+    real_frames = UTT_SAMPLES // fex.cfg.frame_shift   # frames of real audio
+    # slot -> [request id, chunks consumed, real frames left to vote on]
+    slots: dict[int, list | None] = {s: None for s in range(args.slots)}
+    votes = np.zeros((args.slots, kws.N_CLASSES), np.int64)
+    done: list[tuple[int, int]] = []            # (request, predicted class)
+
+    def admit(s):
+        votes[s] = 0
+        if queue:
+            slots[s] = [queue.pop(0), 0, real_frames]
+            sess.reset_stream(s)
+        else:
+            slots[s] = None
+
+    t0 = time.time()
+    steps = frames_served = pad_frames = 0
+    for s in range(args.slots):
+        admit(s)
+    while any(v is not None for v in slots.values()):
+        block = np.zeros((args.slots, chunk), np.float32)
+        for s, st in slots.items():
+            if st is None:
+                continue
+            req, c, _ = st
+            seg = audio_q[req, c * chunk:(c + 1) * chunk]
+            block[s, :len(seg)] = seg      # zero-pad a short final chunk
+        out = sess.process_audio(block)
+        v = np.asarray(out.votes)               # ONE fetch per serve step
+        n_f = v.shape[0]
+        for s, st in list(slots.items()):
+            if st is None:
+                pad_frames += n_f          # idle slot: zeros streamed, no vote
+                continue
+            # Only frames backed by real audio cast votes — padding frames
+            # (short final chunk) would bias toward the silence response.
+            n_real = min(n_f, st[2])
+            votes[s] += np.bincount(v[:n_real, s], minlength=kws.N_CLASSES)
+            st[2] -= n_real
+            frames_served += n_real
+            pad_frames += n_f - n_real
+            st[1] += 1
+            if st[1] >= chunks_per_utt:
+                done.append((st[0], int(votes[s].argmax())))
+                admit(s)
+        steps += 1
+    dt = time.time() - t0
+
+    correct = sum(1 for req, pred in done if pred == int(label_q[req]))
+    summ = sess.summary()
+    audio_s = len(done) * UTT_SAMPLES / 8000.0
+    print(f"served {len(done)} utterances ({audio_s:.0f} s audio) in "
+          f"{dt:.1f} s — {audio_s / dt:.1f}x realtime, "
+          f"{frames_served / dt:.0f} decisions/s, "
+          f"{correct}/{len(done)} correct")
+    pad_note = (f" [telemetry includes {pad_frames} zero-padding/idle-slot "
+                f"frames]" if pad_frames else "")
+    print(f"stream sparsity {summ.sparsity:.3f}, "
+          f"{summ.energy_nj_per_decision:.1f} nJ/decision "
+          f"(FEx {summ.fex_energy_nj_per_decision:.1f} nJ), "
+          f"modeled latency {summ.latency_ms:.2f} ms{pad_note}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "kws-audio"], default="lm")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--slots", type=int, default=4, help="decode batch")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--cache-len", type=int, default=64)
+    # kws-audio options
+    ap.add_argument("--chunk-samples", type=int, default=4096,
+                    help="raw samples per serve step (~0.5 s; keep it a "
+                         "multiple of the 128-sample frame shift so "
+                         "per-slot resets stay exactly frame-aligned)")
+    ap.add_argument("--threshold", type=float, default=0.1)
+    ap.add_argument("--train-steps", type=int, default=120,
+                    help="quick detector training (0 = random weights)")
     args = ap.parse_args(argv)
+
+    if args.mode == "kws-audio":
+        return _kws_audio_main(args)
 
     import jax
     import jax.numpy as jnp

@@ -1,25 +1,29 @@
-"""Zero-sync streaming KWS sessions (DESIGN.md §4).
+"""Zero-sync streaming KWS sessions — raw audio in, decisions out (DESIGN.md §4/§5).
 
-The IC's deployment mode is an always-on stream: one decision per 16 ms
-frame, all ΔRNN state resident on-chip.  The serving image of that is a
-session whose delta state and op-count telemetry live on DEVICE between
-chunks: the host hands over a chunk of frames, gets device arrays back,
-and never forces a per-frame sync — the previous serving example called
-``float()``/``int()`` every frame, stalling the device every 16 ms.
+The IC's deployment mode is an always-on stream: 8 kHz audio enters the
+FEx, one decision leaves per 16 ms frame, and every piece of state (biquad
+registers, envelope, x̂/ĥ/M) is resident on-chip.  The serving image of
+that is a session whose FEx state, delta state and op-count telemetry live
+on DEVICE between chunks: the host hands over a chunk of raw audio, gets
+device arrays back, and never forces a per-frame sync.
 
-``StreamingKwsSession`` wraps the fused sequence-resident ΔGRU kernel
-(one ``pallas_call`` per chunk, ``backend="pallas"``) behind a
-carry-across-chunks API:
+``StreamingKwsSession`` composes the batched sequence-resident FEx kernel
+(``kernels.iir_fex.batched_iir_fex``) with the fused sequence-resident
+ΔGRU kernel (``kernels.delta_gru_seq``) into ONE jitted audio→decision
+step per chunk — no host hop between FEx and ΔGRU:
 
-    sess = StreamingKwsSession(params, cfg, threshold=0.1)
-    for chunk in audio_feature_chunks:        # (frames, channels)
-        out = sess.process_chunk(chunk)       # device arrays, NO sync
+    sess = StreamingKwsSession(params, cfg, threshold=0.1, fex=fex)
+    for audio in audio_chunks:                # (samples,) raw 8 kHz audio
+        out = sess.process_audio(audio)       # device arrays, NO sync
         votes = np.asarray(out.votes)         # ONE fetch per chunk
     print(sess.summary())                     # one fetch for telemetry
 
-Chunk boundaries are invisible to the model: processing [a|b] equals
-processing the concatenation in one shot (tested in
-tests/test_delta_gru_seq.py).
+Pre-computed feature chunks are still accepted via ``process_chunk``.
+Chunk boundaries are invisible to the model either way: processing [a|b]
+equals processing the concatenation in one shot, bit for bit, including
+audio chunks that end mid-frame (the trailing ``< frame_shift`` samples
+are carried host-side and prepended to the next chunk — they are host
+data already, so no device sync is involved).
 """
 from __future__ import annotations
 
@@ -29,9 +33,14 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import delta_gru as dg
-from repro.core.energy_model import frame_cost
+from repro.core.energy_model import fex_energy_nj, frame_cost
+from repro.core.quantize import quantize_audio_12b
+from repro.frontend.fex import (FeatureExtractor, FExConfig, FExState,
+                                fex_scan, init_fex_state)
+from repro.kernels.platform import resolve_interpret
 from repro.models import kws
 
 Array = jax.Array
@@ -46,51 +55,97 @@ class ChunkResult(NamedTuple):
 
 
 class _Accum(NamedTuple):
-    """Device-resident telemetry accumulated across chunks."""
+    """Device-resident telemetry accumulated across chunks.
 
-    macs: Array        # () f32 — ΔGRU MACs actually executed
-    macs_dense: Array  # () f32 — dense-equivalent MACs
-    frames: Array      # () i32
+    ``frames``/``fex_samples`` count DECISIONS / samples across ALL
+    streams of the batch (matching ``macs``, which is batch-summed), so
+    per-decision quantities stay correct for multi-stream sessions.
+    """
+
+    macs: Array         # () f32 — ΔGRU MACs actually executed
+    macs_dense: Array   # () f32 — dense-equivalent MACs
+    frames: Array       # () i32
+    fex_samples: Array  # () f32 — raw audio samples through the FEx
+                        #         (f32 like macs: an always-on stream
+                        #          overflows int32 within ~3 days)
 
 
 @dataclasses.dataclass
 class StreamSummary:
-    frames: int
+    frames: int            # decisions made = frames × streams
     chunks: int
     sparsity: float
     energy_nj_per_decision: float
     latency_ms: float
     dense_energy_nj: float
+    fex_samples: int = 0
+    fex_energy_nj_per_decision: float = 0.0
 
 
 def _zero_accum() -> _Accum:
     return _Accum(macs=jnp.zeros((), jnp.float32),
                   macs_dense=jnp.zeros((), jnp.float32),
-                  frames=jnp.zeros((), jnp.int32))
+                  frames=jnp.zeros((), jnp.int32),
+                  fex_samples=jnp.zeros((), jnp.float32))
+
+
+def _classify(w_fc, b_fc, hs, stats):
+    logits = hs @ w_fc + b_fc                     # (F, B, 12)
+    votes = jnp.argmax(logits, -1).astype(jnp.int32)
+    return ChunkResult(logits=logits, votes=votes,
+                       nz=stats.nz_dx + stats.nz_dh)
+
+
+def _bump(acc: _Accum, stats, n_frames: int, n_samples: int) -> _Accum:
+    return _Accum(
+        macs=acc.macs + jnp.sum(stats.macs).astype(jnp.float32),
+        macs_dense=acc.macs_dense + jnp.sum(stats.macs_dense
+                                            ).astype(jnp.float32),
+        frames=acc.frames + jnp.asarray(n_frames, jnp.int32),
+        fex_samples=acc.fex_samples + jnp.asarray(n_samples, jnp.float32),
+    )
 
 
 def _process_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, state: dg.DeltaState,
                    acc: _Accum, feats, *, threshold: float, backend: str,
-                   interpret: bool):
+                   interpret: bool | None):
     """Pure chunk step: (state, acc, feats (F,B,C)) -> (state', acc', out)."""
     hs, state, stats = dg.delta_gru_scan(
         gru, feats, threshold=threshold, state=state,
         backend=backend, interpret=interpret)
-    logits = hs @ w_fc + b_fc                     # (F, B, 12)
-    votes = jnp.argmax(logits, -1).astype(jnp.int32)
-    acc = _Accum(
-        macs=acc.macs + jnp.sum(stats.macs).astype(jnp.float32),
-        macs_dense=acc.macs_dense + jnp.sum(stats.macs_dense
-                                            ).astype(jnp.float32),
-        frames=acc.frames + jnp.asarray(feats.shape[0], jnp.int32),
-    )
-    out = ChunkResult(logits=logits, votes=votes,
-                      nz=stats.nz_dx + stats.nz_dh)
-    return state, acc, out
+    out = _classify(w_fc, b_fc, hs, stats)
+    return state, _bump(acc, stats, feats.shape[0] * feats.shape[1], 0), out
+
+
+def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
+                         fex_state: FExState, state: dg.DeltaState,
+                         acc: _Accum, audio, *, threshold: float,
+                         backend: str, fex_backend: str,
+                         interpret: bool | None, frame_shift: int,
+                         env_alpha: float, log_eps: float):
+    """Fused audio→decision step: FEx → ΔGRU → FC in one jitted graph.
+
+    audio: (B, S) raw samples, S a multiple of frame_shift.  Nothing in
+    here leaves the device — only final logits/votes/counters do, when
+    the caller fetches them.
+    """
+    audio = quantize_audio_12b(audio.astype(jnp.float32))
+    feats, fex_state = fex_scan(
+        audio, coef, fex_state, frame_shift=frame_shift,
+        env_alpha=env_alpha, log_eps=log_eps, compress=True,
+        backend=fex_backend, interpret=interpret)
+    xs = jnp.moveaxis(feats, 1, 0)                # (F, B, C)
+    hs, state, stats = dg.delta_gru_scan(
+        gru, xs, threshold=threshold, state=state,
+        backend=backend, interpret=interpret)
+    out = _classify(w_fc, b_fc, hs, stats)
+    decisions = xs.shape[0] * xs.shape[1]            # frames × streams
+    acc = _bump(acc, stats, decisions, decisions * frame_shift)
+    return fex_state, state, acc, out
 
 
 class StreamingKwsSession:
-    """Carries ΔGRU state + telemetry on device across audio chunks.
+    """Carries FEx + ΔGRU state and telemetry on device across chunks.
 
     Args:
       params: the trained KWS parameter tree (``models.kws.init_kws``).
@@ -98,14 +153,23 @@ class StreamingKwsSession:
       threshold: Δ_TH override (default ``cfg.delta_threshold``).
       batch: number of parallel streams sharing the session.
       input_dim: feature channels per frame (default: inferred lazily
-        from the first chunk).
-      backend: "pallas" (default — one kernel launch per chunk) or "xla".
+        from the first chunk / the FEx configuration).
+      backend: ΔGRU backend — "pallas" (default, one kernel launch per
+        chunk) or "xla".
+      fex: a ``FeatureExtractor`` (or ``FExConfig``) enabling raw-audio
+        chunks via ``process_audio``; default-constructed on first use.
+      fex_backend: FEx backend inside the fused step — default picks
+        "pallas" when kernels compile (TPU) and the XLA scan under the
+        interpreter, where the scan body is faster (identical numerics
+        either way, so the choice is invisible).
     """
 
     def __init__(self, params, cfg, *, threshold: float | None = None,
                  batch: int = 1, input_dim: int | None = None,
                  quantize_8b: bool = False, backend: str = "pallas",
-                 interpret: bool = True):
+                 interpret: bool | None = None,
+                 fex: FeatureExtractor | FExConfig | None = None,
+                 fex_backend: str | None = None):
         self.cfg = cfg
         self.batch = batch
         self.threshold = (cfg.delta_threshold if threshold is None
@@ -113,12 +177,23 @@ class StreamingKwsSession:
         self._gru = kws._gru_params(params, quantize_8b)
         self._w_fc, self._b_fc = params["w_fc"], params["b_fc"]
         self._state: dg.DeltaState | None = None
+        self._fex = (FeatureExtractor(fex) if isinstance(fex, FExConfig)
+                     else fex)
+        self._fex_state: FExState | None = None
+        self._audio_rem: np.ndarray | None = None   # carried tail samples
         self._acc = _zero_accum()
         self._chunks = 0
         self._input_dim = input_dim
+        if fex_backend is None:
+            fex_backend = "xla" if resolve_interpret(interpret) else "pallas"
+        self._fex_backend = fex_backend
         self._step = jax.jit(functools.partial(
             _process_chunk, threshold=self.threshold, backend=backend,
             interpret=interpret))
+        self._audio_step_fn = functools.partial(
+            _process_audio_chunk, threshold=self.threshold, backend=backend,
+            fex_backend=fex_backend, interpret=interpret)
+        self._audio_step = None                     # built when FEx is known
         if input_dim is not None:
             self._init_state(input_dim)
 
@@ -127,8 +202,62 @@ class StreamingKwsSession:
         self._state = dg.init_delta_state(
             self.batch, input_dim, self.cfg.d_model, self._gru)
 
+    def _require_fex(self) -> FeatureExtractor:
+        if self._fex is None:
+            self._fex = FeatureExtractor()
+        fcfg = self._fex.cfg
+        if self._input_dim is None:
+            self._init_state(fcfg.n_active)
+        elif self._input_dim != fcfg.n_active:
+            raise ValueError(f"FEx emits {fcfg.n_active} channels, session "
+                             f"state is {self._input_dim}-wide")
+        if self._fex_state is None:
+            self._fex_state = init_fex_state(self.batch, fcfg.n_active)
+            self._audio_rem = np.zeros((self.batch, 0), np.float32)
+            self._audio_step = jax.jit(functools.partial(
+                self._audio_step_fn, frame_shift=fcfg.frame_shift,
+                env_alpha=fcfg.env_alpha, log_eps=fcfg.log_eps))
+        return self._fex
+
+    def process_audio(self, audio) -> ChunkResult:
+        """Run a chunk of RAW audio through the fused FEx→ΔGRU→FC step.
+
+        ``audio``: (samples,) for a single stream, or (batch, samples)
+        float in [-1, 1).  One jitted device step per chunk — zero host
+        syncs inside the chunk.  Samples past the last whole 16 ms frame
+        are buffered host-side and prepended to the next chunk, so chunk
+        boundaries (frame-aligned or not) are bit-invisible.
+
+        Returns DEVICE arrays with one row per COMPLETED frame (possibly
+        zero rows when the chunk is shorter than the carried remainder's
+        complement).  Like ``process_chunk``, the step is compiled per
+        chunk length.
+        """
+        fex = self._require_fex()
+        audio = np.asarray(audio, np.float32)
+        if audio.ndim == 1:
+            audio = audio[None]
+        if audio.shape[0] != self.batch:
+            raise ValueError(f"audio carries {audio.shape[0]} streams, "
+                             f"session was created with batch={self.batch}")
+        audio = np.concatenate([self._audio_rem, audio], axis=1)
+        shift = fex.cfg.frame_shift
+        n_frames = audio.shape[1] // shift
+        self._audio_rem = audio[:, n_frames * shift:]
+        if n_frames == 0:
+            z = jnp.zeros((0, self.batch), jnp.int32)
+            return ChunkResult(
+                logits=jnp.zeros((0, self.batch, kws.N_CLASSES)),
+                votes=z, nz=z)
+        self._fex_state, self._state, self._acc, out = self._audio_step(
+            self._gru, self._w_fc, self._b_fc, fex.coef, self._fex_state,
+            self._state, self._acc,
+            jnp.asarray(audio[:, :n_frames * shift]))
+        self._chunks += 1
+        return out
+
     def process_chunk(self, feats) -> ChunkResult:
-        """Run one chunk of frames through the resident ΔGRU.
+        """Run one chunk of pre-computed FRAMES through the resident ΔGRU.
 
         ``feats``: (frames, channels) for a single stream, or
         (frames, batch, channels).  Returns DEVICE arrays — call
@@ -163,12 +292,44 @@ class StreamingKwsSession:
     def state(self) -> dg.DeltaState | None:
         return self._state
 
+    @property
+    def fex_state(self) -> FExState | None:
+        return self._fex_state
+
     def reset(self):
         """Forget stream state + telemetry (keeps weights/compiled step)."""
         if self._input_dim is not None:
             self._init_state(self._input_dim)
+        if self._fex_state is not None:
+            self._fex_state = init_fex_state(self.batch, self._input_dim)
+            self._audio_rem = np.zeros((self.batch, 0), np.float32)
         self._acc = _zero_accum()
         self._chunks = 0
+
+    def reset_stream(self, i: int):
+        """Reset ONE stream slot to a fresh-stream state (continuous
+        batching: a finished utterance's slot is re-admitted without
+        disturbing the other streams).  Device-side row updates — no sync.
+
+        Caveat: the carried sample remainder's LENGTH is shared across
+        streams, so the reset zeroes slot ``i``'s buffered samples but
+        cannot drop them — after a reset mid-remainder the new stream
+        starts up to ``frame_shift−1`` zero samples early relative to a
+        fresh session.  Feed frame-aligned chunks (the serve launcher's
+        default) to keep resets exactly fresh."""
+        if not (0 <= i < self.batch):
+            raise ValueError(f"stream {i} out of range [0, {self.batch})")
+        if self._state is not None:
+            z = dg.init_delta_state(1, self._input_dim, self.cfg.d_model,
+                                    self._gru)
+            self._state = dg.DeltaState(*[
+                s.at[i].set(z0[0]) for s, z0 in zip(self._state, z)])
+        if self._fex_state is not None:
+            self._fex_state = FExState(
+                filt=self._fex_state.filt.at[i].set(0.0),
+                env=self._fex_state.env.at[i].set(0.0))
+        if self._audio_rem is not None and self._audio_rem.shape[1]:
+            self._audio_rem[i] = 0.0
 
     def summary(self) -> StreamSummary:
         """Fetch device telemetry ONCE and price it with the IC model."""
@@ -182,11 +343,21 @@ class StreamingKwsSession:
         frames = max(int(acc.frames), 1)
         macs_pf = float(acc.macs) / frames
         dense_pf = float(acc.macs_dense) / frames
-        c = frame_cost(macs_pf)
+        # Active FEx channels: known only when a FEx is attached (audio
+        # mode); feature-mode sessions keep the paper's 10-channel model
+        # default — the GRU input width is NOT a channel count.
+        n_ch = self._fex.cfg.n_active if self._fex is not None else 10
+        c = frame_cost(macs_pf, n_channels=n_ch)
         return StreamSummary(
             frames=int(acc.frames), chunks=self._chunks,
             sparsity=1.0 - float(acc.macs) / max(float(acc.macs_dense), 1.0),
             energy_nj_per_decision=c.energy_nj_per_decision,
             latency_ms=c.latency_ms,
-            dense_energy_nj=frame_cost(dense_pf).energy_nj_per_decision,
+            dense_energy_nj=frame_cost(dense_pf,
+                                       n_channels=n_ch).energy_nj_per_decision,
+            fex_samples=int(acc.fex_samples),
+            # Priced from COUNTED samples (audio-in mode); agrees with the
+            # model's per-frame FEx share when every frame saw 128 samples.
+            fex_energy_nj_per_decision=fex_energy_nj(
+                float(acc.fex_samples), n_ch) / frames,
         )

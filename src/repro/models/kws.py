@@ -63,6 +63,21 @@ def forward(params, cfg, feats: Array, threshold: float | None = None,
     return logits, stats
 
 
+def forward_audio(params, cfg, audio: Array, fex, *,
+                  threshold: float | None = None, quantize_8b: bool = False,
+                  backend: str | None = None, fex_backend: str | None = None):
+    """Raw audio (B, T) → (logits (B, 12), stats): one device-side
+    audio→decision graph — FEx → ΔGRU → FC with no host hop.
+
+    ``fex`` is a ``frontend.fex.FeatureExtractor`` (static: close over it
+    when jitting).  ``fex_backend`` picks the FEx path ("pallas" = the
+    batched sequence-resident kernel, "xla" = the bit-exact scan); both
+    are float-exact against each other, so the choice is invisible.
+    """
+    feats, _ = fex.scan(audio, None, backend=fex_backend)
+    return forward(params, cfg, feats, threshold, quantize_8b, backend)
+
+
 def loss_fn(params, cfg, batch: dict, threshold: float | None = None,
             quantize_8b: bool = False):
     logits, stats = forward(params, cfg, batch["feats"], threshold,

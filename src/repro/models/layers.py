@@ -21,6 +21,25 @@ BIG_WINDOW = 1 << 30
 
 
 # ------------------------------------------------------------------- utils
+@jax.custom_jvp
+def _sp_barrier(x: Array) -> Array:
+    """``optimization_barrier`` with an identity differentiation rule.
+
+    The barrier pins the SP gather below the f32→bf16 cast in the primal
+    computation; jax (≤0.4.x) has no AD rule for the primitive, so the
+    tangent/cotangent passes through unbarriered — the scheduling hint is
+    a forward-pass concern and must not constrain (or break) the backward
+    graph, which a scanned train-step body differentiates.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@_sp_barrier.defjvp
+def _sp_barrier_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return jax.lax.optimization_barrier(x), dx
+
+
 def _init(key, shape, dtype, scale=None):
     scale = scale if scale is not None else 1.0 / np.sqrt(shape[0] if len(shape) == 1 else shape[-2])
     return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
@@ -138,8 +157,7 @@ def apply_attention(p, cfg, x: Array, shd: Sharder, *,
         # Explicit SP gather point: gather the seq-sharded residual HERE,
         # in bf16 — the optimization barrier stops XLA from hoisting the
         # gather above the norm's f32→bf16 cast (2× the bytes; §Perf).
-        x = shd.act(jax.lax.optimization_barrier(x),
-                    ("batch", "seq", "act_embed"))
+        x = shd.act(_sp_barrier(x), ("batch", "seq", "act_embed"))
 
     q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
     if cfg.qkv_bias:
@@ -523,7 +541,7 @@ def apply_mlp(p, cfg, x: Array, shd: Sharder, act=None) -> Array:
     from jax.ad_checkpoint import checkpoint_name
     act = act or cfg.mlp_act
     if x.shape[1] > 1:
-        x = shd.act(jax.lax.optimization_barrier(x),
+        x = shd.act(_sp_barrier(x),
                     ("batch", "seq", "act_embed"))      # SP gather in bf16
     h = jnp.einsum("bsd,df->bsf", x, p["wi"])
     h = checkpoint_name(h, "mlp_up")      # selective-remat target (§Perf)

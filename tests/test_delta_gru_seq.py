@@ -162,7 +162,8 @@ class TestStreamingSession:
         assert out.votes.shape == (12, 3)
         out = sess.process_chunk(feats)
         s = sess.summary()
-        assert s.frames == 24 and s.chunks == 2
+        # frames counts DECISIONS: 2 chunks × 12 frames × 3 streams
+        assert s.frames == 72 and s.chunks == 2
         assert 0.0 <= s.sparsity <= 1.0
         assert s.energy_nj_per_decision <= s.dense_energy_nj + 1e-9
 

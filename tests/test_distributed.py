@@ -8,10 +8,23 @@ import pytest
 
 REPO = pathlib.Path(__file__).parent.parent
 
-SHARDED_EQUIV = r"""
+# jax<0.5 has no jax.sharding.AxisType; explicit-Auto axis types are the
+# default there, so the kwarg is simply dropped when unavailable.
+MAKE_MESH = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+
+def make_mesh(shape, names):
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(shape))
+    return jax.make_mesh(shape, names)
+"""
+
+SHARDED_EQUIV = MAKE_MESH + r"""
+import jax.numpy as jnp, numpy as np
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.launch.steps import build_train_step
@@ -23,8 +36,7 @@ cfg = get_smoke_config("qwen2-0.5b")
 shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
 ocfg = opt.AdamWConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 key = jax.random.PRNGKey(0)
 tokens = jax.random.randint(key, (8, 32), 0, cfg.vocab_size)
 batch = {"tokens": tokens, "labels": tokens}
@@ -54,18 +66,14 @@ assert frac_close > 0.97, frac_close
 print("SHARDED_EQUIV_OK", l1, l2)
 """
 
-ELASTIC_RESHARD = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+ELASTIC_RESHARD = MAKE_MESH + r"""
 import tempfile
-import jax, jax.numpy as jnp, numpy as np
+import jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import checkpoint as ckpt
 
-mesh8 = jax.make_mesh((8,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
-mesh4 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh8 = make_mesh((8,), ("data",))
+mesh4 = make_mesh((4, 2), ("data", "model"))
 x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 x8 = jax.device_put(x, NamedSharding(mesh8, P("data", None)))
 d = tempfile.mkdtemp()
@@ -78,16 +86,13 @@ assert back["w"].sharding == tgt
 print("ELASTIC_OK")
 """
 
-MULTIPOD_COLLECTIVES = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+MULTIPOD_COLLECTIVES = MAKE_MESH + r"""
+import jax.numpy as jnp, numpy as np
 from repro.parallel.sharding import Sharder
 
 # 3-axis mini production mesh: proves the pod axis shards and the
 # gradient all-reduce spans pods
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 shd = Sharder(mesh=mesh)
 spec = shd.spec((8, 16), ("batch", "mlp"))
 assert spec == jax.sharding.PartitionSpec(("pod", "data"), "model"), spec
@@ -107,6 +112,7 @@ print("MULTIPOD_OK")
 """
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name,script", [
     ("sharded_equivalence", SHARDED_EQUIV),
     ("elastic_reshard", ELASTIC_RESHARD),

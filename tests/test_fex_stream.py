@@ -1,0 +1,176 @@
+"""Batched sequence-resident FEx kernel + audio-in streaming tests.
+
+Three contracts (ISSUE 2 acceptance):
+  * the Pallas FEx kernel is FLOAT-EXACT against the XLA ``lax.scan``
+    reference (single-source per-sample math, same op order);
+  * both are correct against the ``filters.sosfilt_np`` float64 oracle;
+  * chunk boundaries — frame-aligned or not — are bit-invisible, at the
+    ``fex_scan`` level and through the fused audio→decision session.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.frontend import filters
+from repro.frontend.fex import (FExConfig, FeatureExtractor, build_sos_bank,
+                                fex_scan, init_fex_state)
+from repro.kernels.iir_fex import batched_iir_fex, pack_coefficients
+from repro.kernels.ops import init_fex_kernel_state
+
+KEY = jax.random.PRNGKey(0)
+CFG = FExConfig()
+COEF = pack_coefficients(build_sos_bank(CFG))
+
+
+def _audio(B, T, seed=0, scale=0.5):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-scale, scale, (B, T)), jnp.float32)
+
+
+# ------------------------------------------------------- oracle correctness
+def test_kernel_matches_sosfilt_oracle():
+    """env_alpha=1 turns the envelope LP into |y|, so frame outputs are
+    exactly the rectified float64 DF2T cascade, decimated."""
+    bank = build_sos_bank(CFG)
+    x = np.asarray(_audio(1, 2048)[0], np.float64)
+    feats, _ = batched_iir_fex(
+        jnp.asarray(x, jnp.float32)[None], COEF,
+        init_fex_kernel_state(1, CFG.n_active), frame_shift=128,
+        env_alpha=1.0, compress=False)
+    got = np.asarray(feats[0])                       # (16, C)
+    for ch in range(CFG.n_active):
+        y = filters.sosfilt_np(bank[ch], x)
+        want = np.abs(y)[127::128]
+        np.testing.assert_allclose(got[:, ch], want, rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------- pallas vs xla scan float-exact
+@pytest.mark.parametrize("compress", [True, False])
+@pytest.mark.parametrize("B,T,block_b", [(1, 1024, None), (4, 2048, None),
+                                         (8, 1024, 2)])
+def test_pallas_float_exact_vs_xla_scan(B, T, block_b, compress):
+    audio = _audio(B, T, seed=B + T)
+    state = init_fex_state(B, CFG.n_active)
+    fx, sx = fex_scan(audio, COEF, state, env_alpha=CFG.env_alpha,
+                      compress=compress, backend="xla")
+    fp, sp = fex_scan(audio, COEF, state, env_alpha=CFG.env_alpha,
+                      compress=compress, backend="pallas", block_b=block_b)
+    np.testing.assert_array_equal(np.asarray(fx), np.asarray(fp))
+    np.testing.assert_array_equal(np.asarray(sx.filt), np.asarray(sp.filt))
+    np.testing.assert_array_equal(np.asarray(sx.env), np.asarray(sp.env))
+
+
+def test_fex_backend_rejects_unknown():
+    with pytest.raises(ValueError):
+        fex_scan(_audio(1, 256), COEF, backend="cuda")
+
+
+# ------------------------------------------------- chunk-boundary carrying
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fex_scan_state_carry_bit_invisible(backend):
+    """[a | b] through two calls with the state carried == one call on the
+    concatenation, bit for bit (frame-aligned split: the kernel consumes
+    whole frames; sample-level remainders are the session's job)."""
+    audio = _audio(3, 2048, seed=7)
+    kw = dict(env_alpha=CFG.env_alpha, backend=backend)
+    once, _ = fex_scan(audio, COEF, **kw)
+    f1, s1 = fex_scan(audio[:, :768], COEF, **kw)
+    f2, _ = fex_scan(audio[:, 768:], COEF, s1, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate([f1, f2], axis=1)), np.asarray(once))
+
+
+def test_feature_extractor_call_matches_scan_and_is_12bit():
+    fex = FeatureExtractor()
+    audio = _audio(2, 4000, seed=3)
+    feats = fex(audio)
+    assert feats.shape == (2, 31, 10)
+    steps = np.asarray(feats) / 2.0 ** -11
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-3)
+    feats_p = fex(audio, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(feats), np.asarray(feats_p))
+
+
+# ------------------------------------------------------ audio-in sessions
+class TestAudioInSession:
+    def _session(self, batch=1, **kw):
+        from repro.configs import get_config
+        from repro.launch.streaming import StreamingKwsSession
+        from repro.models import kws
+        cfg = get_config("deltakws")
+        params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg, input_dim=10)
+        fex = FeatureExtractor()
+        sess = StreamingKwsSession(params, cfg, threshold=0.1, batch=batch,
+                                   fex=fex, **kw)
+        return cfg, params, fex, sess
+
+    def test_unaligned_chunks_equal_oneshot(self):
+        """Audio split at NON-frame-aligned offsets (the remainder carry)
+        must be bit-invisible in the logits."""
+        cfg, params, fex, sess = self._session()
+        audio = np.asarray(_audio(1, 8000, seed=11)[0])
+        outs = [sess.process_audio(audio[a:b])
+                for a, b in [(0, 3000), (3000, 5005), (5005, 8000)]]
+        chunked = jnp.concatenate(
+            [o.logits for o in outs if o.logits.shape[0]], axis=0)
+        _, _, _, sess2 = self._session()
+        once = sess2.process_audio(audio).logits
+        np.testing.assert_array_equal(np.asarray(chunked), np.asarray(once))
+
+    def test_audio_path_equals_feature_path(self):
+        """Feeding raw audio must produce the same per-frame logits as
+        pre-computing features and feeding them (same weights/state)."""
+        cfg, params, fex, sess = self._session()
+        audio = np.asarray(_audio(1, 4096, seed=13)[0])
+        lg_audio = sess.process_audio(audio).logits
+        from repro.launch.streaming import StreamingKwsSession
+        sess_f = StreamingKwsSession(params, cfg, threshold=0.1)
+        feats = fex(jnp.asarray(audio[None]))[0]       # (F, C)
+        lg_feats = sess_f.process_chunk(feats).logits
+        np.testing.assert_array_equal(np.asarray(lg_audio),
+                                      np.asarray(lg_feats))
+
+    def test_short_chunk_buffers_without_frames(self):
+        cfg, params, fex, sess = self._session()
+        out = sess.process_audio(np.zeros(100, np.float32))   # < one frame
+        assert out.logits.shape[0] == 0
+        out = sess.process_audio(np.zeros(100, np.float32))
+        assert out.logits.shape[0] == 1                       # 200 // 128
+        assert sess.summary().frames == 1
+
+    def test_batched_streams_fex_telemetry(self):
+        cfg, params, fex, sess = self._session(batch=3)
+        audio = np.asarray(_audio(3, 2048, seed=17))
+        out = sess.process_audio(audio)
+        assert out.votes.shape == (16, 3)
+        s = sess.summary()
+        # decisions (and samples) count across all 3 streams
+        assert s.frames == 16 * 3 and s.fex_samples == 16 * 3 * 128
+        assert s.fex_energy_nj_per_decision > 0.0
+
+    def test_reset_stream_isolates_one_slot(self):
+        """Resetting slot 0 re-zeroes exactly that stream: replaying its
+        audio reproduces its fresh-stream logits while slot 1 diverges
+        from a fresh stream (it kept its state)."""
+        cfg, params, fex, sess = self._session(batch=2)
+        audio = np.asarray(_audio(2, 2048, seed=19))
+        first = sess.process_audio(audio).logits
+        sess.reset_stream(0)
+        again = sess.process_audio(audio).logits
+        np.testing.assert_array_equal(np.asarray(again[:, 0]),
+                                      np.asarray(first[:, 0]))
+        assert not np.array_equal(np.asarray(again[:, 1]),
+                                  np.asarray(first[:, 1]))
+
+    def test_forward_audio_matches_offline_pipeline(self):
+        from repro.models import kws
+        cfg, params, fex, _ = self._session()
+        audio = _audio(2, 4096, seed=23)
+        lg_a, st_a = kws.forward_audio(params, cfg, audio, fex,
+                                       threshold=0.1)
+        feats = fex(audio)
+        lg_f, st_f = kws.forward(params, cfg, feats, threshold=0.1)
+        np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_f))
+        np.testing.assert_array_equal(np.asarray(st_a.macs),
+                                      np.asarray(st_f.macs))
