@@ -6,12 +6,16 @@ Trains on SynthCommands (GSCD offline fallback), then shows the paper's
 headline trade-off: accuracy / temporal sparsity / energy / latency vs
 the delta threshold.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run with the exact command README.md documents (repro.commands is the
+single source of truth for both):
+
+    PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import commands
 from repro.configs import get_config
 from repro.core import temporal_sparsity
 from repro.core.energy_model import cost_from_sparsity
@@ -62,6 +66,10 @@ def main():
               f"  {c.energy_nj_per_decision:11.2f}  {c.latency_ms:10.2f}")
     print("\npaper design point: 87% sparsity → 36.11 nJ, 6.9 ms "
           "(3.4× / 2.4× vs dense)")
+    print("\nnext steps (commands as documented in README.md):")
+    print(f"  stream raw audio:   {commands.STREAM_EXAMPLE_CMD}")
+    print(f"  serve a slot pool:  {commands.SERVE_CMD}")
+    print(f"  shard the slots:    {commands.SERVE_SHARDED_CMD}")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,10 @@ telemetry all carry across chunk boundaries on device; the host fetches
 device results once per chunk and the energy/sparsity summary once at
 the end.
 
-Run:  PYTHONPATH=src python examples/serve_streaming_kws.py
+Run with the exact command README.md documents (repro.commands is the
+single source of truth for both):
+
+    PYTHONPATH=src python examples/serve_streaming_kws.py
 """
 import pathlib
 import sys
@@ -21,6 +24,7 @@ import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))  # benchmarks/
 from benchmarks.common import train_kws
+from repro import commands
 from repro.core.energy_model import frame_cost
 from repro.data.gscd import _SPECS, _synth_keyword, _synth_silence, _synth_unknown
 from repro.launch.streaming import StreamingKwsSession
@@ -77,6 +81,10 @@ def main():
           f"{s.fex_samples} counted samples)  "
           f"avg latency {s.latency_ms:.2f} ms "
           f"(dense would be {s.dense_energy_nj:.1f} nJ)")
+    print("\nto serve MANY concurrent streams (commands as documented "
+          "in README.md):")
+    print(f"  one device:  {commands.SERVE_CMD}")
+    print(f"  sharded:     {commands.SERVE_SHARDED_CMD}")
 
 
 if __name__ == "__main__":

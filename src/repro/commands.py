@@ -1,0 +1,45 @@
+"""Canonical operator command lines — the single source of truth.
+
+README.md documents these commands, the examples print them, and the
+docs-sanity step (tests/test_docs.py, run in CI) asserts that every
+string below appears VERBATIM in a README code block and still parses
+against the CLIs it names.  Change a command here and the test walks you
+through updating every surface that shows it.
+"""
+from __future__ import annotations
+
+# Install + verify ----------------------------------------------------------
+INSTALL_CMD = "pip install -r requirements.txt"
+TIER1_CMD = "PYTHONPATH=src python -m pytest -x -q"
+SLOW_TESTS_CMD = ("PYTHONPATH=src python -m pytest -m slow -q "
+                  "tests/test_distributed.py tests/test_serve.py")
+
+# Quickstart ----------------------------------------------------------------
+QUICKSTART_CMD = "PYTHONPATH=src python examples/quickstart.py"
+TRAIN_CMD = "PYTHONPATH=src python examples/train_kws_e2e.py"
+STREAM_EXAMPLE_CMD = "PYTHONPATH=src python examples/serve_streaming_kws.py"
+
+# Serving -------------------------------------------------------------------
+SERVE_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
+             "--mode kws-audio --slots 8 --requests 16")
+SERVE_SHARDED_CMD = (
+    "XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+    "PYTHONPATH=src python -m repro.launch.serve "
+    "--mode kws-audio --devices 2 --slots 32 --requests 64")
+
+# Benchmarks ----------------------------------------------------------------
+SERVE_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/serve_bench.py"
+KERNEL_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/kernel_bench.py"
+
+ALL_COMMANDS = {
+    "install": INSTALL_CMD,
+    "tier1": TIER1_CMD,
+    "slow_tests": SLOW_TESTS_CMD,
+    "quickstart": QUICKSTART_CMD,
+    "train": TRAIN_CMD,
+    "stream_example": STREAM_EXAMPLE_CMD,
+    "serve": SERVE_CMD,
+    "serve_sharded": SERVE_SHARDED_CMD,
+    "serve_bench": SERVE_BENCH_CMD,
+    "kernel_bench": KERNEL_BENCH_CMD,
+}

@@ -1,4 +1,4 @@
-"""Platform detection for Pallas kernel execution mode.
+"""Platform detection for Pallas kernel execution mode + mesh interplay.
 
 The kernels in this package TARGET TPU; every other backend (the CPU
 container, GPU hosts) runs them through the Pallas interpreter, which
@@ -9,12 +9,29 @@ platform-appropriate mode and may still force either mode per call.
 ``REPRO_PALLAS_INTERPRET=0|1`` overrides detection globally — useful to
 smoke-test the compiled path from a TPU-attached CI lane or to force
 interpretation while debugging on TPU.
+
+Mesh interplay (DESIGN.md §6): the sharded serving engine maps the
+fused FEx→ΔGRU graph over a device mesh with ``shard_map``.
+``pallas_call`` has no SPMD replication rule, so shard_map's output
+replication checker cannot analyse a graph containing one — every
+shard_map over these kernels must pass ``check_rep=False``.  That is a
+*checker* limitation, not a numerics one: the kernels are elementwise
+along the batch/slot axis, so the per-shard bodies are exactly the
+single-device math on a batch slice (asserted bit-for-bit in
+tests/test_serve.py).  ``shard_map_kernels`` is the single place that
+encodes this contract; use it instead of calling shard_map directly so
+the flag (and the import-path shim across jax versions) lives here.
 """
 from __future__ import annotations
 
 import os
 
 import jax
+
+try:  # jax >= 0.6 promotes shard_map out of experimental
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 _ENV_VAR = "REPRO_PALLAS_INTERPRET"
 
@@ -30,3 +47,20 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: bool | None) -> bool:
     """Per-call override wins; ``None`` means platform detection."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def shard_map_kernels(fn, mesh, *, in_specs, out_specs):
+    """``shard_map`` for graphs that may contain ``pallas_call``.
+
+    Always disables the replication checker (see module docstring): the
+    serving graphs sharded here are batch-elementwise, so per-shard
+    execution is the single-device computation on a slot slice — in both
+    interpret mode (CPU/GPU) and compiled mode (TPU).
+    """
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        # jax >= 0.6 renamed the replication-checker flag to check_vma.
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)

@@ -29,6 +29,35 @@ def make_host_mesh(model: int = 1):
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
+def make_slot_mesh(devices: int | None = None):
+    """1-D ("data",) mesh for the sharded KWS serving engine (DESIGN.md §6).
+
+    The engine partitions its SLOT axis (one live audio stream per slot)
+    over this single axis; weights are replicated, so the mesh never needs
+    a "model" dimension.  ``devices=None`` uses every visible device.
+    Returns ``None`` for a single device — the engine's unsharded path is
+    bit-identical, so a 1-device mesh would only add shard_map overhead.
+    """
+    avail = jax.devices()
+    n = len(avail) if devices is None else devices
+    if n > len(avail):
+        raise ValueError(f"asked for {n} devices, only {len(avail)} visible "
+                         f"(CPU hosts: set {host_device_flags(n)} before "
+                         f"the first jax import)")
+    if n <= 1:
+        return None
+    return jax.make_mesh((n,), ("data",), devices=avail[:n])
+
+
+def host_device_flags(n: int) -> str:
+    """XLA_FLAGS value that splits a CPU host into ``n`` virtual devices.
+
+    Must be in the environment BEFORE jax initializes — serve_bench.py and
+    tests/test_serve.py set it in child processes for exactly that reason.
+    """
+    return f"XLA_FLAGS=--xla_force_host_platform_device_count={n}"
+
+
 # v5e hardware constants for the roofline (per chip).
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

@@ -14,10 +14,17 @@ sampling, and per-step telemetry (tokens/s, slot occupancy).
 KWS mode serves RAW AUDIO utterances through one ``StreamingKwsSession``
 whose batch dimension is the slot pool: every serve step is ONE fused
 device-side FEx→ΔGRU→FC chunk step across all slots, a finished
-utterance's slot is re-admitted from the queue via ``reset_stream`` (a
-device-side row reset — the other streams' state is untouched), and the
-host fetches one vote block per chunk plus one energy/sparsity summary at
-the end (DESIGN.md §5).
+utterance's slot is evicted and the queue re-admitted via
+``SlotScheduler`` (slot-local device row resets — the other streams'
+state is untouched), and the host fetches one vote block per chunk plus
+one energy/sparsity summary at the end (DESIGN.md §5).
+
+With ``--devices N`` (and, on a CPU host,
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported before
+launch) the SAME loop drives the sharded engine: the slot pool is
+partitioned over an N-device mesh, weights are replicated, and the
+scheduler balances admissions across shards (DESIGN.md §6).  Decisions
+are bit-identical to ``--devices 1``.
 """
 from __future__ import annotations
 
@@ -33,7 +40,8 @@ def _kws_audio_main(args) -> int:
     from repro.data.gscd import T as UTT_SAMPLES
     from repro.data.gscd import synth_batch
     from repro.frontend import FeatureExtractor
-    from repro.launch.streaming import StreamingKwsSession
+    from repro.launch.mesh import make_slot_mesh
+    from repro.launch.streaming import SlotScheduler, StreamingKwsSession
     from repro.models import kws
     from repro.train import optimizer as opt
 
@@ -64,65 +72,71 @@ def _kws_audio_main(args) -> int:
 
     # Request queue: synthesized 1 s utterances with ground-truth labels.
     audio_q, label_q = synth_batch(np.random.default_rng(1), args.requests)
-    queue = list(range(args.requests))
     chunk = args.chunk_samples
     chunks_per_utt = -(-UTT_SAMPLES // chunk)
 
+    mesh = make_slot_mesh(args.devices) if args.devices != 1 else None
     sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
-                               batch=args.slots, fex=fex)
+                               batch=args.slots, fex=fex, mesh=mesh)
+    sched = SlotScheduler(sess)
+    for req in range(args.requests):
+        sched.submit(req)
     real_frames = UTT_SAMPLES // fex.cfg.frame_shift   # frames of real audio
-    # slot -> [request id, chunks consumed, real frames left to vote on]
-    slots: dict[int, list | None] = {s: None for s in range(args.slots)}
+    # slot -> [chunks consumed, real frames left to vote on]
+    progress: dict[int, list] = {}
     votes = np.zeros((args.slots, kws.N_CLASSES), np.int64)
     done: list[tuple[int, int]] = []            # (request, predicted class)
 
-    def admit(s):
-        votes[s] = 0
-        if queue:
-            slots[s] = [queue.pop(0), 0, real_frames]
-            sess.reset_stream(s)
-        else:
-            slots[s] = None
+    def admit():
+        for slot, _req in sched.admit():       # slot-local device reset
+            votes[slot] = 0
+            progress[slot] = [0, real_frames]
 
     t0 = time.time()
     steps = frames_served = pad_frames = 0
-    for s in range(args.slots):
-        admit(s)
-    while any(v is not None for v in slots.values()):
+    step_s: list[float] = []
+    admit()
+    while not sched.idle:
+        ts = time.perf_counter()
         block = np.zeros((args.slots, chunk), np.float32)
-        for s, st in slots.items():
-            if st is None:
-                continue
-            req, c, _ = st
-            seg = audio_q[req, c * chunk:(c + 1) * chunk]
-            block[s, :len(seg)] = seg      # zero-pad a short final chunk
+        for slot, req in sched.live.items():
+            seg = audio_q[req, progress[slot][0] * chunk:
+                          (progress[slot][0] + 1) * chunk]
+            block[slot, :len(seg)] = seg   # zero-pad a short final chunk
         out = sess.process_audio(block)
         v = np.asarray(out.votes)               # ONE fetch per serve step
         n_f = v.shape[0]
-        for s, st in list(slots.items()):
-            if st is None:
-                pad_frames += n_f          # idle slot: zeros streamed, no vote
-                continue
+        pad_frames += n_f * (args.slots - len(sched.live))  # idle slots
+        for slot, req in list(sched.live.items()):
+            st = progress[slot]
             # Only frames backed by real audio cast votes — padding frames
             # (short final chunk) would bias toward the silence response.
-            n_real = min(n_f, st[2])
-            votes[s] += np.bincount(v[:n_real, s], minlength=kws.N_CLASSES)
-            st[2] -= n_real
+            n_real = min(n_f, st[1])
+            votes[slot] += np.bincount(v[:n_real, slot],
+                                       minlength=kws.N_CLASSES)
+            st[1] -= n_real
             frames_served += n_real
             pad_frames += n_f - n_real
-            st[1] += 1
-            if st[1] >= chunks_per_utt:
-                done.append((st[0], int(votes[s].argmax())))
-                admit(s)
+            st[0] += 1
+            if st[0] >= chunks_per_utt:
+                done.append((sched.evict(slot), int(votes[slot].argmax())))
+        admit()
         steps += 1
+        step_s.append(time.perf_counter() - ts)
     dt = time.time() - t0
 
     correct = sum(1 for req, pred in done if pred == int(label_q[req]))
     summ = sess.summary()
     audio_s = len(done) * UTT_SAMPLES / 8000.0
+    # Drop the first step from the percentile view: it carries the jit
+    # compile of the fused audio step, not a serving latency.
+    lat = np.array(step_s[1:] or step_s) * 1e3 if step_s else np.zeros(1)
     print(f"served {len(done)} utterances ({audio_s:.0f} s audio) in "
-          f"{dt:.1f} s — {audio_s / dt:.1f}x realtime, "
+          f"{dt:.1f} s on {sess.n_shards} device(s) — "
+          f"{audio_s / dt:.1f}x realtime, "
           f"{frames_served / dt:.0f} decisions/s, "
+          f"step latency p50 {np.percentile(lat, 50):.1f} / "
+          f"p99 {np.percentile(lat, 99):.1f} ms, "
           f"{correct}/{len(done)} correct")
     pad_note = (f" [telemetry includes {pad_frames} zero-padding/idle-slot "
                 f"frames]" if pad_frames else "")
@@ -133,16 +147,24 @@ def _kws_audio_main(args) -> int:
     return 0
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI (separate from ``main`` so the README docs-sanity
+    test can parse every documented command line against it)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--mode", choices=["lm", "kws-audio"], default="lm")
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--slots", type=int, default=4, help="decode batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode batch / global KWS stream slots "
+                         "(must divide by --devices)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--cache-len", type=int, default=64)
     # kws-audio options
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the slot axis over this many devices "
+                         "(CPU hosts: export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
     ap.add_argument("--chunk-samples", type=int, default=4096,
                     help="raw samples per serve step (~0.5 s; keep it a "
                          "multiple of the 128-sample frame shift so "
@@ -150,7 +172,11 @@ def main(argv=None):
     ap.add_argument("--threshold", type=float, default=0.1)
     ap.add_argument("--train-steps", type=int, default=120,
                     help="quick detector training (0 = random weights)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     if args.mode == "kws-audio":
         return _kws_audio_main(args)

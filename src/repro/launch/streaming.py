@@ -24,12 +24,27 @@ equals processing the concatenation in one shot, bit for bit, including
 audio chunks that end mid-frame (the trailing ``< frame_shift`` samples
 are carried host-side and prepended to the next chunk — they are host
 data already, so no device sync is involved).
+
+Scale-out (DESIGN.md §6): pass ``mesh=make_slot_mesh(...)`` and the
+session becomes a sharded continuous-batching engine — the SLOT axis
+(one live stream per slot) is partitioned over the mesh's "data" axis
+with ``shard_map``, weights/coefficients are replicated, per-stream
+FEx+ΔGRU state and telemetry are sharded on slots, and the hot path has
+neither host syncs nor cross-device collectives (telemetry is kept as
+per-shard partial sums, reduced on the host once per ``summary()``).
+``reset_stream`` is slot-local — a jitted dynamic row update that only
+the owning shard executes — so stream churn on one shard never stalls
+the others.  At mesh=None (or one device) the engine is bit-identical
+to the original single-device session.  ``SlotScheduler`` maps a
+request queue onto the global slots, balancing admissions across
+shards.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +55,10 @@ from repro.core.energy_model import fex_energy_nj, frame_cost
 from repro.core.quantize import quantize_audio_12b
 from repro.frontend.fex import (FeatureExtractor, FExConfig, FExState,
                                 fex_scan, init_fex_state)
-from repro.kernels.platform import resolve_interpret
+from repro.kernels.platform import resolve_interpret, shard_map_kernels
 from repro.models import kws
+from repro.parallel import sharding as shp
+from jax.sharding import PartitionSpec as P
 
 Array = jax.Array
 
@@ -60,13 +77,18 @@ class _Accum(NamedTuple):
     ``frames``/``fex_samples`` count DECISIONS / samples across ALL
     streams of the batch (matching ``macs``, which is batch-summed), so
     per-decision quantities stay correct for multi-stream sessions.
+
+    Every field is a ``(n_shards,)`` vector of PER-SHARD partial sums
+    (``(1,)`` unsharded).  Keeping the partials sharded instead of
+    psum-reducing them keeps the hot path free of collectives — the one
+    host-side ``summary()`` fetch does the final reduction.
     """
 
-    macs: Array         # () f32 — ΔGRU MACs actually executed
-    macs_dense: Array   # () f32 — dense-equivalent MACs
-    frames: Array       # () i32
-    fex_samples: Array  # () f32 — raw audio samples through the FEx
-                        #         (f32 like macs: an always-on stream
+    macs: Array         # (n_shards,) f32 — ΔGRU MACs actually executed
+    macs_dense: Array   # (n_shards,) f32 — dense-equivalent MACs
+    frames: Array       # (n_shards,) i32
+    fex_samples: Array  # (n_shards,) f32 — raw audio samples through the
+                        #         FEx (f32 like macs: an always-on stream
                         #          overflows int32 within ~3 days)
 
 
@@ -82,11 +104,11 @@ class StreamSummary:
     fex_energy_nj_per_decision: float = 0.0
 
 
-def _zero_accum() -> _Accum:
-    return _Accum(macs=jnp.zeros((), jnp.float32),
-                  macs_dense=jnp.zeros((), jnp.float32),
-                  frames=jnp.zeros((), jnp.int32),
-                  fex_samples=jnp.zeros((), jnp.float32))
+def _zero_accum(n_shards: int = 1) -> _Accum:
+    return _Accum(macs=jnp.zeros((n_shards,), jnp.float32),
+                  macs_dense=jnp.zeros((n_shards,), jnp.float32),
+                  frames=jnp.zeros((n_shards,), jnp.int32),
+                  fex_samples=jnp.zeros((n_shards,), jnp.float32))
 
 
 def _classify(w_fc, b_fc, hs, stats):
@@ -144,6 +166,37 @@ def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
     return fex_state, state, acc, out
 
 
+@jax.jit
+def _reset_gru_slots(state: dg.DeltaState, bias, mask) -> dg.DeltaState:
+    """Fresh-stream state for every slot where ``mask`` is True.
+
+    Mask-select instead of per-slot dynamic updates: ONE compiled
+    elementwise op resets an arbitrary admission wave (continuous
+    batching can churn every slot of a shard in one serve step — a
+    dispatch per slot would cost more than the chunk step itself).
+    Slot-local by construction: under a sharded state the op is
+    elementwise along the slot axis, so each shard rewrites only its own
+    rows — no collectives, no reshard, no stall for other shards.
+    """
+    m = mask[:, None]
+
+    def zero(a):
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+
+    return dg.DeltaState(
+        h=zero(state.h), x_hat=zero(state.x_hat), h_hat=zero(state.h_hat),
+        m_x=jnp.where(m, bias.astype(state.m_x.dtype), state.m_x),
+        m_h=zero(state.m_h))
+
+
+@jax.jit
+def _reset_fex_slots(state: FExState, mask) -> FExState:
+    """Quiescent filters for every slot where ``mask`` is True (see above)."""
+    return FExState(
+        filt=jnp.where(mask[:, None, None], 0.0, state.filt),
+        env=jnp.where(mask[:, None], 0.0, state.env))
+
+
 class StreamingKwsSession:
     """Carries FEx + ΔGRU state and telemetry on device across chunks.
 
@@ -162,6 +215,11 @@ class StreamingKwsSession:
         "pallas" when kernels compile (TPU) and the XLA scan under the
         interpreter, where the scan body is faster (identical numerics
         either way, so the choice is invisible).
+      mesh: a 1-D ("data",) device mesh (``launch.mesh.make_slot_mesh``)
+        turning the session into a sharded engine: slots partitioned
+        over the mesh, weights replicated, telemetry per-shard.  ``batch``
+        must divide by the mesh size.  ``None`` (default) = unsharded,
+        bit-identical to the sharded engine on one device.
     """
 
     def __init__(self, params, cfg, *, threshold: float | None = None,
@@ -169,27 +227,33 @@ class StreamingKwsSession:
                  quantize_8b: bool = False, backend: str = "pallas",
                  interpret: bool | None = None,
                  fex: FeatureExtractor | FExConfig | None = None,
-                 fex_backend: str | None = None):
+                 fex_backend: str | None = None, mesh=None):
         self.cfg = cfg
         self.batch = batch
+        self.mesh = mesh
+        self.n_shards = shp.check_slot_partition(mesh, batch)
         self.threshold = (cfg.delta_threshold if threshold is None
                           else threshold)
-        self._gru = kws._gru_params(params, quantize_8b)
-        self._w_fc, self._b_fc = params["w_fc"], params["b_fc"]
+        self._gru, self._w_fc, self._b_fc = kws.serving_weights(
+            params, quantize_8b, mesh)
         self._state: dg.DeltaState | None = None
         self._fex = (FeatureExtractor(fex) if isinstance(fex, FExConfig)
                      else fex)
+        self._coef = None                           # replicated FEx coeffs
         self._fex_state: FExState | None = None
         self._audio_rem: np.ndarray | None = None   # carried tail samples
-        self._acc = _zero_accum()
+        self._acc = shp.put_slot_sharded(_zero_accum(self.n_shards), mesh)
         self._chunks = 0
         self._input_dim = input_dim
         if fex_backend is None:
             fex_backend = "xla" if resolve_interpret(interpret) else "pallas"
         self._fex_backend = fex_backend
-        self._step = jax.jit(functools.partial(
-            _process_chunk, threshold=self.threshold, backend=backend,
-            interpret=interpret))
+        # _process_chunk(gru, w_fc, b_fc, state, acc, feats): state/acc are
+        # slot-major, feats is time-major with slots on axis 1.
+        self._step = jax.jit(self._shard(
+            functools.partial(_process_chunk, threshold=self.threshold,
+                              backend=backend, interpret=interpret),
+            n_args=6, slot_major=(3, 4), time_major=(5,), n_state_out=2))
         self._audio_step_fn = functools.partial(
             _process_audio_chunk, threshold=self.threshold, backend=backend,
             fex_backend=fex_backend, interpret=interpret)
@@ -197,10 +261,36 @@ class StreamingKwsSession:
         if input_dim is not None:
             self._init_state(input_dim)
 
+    def _shard(self, fn, *, n_args: int, slot_major: tuple[int, ...],
+               time_major: tuple[int, ...], n_state_out: int):
+        """Wrap a pure chunk step in shard_map over the slot mesh.
+
+        ``slot_major``: positions of per-stream args with the slot axis
+        FIRST (state trees, telemetry, raw audio) → prefix P("data");
+        ``time_major``: frame-major inputs with slots on axis 1 →
+        P(None, "data"); every other arg (weights, coefficients) is
+        replicated.  Outputs follow the fixed (state…, acc, ChunkResult)
+        convention: ``n_state_out`` slot-major trees then the time-major
+        ChunkResult.  No-op without a mesh — the unsharded session is
+        byte-for-byte the pre-sharding code path.
+        """
+        if self.mesh is None:
+            return fn
+        specs = [P()] * n_args
+        for i in slot_major:
+            specs[i] = P(shp.SLOT_AXIS)
+        for i in time_major:
+            specs[i] = P(None, shp.SLOT_AXIS)
+        out_specs = tuple([P(shp.SLOT_AXIS)] * n_state_out
+                          + [P(None, shp.SLOT_AXIS)])
+        return shard_map_kernels(fn, self.mesh, in_specs=tuple(specs),
+                                 out_specs=out_specs)
+
     def _init_state(self, input_dim: int):
         self._input_dim = input_dim
-        self._state = dg.init_delta_state(
-            self.batch, input_dim, self.cfg.d_model, self._gru)
+        self._state = shp.put_slot_sharded(
+            dg.init_delta_state(self.batch, input_dim, self.cfg.d_model,
+                                self._gru), self.mesh)
 
     def _require_fex(self) -> FeatureExtractor:
         if self._fex is None:
@@ -212,11 +302,19 @@ class StreamingKwsSession:
             raise ValueError(f"FEx emits {fcfg.n_active} channels, session "
                              f"state is {self._input_dim}-wide")
         if self._fex_state is None:
-            self._fex_state = init_fex_state(self.batch, fcfg.n_active)
+            self._coef = shp.put_replicated(self._fex.coef, self.mesh)
+            self._fex_state = shp.put_slot_sharded(
+                init_fex_state(self.batch, fcfg.n_active), self.mesh)
             self._audio_rem = np.zeros((self.batch, 0), np.float32)
-            self._audio_step = jax.jit(functools.partial(
-                self._audio_step_fn, frame_shift=fcfg.frame_shift,
-                env_alpha=fcfg.env_alpha, log_eps=fcfg.log_eps))
+            # _process_audio_chunk(gru, w_fc, b_fc, coef, fex_state, state,
+            # acc, audio): fex_state/state/acc/audio are all slot-major.
+            self._audio_step = jax.jit(self._shard(
+                functools.partial(self._audio_step_fn,
+                                  frame_shift=fcfg.frame_shift,
+                                  env_alpha=fcfg.env_alpha,
+                                  log_eps=fcfg.log_eps),
+                n_args=8, slot_major=(4, 5, 6, 7), time_major=(),
+                n_state_out=3))
         return self._fex
 
     def process_audio(self, audio) -> ChunkResult:
@@ -250,7 +348,7 @@ class StreamingKwsSession:
                 logits=jnp.zeros((0, self.batch, kws.N_CLASSES)),
                 votes=z, nz=z)
         self._fex_state, self._state, self._acc, out = self._audio_step(
-            self._gru, self._w_fc, self._b_fc, fex.coef, self._fex_state,
+            self._gru, self._w_fc, self._b_fc, self._coef, self._fex_state,
             self._state, self._acc,
             jnp.asarray(audio[:, :n_frames * shift]))
         self._chunks += 1
@@ -301,39 +399,64 @@ class StreamingKwsSession:
         if self._input_dim is not None:
             self._init_state(self._input_dim)
         if self._fex_state is not None:
-            self._fex_state = init_fex_state(self.batch, self._input_dim)
+            self._fex_state = shp.put_slot_sharded(
+                init_fex_state(self.batch, self._input_dim), self.mesh)
             self._audio_rem = np.zeros((self.batch, 0), np.float32)
-        self._acc = _zero_accum()
+        self._acc = shp.put_slot_sharded(_zero_accum(self.n_shards),
+                                         self.mesh)
         self._chunks = 0
 
     def reset_stream(self, i: int):
         """Reset ONE stream slot to a fresh-stream state (continuous
         batching: a finished utterance's slot is re-admitted without
-        disturbing the other streams).  Device-side row updates — no sync.
+        disturbing the other streams).  See ``reset_streams``."""
+        self.reset_streams([i])
+
+    def reset_streams(self, slots):
+        """Reset a WAVE of stream slots to fresh-stream state in one go.
+
+        Slot-LOCAL device-side updates — no sync, and under a mesh no
+        collectives either: the jitted mask-select is elementwise along
+        the (sharded) slot axis, so each shard rewrites only its own
+        rows and churn on one shard never stalls the streams on others.
+        Batched on purpose: continuous batching can re-admit dozens of
+        slots after one serve step, and a dispatch per slot would
+        dominate the step itself; a wave is two dispatches total.
 
         Caveat: the carried sample remainder's LENGTH is shared across
-        streams, so the reset zeroes slot ``i``'s buffered samples but
+        streams, so the reset zeroes a slot's buffered samples but
         cannot drop them — after a reset mid-remainder the new stream
         starts up to ``frame_shift−1`` zero samples early relative to a
         fresh session.  Feed frame-aligned chunks (the serve launcher's
         default) to keep resets exactly fresh."""
-        if not (0 <= i < self.batch):
-            raise ValueError(f"stream {i} out of range [0, {self.batch})")
+        slots = list(slots)
+        for i in slots:
+            if not (0 <= i < self.batch):
+                raise ValueError(f"stream {i} out of range [0, {self.batch})")
+        if not slots:
+            return
+        mask = np.zeros((self.batch,), bool)
+        mask[slots] = True
+        mask = jnp.asarray(mask)
         if self._state is not None:
-            z = dg.init_delta_state(1, self._input_dim, self.cfg.d_model,
-                                    self._gru)
-            self._state = dg.DeltaState(*[
-                s.at[i].set(z0[0]) for s, z0 in zip(self._state, z)])
+            self._state = _reset_gru_slots(self._state, self._gru.b, mask)
         if self._fex_state is not None:
-            self._fex_state = FExState(
-                filt=self._fex_state.filt.at[i].set(0.0),
-                env=self._fex_state.env.at[i].set(0.0))
+            self._fex_state = _reset_fex_slots(self._fex_state, mask)
         if self._audio_rem is not None and self._audio_rem.shape[1]:
-            self._audio_rem[i] = 0.0
+            self._audio_rem[slots] = 0.0
+
+    def shard_of_slot(self, i: int) -> int:
+        """Which mesh shard owns global slot ``i`` (block partitioning)."""
+        return i // (self.batch // self.n_shards)
 
     def summary(self) -> StreamSummary:
-        """Fetch device telemetry ONCE and price it with the IC model."""
-        acc = jax.device_get(self._acc)
+        """Fetch device telemetry ONCE and price it with the IC model.
+
+        The fetch is the only cross-shard reduction in the engine: the
+        per-shard partial sums come back as ``(n_shards,)`` vectors and
+        are summed here, on the host.
+        """
+        acc = _Accum(*[a.sum() for a in jax.device_get(self._acc)])
         if int(acc.frames) == 0:
             # Nothing processed yet: report an identifiable empty state,
             # not a spurious 100%-sparsity / 0-energy datapoint.
@@ -361,3 +484,82 @@ class StreamingKwsSession:
             fex_energy_nj_per_decision=fex_energy_nj(
                 float(acc.fex_samples), n_ch) / frames,
         )
+
+
+class SlotScheduler:
+    """Admission/eviction queue mapping live streams onto global slots.
+
+    Host-side bookkeeping only — nothing here touches the device except
+    the slot-local ``reset_stream`` issued at admission, so scheduling
+    never adds a sync to the hot path.  Under a sharded session the free
+    list is kept PER SHARD and admissions go to the least-loaded shard:
+    with churn (utterances finishing at different times) this keeps every
+    device's slot tile near-equally occupied instead of draining one
+    shard while another is full — the whole-batch step always runs at the
+    speed of the busiest shard, so balance IS throughput.
+
+    Usage::
+
+        sched = SlotScheduler(sess)
+        sched.submit(request_id)          # any hashable payload
+        for slot, req in sched.admit():   # fills free slots, resets them
+            ...
+        sched.evict(slot)                 # stream finished; slot is free
+    """
+
+    def __init__(self, session: StreamingKwsSession):
+        self._sess = session
+        self.n_slots = session.batch
+        self.n_shards = session.n_shards
+        self._queue: collections.deque = collections.deque()
+        self._free: list[list[int]] = [[] for _ in range(self.n_shards)]
+        for s in range(self.n_slots - 1, -1, -1):    # pop() yields low first
+            self._free[session.shard_of_slot(s)].append(s)
+        self.live: dict[int, Any] = {}               # slot -> payload
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def idle(self) -> bool:
+        return not self.live and not self._queue
+
+    def submit(self, payload: Any):
+        """Enqueue one stream request (admitted at the next ``admit()``)."""
+        self._queue.append(payload)
+
+    def occupancy(self) -> list[int]:
+        """Live streams per shard (the balance ``admit`` maintains)."""
+        counts = [0] * self.n_shards
+        for slot in self.live:
+            counts[self._sess.shard_of_slot(slot)] += 1
+        return counts
+
+    def admit(self) -> list[tuple[int, Any]]:
+        """Map queued requests onto free slots, least-loaded shard first.
+
+        The whole admission wave is reset to fresh-stream state with ONE
+        batched slot-local reset (see ``reset_streams``).  Returns the
+        (slot, payload) admissions.
+        """
+        admitted = []
+        while self._queue and any(self._free):
+            shard = min((s for s in range(self.n_shards) if self._free[s]),
+                        key=self._shard_load)
+            slot = self._free[shard].pop()
+            payload = self._queue.popleft()
+            self.live[slot] = payload
+            admitted.append((slot, payload))
+        if admitted:
+            self._sess.reset_streams([slot for slot, _ in admitted])
+        return admitted
+
+    def _shard_load(self, shard: int) -> int:
+        per = self.n_slots // self.n_shards
+        return per - len(self._free[shard])
+
+    def evict(self, slot: int) -> Any:
+        """Free a finished stream's slot; returns its payload."""
+        payload = self.live.pop(slot)
+        self._free[self._sess.shard_of_slot(slot)].append(slot)
+        return payload

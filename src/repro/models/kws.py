@@ -1,4 +1,13 @@
-"""The paper's model: IIR FEx → ΔGRU(64) → FC(12) keyword spotter."""
+"""The paper's model: IIR FEx → ΔGRU(64) → FC(12) keyword spotter.
+
+Training/eval entry points (``forward``, ``forward_audio``, ``loss_fn``)
+are single-device; serving goes through ``launch.streaming`` which keeps
+all stream state device-resident.  For the sharded serving engine
+(DESIGN.md §6) the weights are deliberately REPLICATED over the mesh —
+at 64 hidden units the whole model is ~100 KB, so partitioning it would
+trade a free local read for per-step collectives; ``serving_weights``
+packages exactly that contract.
+"""
 from __future__ import annotations
 
 import functools
@@ -43,6 +52,19 @@ def _gru_params(params, quantize_8b: bool):
             return ste_quantize(w / scale, WEIGHT_Q) * scale
         w_x, w_h = q(w_x), q(w_h)
     return dg.DeltaGRUParams(w_x, w_h, params["b"])
+
+
+def serving_weights(params, quantize_8b: bool = False, mesh=None):
+    """(DeltaGRUParams, w_fc, b_fc) for a serving session, replicated
+    over ``mesh`` (no-op when ``mesh`` is None).
+
+    Replication is the serving sharding contract: every shard reads its
+    weights from local memory and admission/eviction never moves them —
+    only per-stream state is partitioned (see parallel/sharding.py).
+    """
+    from repro.parallel import sharding as shp
+    gru = _gru_params(params, quantize_8b)
+    return shp.put_replicated((gru, params["w_fc"], params["b_fc"]), mesh)
 
 
 def forward(params, cfg, feats: Array, threshold: float | None = None,

@@ -49,8 +49,74 @@ DEFAULT_RULES: dict[str, list[Any]] = {
     "act_heads": [("model",)],
     "act_vocab": [("model",)],
     "frames": [], "channels": [],
+    # --- serving -----------------------------------------------------------
+    "slots": [("data",)],        # streaming-KWS slot axis (DESIGN.md §6):
+    # one live audio stream per slot, slots partitioned over the mesh's
+    # data axis; weights replicated (P()) so admission never moves them.
     None: [],
 }
+
+# ---------------------------------------------------------------------------
+# Slot-axis serving helpers (DESIGN.md §6).  The sharded KWS engine keeps a
+# deliberately simple contract — every per-stream tensor has the slot axis
+# FIRST, weights/coefficients carry no slot axis at all — so the shard_map
+# specs are mechanical: prefix-P("data") for stream state, P() for weights.
+
+SLOT_AXIS = "data"
+
+
+def slot_shards(mesh: Mesh | None) -> int:
+    """Number of slot partitions a mesh provides (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    if SLOT_AXIS not in mesh.axis_names:
+        raise ValueError(f"serving mesh needs a {SLOT_AXIS!r} axis, "
+                         f"got {mesh.axis_names}")
+    return int(mesh.shape[SLOT_AXIS])
+
+
+def check_slot_partition(mesh: Mesh | None, n_slots: int) -> int:
+    """Validate ``n_slots`` divides over the mesh; returns shard count.
+
+    Divisibility is a hard requirement (not a fallback-to-replicated like
+    the training rules): a ragged slot axis would give shards different
+    batch shapes and break the single compiled serving step.
+    """
+    shards = slot_shards(mesh)
+    if n_slots % shards != 0:
+        raise ValueError(f"{n_slots} slots do not partition over "
+                         f"{shards} devices; pick a multiple")
+    return shards
+
+
+def slot_specs(tree) -> Any:
+    """Prefix PartitionSpec pytree: axis 0 = slots, sharded over the mesh.
+
+    Trailing dims are implicitly unsharded (PartitionSpec semantics), so
+    one spec covers mixed-rank state leaves ((B,C), (B,4,C), ...).
+    """
+    return jax.tree.map(lambda _: P(SLOT_AXIS), tree)
+
+
+def replicated_specs(tree) -> Any:
+    """PartitionSpec pytree replicating every leaf (weights, coefficients)."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def put_slot_sharded(tree, mesh: Mesh | None):
+    """Device-put per-stream state with axis 0 partitioned over the mesh."""
+    if mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P(SLOT_AXIS))), tree)
+
+
+def put_replicated(tree, mesh: Mesh | None):
+    """Device-put weights fully replicated (serving keeps them local)."""
+    if mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)
 
 
 # Decode overrides: FSDP weight-sharding pays a per-layer all-gather that a

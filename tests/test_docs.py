@@ -1,0 +1,110 @@
+"""Docs sanity: README commands are real, current, and single-sourced.
+
+``repro.commands`` is the canonical registry; this test closes the loop
+in all three directions: every registered command appears VERBATIM in a
+README code block, every documented invocation still parses against the
+CLI/file it names, and the examples print the registry (not hand-typed
+copies).  Run explicitly in CI as the docs-sanity step:
+
+    PYTHONPATH=src python -m pytest -q tests/test_docs.py
+"""
+import pathlib
+import re
+import shlex
+
+import pytest
+
+REPO = pathlib.Path(__file__).parent.parent
+README = REPO / "README.md"
+
+
+def _code_blocks(text: str) -> str:
+    return "\n".join(re.findall(r"```(?:bash|sh)?\n(.*?)```", text, re.S))
+
+
+@pytest.fixture(scope="module")
+def readme_code():
+    assert README.exists(), "README.md operator's handbook is missing"
+    return _code_blocks(README.read_text())
+
+
+def test_every_canonical_command_is_documented(readme_code):
+    from repro import commands
+    for name, cmd in commands.ALL_COMMANDS.items():
+        assert cmd in readme_code, (
+            f"README.md code blocks are missing the canonical "
+            f"{name!r} command:\n  {cmd}\n(repro/commands.py is the "
+            f"single source of truth — update both together)")
+
+
+def _split_env(cmd: str):
+    """Strip leading VAR=VALUE assignments from a documented command."""
+    words = shlex.split(cmd)
+    while words and re.match(r"^[A-Za-z_][A-Za-z0-9_]*=", words[0]):
+        words.pop(0)
+    return words
+
+
+def test_documented_files_exist():
+    """Every `python <path>` / `pip install -r <file>` target is real."""
+    from repro import commands
+    for cmd in commands.ALL_COMMANDS.values():
+        words = _split_env(cmd)
+        for i, w in enumerate(words):
+            if w.endswith(".py") or (i and words[i - 1] == "-r"):
+                assert (REPO / w).exists(), f"{cmd!r} references missing {w}"
+
+
+def test_documented_modules_import():
+    """`python -m <module>` targets are importable (quickstart imports)."""
+    import importlib
+    from repro import commands
+    for cmd in commands.ALL_COMMANDS.values():
+        words = _split_env(cmd)
+        if "-m" in words:
+            mod = words[words.index("-m") + 1]
+            if mod == "pytest":
+                continue
+            importlib.import_module(mod)
+
+
+def test_serve_commands_parse_against_the_cli():
+    """The serve flag strings in the registry parse with serve's OWN
+    parser — a renamed/removed flag fails here before it ships stale."""
+    from repro import commands
+    from repro.launch import serve
+    parser = serve.build_parser()
+    for cmd in (commands.SERVE_CMD, commands.SERVE_SHARDED_CMD):
+        words = _split_env(cmd)
+        flags = words[words.index("repro.launch.serve") + 1:]
+        args = parser.parse_args(flags)
+        assert args.mode == "kws-audio"
+        assert args.slots % args.devices == 0, \
+            "documented --slots must divide by documented --devices"
+
+
+def test_serve_bench_default_sweep_covers_scaling_pair():
+    import importlib
+    sb = importlib.import_module("benchmarks.serve_bench")
+    args = sb.build_parser().parse_args([])
+    counts = [int(d) for d in args.device_counts.split(",")]
+    # The 1→2 pair is what the acceptance gate (and BENCH_serve.json's
+    # scaling field) is built on.
+    assert 1 in counts and 2 in counts
+
+
+def test_examples_print_the_registry_not_copies():
+    """Examples must reference repro.commands, so what they print IS the
+    README text (satellite: single source of truth)."""
+    for name in ("quickstart.py", "serve_streaming_kws.py"):
+        src = (REPO / "examples" / name).read_text()
+        assert "from repro import commands" in src, (
+            f"examples/{name} must print commands from repro.commands")
+
+
+def test_tier1_command_matches_roadmap(readme_code):
+    """ROADMAP.md's tier-1 verify line and the README agree."""
+    from repro import commands
+    roadmap = (REPO / "ROADMAP.md").read_text()
+    assert "python -m pytest -x -q" in roadmap
+    assert commands.TIER1_CMD in readme_code

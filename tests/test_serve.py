@@ -1,0 +1,240 @@
+"""Serving engine: request/response path, stream churn, slot sharding.
+
+Fast cases run in-process (1 device); multi-virtual-device behaviours
+run in child processes (the device split must be in XLA_FLAGS before
+jax initializes) and carry the ``slow`` marker like test_distributed.
+"""
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).parent.parent
+
+
+# ---------------------------------------------------------------------------
+# serve.py --mode kws-audio request/response path (in-process, 1 device)
+
+def _serve_kws(capsys, extra=()):
+    from repro.launch import serve
+    rc = serve.main(["--mode", "kws-audio", "--slots", "2", "--requests",
+                     "5", "--train-steps", "0", "--chunk-samples", "2048",
+                     *extra])
+    assert rc == 0
+    return capsys.readouterr().out
+
+
+def test_serve_kws_audio_serves_every_request(capsys):
+    out = _serve_kws(capsys)
+    # Every queued request is served exactly once (continuous batching
+    # drains the queue through 2 slots), and the telemetry line prices
+    # the stream with the IC model.
+    assert "served 5 utterances" in out
+    assert "decisions/s" in out
+    assert "nJ/decision" in out
+    assert "step latency p50" in out
+
+
+def test_serve_kws_audio_more_slots_than_requests(capsys):
+    # Slots > requests: the pool is never full, idle slots stream zeros.
+    from repro.launch import serve
+    rc = serve.main(["--mode", "kws-audio", "--slots", "4", "--requests",
+                     "2", "--train-steps", "0", "--chunk-samples", "2048"])
+    assert rc == 0
+    assert "served 2 utterances" in capsys.readouterr().out
+
+
+def test_slot_partition_divisibility():
+    from repro.parallel import sharding as shp
+
+    class Mesh2:                   # duck-typed: axis_names + shape
+        axis_names = ("data",)
+        shape = {"data": 2}
+
+    class NoData:
+        axis_names = ("model",)
+        shape = {"model": 2}
+
+    assert shp.check_slot_partition(None, 3) == 1
+    assert shp.check_slot_partition(Mesh2(), 4) == 2
+    with pytest.raises(ValueError, match="partition"):
+        shp.check_slot_partition(Mesh2(), 3)
+    with pytest.raises(ValueError, match="data"):
+        shp.check_slot_partition(NoData(), 4)
+
+
+# ---------------------------------------------------------------------------
+# Stream churn under continuous batching: a re-admitted slot must be
+# bit-identical to a fresh stream (frame-aligned chunks).
+
+def _session_bits():
+    import jax
+    from repro.configs import get_config
+    from repro.frontend import FeatureExtractor
+    from repro.models import kws
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=fex.cfg.n_active)
+    return cfg, fex, params
+
+
+def test_reset_stream_churn_equals_fresh_stream():
+    from repro.launch.streaming import StreamingKwsSession
+    cfg, fex, params = _session_bits()
+    rng = np.random.default_rng(3)
+    first = rng.uniform(-0.5, 0.5, (2, 2048)).astype(np.float32)
+    second = rng.uniform(-0.5, 0.5, (2, 2048)).astype(np.float32)
+
+    # Serve a first utterance on both slots, then churn slot 1 only and
+    # serve a second utterance there while slot 0 keeps streaming.
+    sess = StreamingKwsSession(params, cfg, threshold=0.1, batch=2, fex=fex)
+    sess.process_audio(first)
+    sess.reset_stream(1)
+    churned = np.asarray(sess.process_audio(second).logits)
+
+    # A fresh single-stream session fed only the second utterance must
+    # see bit-identical logits on the churned slot...
+    fresh = StreamingKwsSession(params, cfg, threshold=0.1, batch=1, fex=fex)
+    fresh_logits = np.asarray(fresh.process_audio(second[1:2]).logits)
+    np.testing.assert_array_equal(churned[:, 1], fresh_logits[:, 0])
+
+    # ...while the untouched slot 0 continues its stream bit-identically.
+    cont = StreamingKwsSession(params, cfg, threshold=0.1, batch=1, fex=fex)
+    cont.process_audio(first[0:1])
+    cont_logits = np.asarray(cont.process_audio(second[0:1]).logits)
+    np.testing.assert_array_equal(churned[:, 0], cont_logits[:, 0])
+
+
+def test_reset_streams_wave_matches_individual_resets():
+    from repro.launch.streaming import StreamingKwsSession
+    cfg, fex, params = _session_bits()
+    rng = np.random.default_rng(4)
+    audio = rng.uniform(-0.5, 0.5, (4, 1024)).astype(np.float32)
+
+    a = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex)
+    b = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex)
+    a.process_audio(audio)
+    b.process_audio(audio)
+    a.reset_streams([0, 2])               # one batched wave
+    b.reset_stream(0)                     # slot-by-slot
+    b.reset_stream(2)
+    oa = a.process_audio(audio)
+    ob = b.process_audio(audio)
+    np.testing.assert_array_equal(np.asarray(oa.logits),
+                                  np.asarray(ob.logits))
+
+
+# ---------------------------------------------------------------------------
+# SlotScheduler: admission balance, eviction, queue draining
+
+def test_slot_scheduler_balances_and_drains():
+    from repro.launch.streaming import SlotScheduler, StreamingKwsSession
+    cfg, fex, params = _session_bits()
+    sess = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex)
+    sched = SlotScheduler(sess)
+    for r in range(7):
+        sched.submit(r)
+    admitted = sched.admit()
+    assert sorted(slot for slot, _ in admitted) == [0, 1, 2, 3]
+    assert [req for _, req in admitted] == [0, 1, 2, 3]
+    assert len(sched) == 3 and not sched.idle
+
+    # Evict two, re-admit from the queue; slots are reused.
+    assert sched.evict(1) == 1
+    assert sched.evict(3) == 3
+    again = sched.admit()
+    assert sorted(slot for slot, _ in again) == [1, 3]
+    # Drain completely.
+    for slot in list(sched.live):
+        sched.evict(slot)
+    final = sched.admit()
+    assert len(final) == 1                # one queued request left
+    sched.evict(final[0][0])
+    assert sched.idle
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine (mesh=1 in-process; mesh=2 in a child process)
+
+def test_sharded_engine_mesh1_bit_identical():
+    import jax
+    from repro.launch.streaming import StreamingKwsSession
+    cfg, fex, params = _session_bits()
+    rng = np.random.default_rng(5)
+    audio = rng.uniform(-0.5, 0.5, (4, 2048)).astype(np.float32)
+    mesh1 = jax.make_mesh((1,), ("data",))
+
+    plain = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex)
+    shard = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex,
+                                mesh=mesh1)
+    assert shard.n_shards == 1
+    for sess in (plain, shard):
+        sess.process_audio(audio)
+        sess.reset_stream(2)              # churn mid-stream on both
+    o_p = plain.process_audio(audio)
+    o_s = shard.process_audio(audio)
+    np.testing.assert_array_equal(np.asarray(o_p.logits),
+                                  np.asarray(o_s.logits))
+    np.testing.assert_array_equal(np.asarray(o_p.votes),
+                                  np.asarray(o_s.votes))
+    assert plain.summary() == shard.summary()
+
+
+SHARDED_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+import numpy as np
+from repro.configs import get_config
+from repro.frontend import FeatureExtractor
+from repro.launch.mesh import make_slot_mesh
+from repro.launch.streaming import SlotScheduler, StreamingKwsSession
+from repro.models import kws
+
+cfg = get_config("deltakws")
+fex = FeatureExtractor()
+params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                         input_dim=fex.cfg.n_active)
+rng = np.random.default_rng(0)
+audio = rng.uniform(-0.5, 0.5, (4, 2048)).astype(np.float32)
+
+mesh = make_slot_mesh(2)
+assert mesh is not None and mesh.shape["data"] == 2
+ref = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex)
+eng = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex,
+                          mesh=mesh)
+assert eng.n_shards == 2
+assert [eng.shard_of_slot(s) for s in range(4)] == [0, 0, 1, 1]
+
+# Same serve trace on both: chunk, churn one slot per shard, chunk.
+for sess in (ref, eng):
+    sess.process_audio(audio)
+    sess.reset_streams([1, 2])
+o_r = ref.process_audio(audio)
+o_e = eng.process_audio(audio)
+np.testing.assert_array_equal(np.asarray(o_r.logits), np.asarray(o_e.logits))
+np.testing.assert_array_equal(np.asarray(o_r.votes), np.asarray(o_e.votes))
+assert ref.summary() == eng.summary()
+
+# Scheduler balances admissions across the two shards.
+sched = SlotScheduler(eng)
+for r in range(4):
+    sched.submit(r)
+sched.admit()
+assert sched.occupancy() == [2, 2], sched.occupancy()
+print("SHARDED_SERVE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_engine_two_devices_bit_identical():
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_CHILD], capture_output=True,
+        text=True,
+        env={**__import__("os").environ, "PYTHONPATH": str(REPO / "src")},
+        timeout=540)
+    assert r.returncode == 0, f"{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "SHARDED_SERVE_OK" in r.stdout
