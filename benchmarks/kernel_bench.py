@@ -142,6 +142,69 @@ def run_delta_gru(T: int = 100, B: int = 8, I: int = 64, H: int = 64,
     return rows
 
 
+def run_delta_gru_int(T: int = 100, B: int = 8, I: int = 64, H: int = 64,
+                      th: float = 0.2):
+    """int8-weight/int16-state fused kernel vs its float twin on the
+    same workload: per-frame latency, launches per utterance, and the
+    RESIDENT-FOOTPRINT ratio (the TPU win: int8 weights + int16 state
+    shrink the VMEM image ~4×, exactly the IC's two-weights-per-SRAM-
+    word story).  Golden-vs-kernel bit-identity is asserted in-line so
+    the recorded rows are conformance-backed."""
+    from repro.core import fixed_point as fp
+
+    p = dg.init_delta_gru(jax.random.PRNGKey(0), I, H)
+    w, fmt = fp.quantize_gru(p)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, B, I)) * 0.5
+    xs_codes = fp.to_code(xs, fmt.feat_frac, 16, jnp.int16)
+    s0 = fp.init_int_delta_state(B, I, H, w)
+
+    def int_once():
+        return fp.int_gru_scan(w, fmt, xs_codes, th, state=s0,
+                               backend="pallas")
+
+    # conformance: the timed kernel is bit-identical to the golden model
+    hs_p = int_once()[0]
+    hs_g = fp.int_gru_scan(w, fmt, xs_codes, th, state=s0,
+                           backend="xla")[0]
+    assert (np.asarray(hs_p) == np.asarray(hs_g)).all(), \
+        "int kernel diverged from the golden fixed-point model"
+
+    us = time_call(int_once, iters=3)
+    calls = pallas_calls_per_utterance(int_once)
+    weight_bytes = (I + H) * 3 * H                      # int8 resident
+    state_bytes = B * (2 * (I + 2 * H) + 4 * 6 * H)     # i16 x̂/h/ĥ + i32 M
+    return [{
+        "kernel": "delta_gru_seq_int8", "T": T, "B": B, "I": I, "H": H,
+        "threshold": th, "pallas_calls_per_utterance": calls,
+        "us_per_frame_interpret": us / T,
+        "frames_per_s_interpret": 1e6 / (us / T),
+        "resident_weight_bytes": weight_bytes,
+        "resident_state_bytes": state_bytes,
+        "bit_true_vs_golden": True,
+    }]
+
+
+def int8_vs_float_summary(gru_rows, int_rows) -> dict:
+    """The tracked int8-vs-float kernel comparison (acceptance: recorded
+    in BENCH_kernels.json)."""
+    f = next(r for r in gru_rows if r["kernel"] == "delta_gru_seq")
+    i = int_rows[0]
+    T, B, I, H = f["T"], f["B"], f["I"], f["H"]
+    return {
+        "float_us_per_frame_interpret": f["us_per_frame_interpret"],
+        "int8_us_per_frame_interpret": i["us_per_frame_interpret"],
+        "int8_speed_ratio_interpret":
+            f["us_per_frame_interpret"] / i["us_per_frame_interpret"],
+        "float_resident_weight_bytes": (I + H) * 3 * H * 4,
+        "int8_resident_weight_bytes": i["resident_weight_bytes"],
+        "weight_footprint_saving_x":
+            (I + H) * 3 * H * 4 / i["resident_weight_bytes"],
+        "pallas_calls_equal": f["pallas_calls_per_utterance"]
+            == i["pallas_calls_per_utterance"],
+        "bit_true_vs_golden": i["bit_true_vs_golden"],
+    }
+
+
 def run():
     """Schema-stable rows for benchmarks/run.py (one CSV block)."""
     return run_delta_matvec() + run_iir_fex()
@@ -295,10 +358,11 @@ def run_iir_fex():
 def main():
     matvec_rows = run_delta_matvec()
     gru_rows = run_delta_gru()
+    int_rows = run_delta_gru_int()
     fex_rows = run_iir_fex()
     fex_bench_rows = run_fex_bench()
     print_csv(matvec_rows + fex_rows, "kernel_bench")
-    print_csv(gru_rows, "delta_gru_seq_vs_per_step")
+    print_csv(gru_rows + int_rows, "delta_gru_seq_vs_per_step")
     print_csv(fex_bench_rows, "fex_bench_audio_in")
     BENCH_JSON.write_text(json.dumps({
         "note": "interpret-mode CPU timings (kernels target TPU); "
@@ -306,6 +370,8 @@ def main():
                 "quantities",
         "delta_matvec": matvec_rows,
         "delta_gru": gru_rows,
+        "delta_gru_int8": int_rows,
+        "int8_vs_float": int8_vs_float_summary(gru_rows, int_rows),
         "iir_fex": fex_rows,
         "fex_bench": fex_bench_rows,
     }, indent=2) + "\n")

@@ -1,5 +1,11 @@
 """End-to-end driver: train the paper's KWS model with the production
-Trainer — checkpointing, fault injection + recovery, straggler watchdog.
+Trainer — checkpointing, fault injection + recovery, straggler watchdog —
+then PROMOTE it to the deployed integer numerics.
+
+Training runs QAT by default (8-bit STE weights, Q0.15 hidden grid —
+``models.kws.loss_fn(qat=True)``), so the final fold into the int8
+bundle (``core.fixed_point.promote_kws``) serves within a hair of the
+float accuracy; the script prints both.
 
 Run:  PYTHONPATH=src python examples/train_kws_e2e.py [--steps 200]
 """
@@ -23,6 +29,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--inject-fault", action="store_true", default=True)
+    ap.add_argument("--no-qat", action="store_true",
+                    help="train in pure float (skips deployment numerics)")
     args = ap.parse_args()
 
     cfg = get_config("deltakws")
@@ -30,14 +38,10 @@ def main():
     params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg)
     ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
     opt_state = opt.init(params)
-
-    @jax.jit
-    def step_fn(params, opt_state, batch):
-        (loss, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
-            params, cfg, batch, 0.1)
-        params, opt_state, om = opt.update(ocfg, g, opt_state, params)
-        return params, opt_state, {"loss": loss, "acc": m["acc"],
-                                   "sparsity": m["sparsity"], **om}
+    qat = not args.no_qat
+    # The canonical QAT step (single-sourced with launch.train's KWS mode).
+    from repro.train.promote import eval_promotion, make_kws_step_fn
+    step_fn = make_kws_step_fn(cfg, ocfg, 0.1, qat=qat)
 
     def data_fn(step):               # replayable: pure function of step
         audio, labels = synth_batch(np.random.default_rng(step), 64)
@@ -66,6 +70,13 @@ def main():
     print(f"recoveries: {trainer.recoveries}, "
           f"stragglers flagged: {len(trainer.straggler_steps)}")
     print(f"final acc: {hist[-1].metrics['acc']:.3f}")
+
+    # Train→deploy promotion: fold into the integer bundle and compare
+    # the float path against the bit-true int8 pipeline on held-out data.
+    acc_f, acc_i, _ = eval_promotion(trainer.params, cfg, fex, 0.1)
+    print(f"promotion ({'QAT' if qat else 'float'}-trained): "
+          f"float acc {acc_f:.3f} → int8 acc {acc_i:.3f} "
+          f"(Δ {acc_i - acc_f:+.3f})")
     shutil.rmtree(ckpt_dir, ignore_errors=True)
 
 

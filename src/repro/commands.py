@@ -26,6 +26,17 @@ SERVE_SHARDED_CMD = (
     "XLA_FLAGS=--xla_force_host_platform_device_count=2 "
     "PYTHONPATH=src python -m repro.launch.serve "
     "--mode kws-audio --devices 2 --slots 32 --requests 64")
+SERVE_INT8_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
+                  "--mode kws-audio --slots 8 --requests 16 "
+                  "--numerics int8")
+
+# Train → deploy (QAT + promotion to the integer bundle) --------------------
+TRAIN_PROMOTE_CMD = ("PYTHONPATH=src python -m repro.launch.train "
+                     "--arch deltakws --steps 300 "
+                     "--promote /tmp/deltakws_int8.npz")
+SERVE_BUNDLE_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
+                    "--mode kws-audio --slots 8 --requests 16 "
+                    "--bundle /tmp/deltakws_int8.npz")
 
 # Benchmarks ----------------------------------------------------------------
 SERVE_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/serve_bench.py"
@@ -40,6 +51,9 @@ ALL_COMMANDS = {
     "stream_example": STREAM_EXAMPLE_CMD,
     "serve": SERVE_CMD,
     "serve_sharded": SERVE_SHARDED_CMD,
+    "serve_int8": SERVE_INT8_CMD,
+    "train_promote": TRAIN_PROMOTE_CMD,
+    "serve_bundle": SERVE_BUNDLE_CMD,
     "serve_bench": SERVE_BENCH_CMD,
     "kernel_bench": KERNEL_BENCH_CMD,
 }

@@ -12,6 +12,17 @@ from repro.core.delta_gru import (
     temporal_sparsity,
 )
 from repro.core.delta_dense import DeltaStream, delta_matmul, init_delta_stream
+from repro.core.fixed_point import (
+    FexFormats,
+    GruFormats,
+    IntGruWeights,
+    IntKwsBundle,
+    fold_fex,
+    int_forward,
+    int_fex_scan,
+    int_gru_scan,
+    promote_kws,
+)
 from repro.core.energy_model import CostReport, cost_from_sparsity, frame_cost
 from repro.core.quantize import QFormat, qformat_for, quantize_weights_8b, ste_quantize
 from repro.core.sparsity import SparsityAccumulator, sparsity_at_threshold

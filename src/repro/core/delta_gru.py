@@ -117,10 +117,18 @@ def delta_encode(x: Array, x_hat: Array, threshold: Array | float):
 
 @dataclasses.dataclass(frozen=True)
 class DeltaGRUCell:
-    """One ΔGRU timestep.  threshold=0 reproduces the dense GRU exactly."""
+    """One ΔGRU timestep.  threshold=0 reproduces the dense GRU exactly.
+
+    ``h_qformat`` (a ``core.quantize.QFormat``) snaps the hidden state to
+    a fixed-point grid after the gates with a straight-through gradient —
+    the QAT image of the IC's quantized ĥ memory (Q0.15 in the integer
+    serving path): training then sees the same delta-threshold compares
+    the deployed integer datapath performs.
+    """
 
     hidden_dim: int
     threshold: float = 0.0
+    h_qformat: Any = None
 
     def __call__(self, params: DeltaGRUParams, state: DeltaState, x: Array
                  ) -> tuple[DeltaState, Array, DeltaStats]:
@@ -136,6 +144,9 @@ class DeltaGRUCell:
         m_x = state.m_x + dx @ params.w_x          # (B, 3H)
         m_h = state.m_h + dh @ params.w_h          # (B, 3H)
         h = _gru_gates(m_x, m_h, state.h, H)
+        if self.h_qformat is not None:
+            from repro.core.quantize import ste_quantize
+            h = ste_quantize(h, self.h_qformat)
 
         # sram_reads == macs: one weight word per MAC (16b word = 2×8b wts
         # in the IC; accounted in the energy model).
@@ -221,7 +232,7 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
                    state: DeltaState | None = None, *,
                    backend: str = "xla", interpret: bool | None = None,
                    block_b: int | None = None, block_i: int | None = None,
-                   block_o: int | None = None,
+                   block_o: int | None = None, h_qformat=None,
                    vmem_budget_bytes: int = _SEQ_KERNEL_VMEM_BUDGET_BYTES,
                    ) -> tuple[Array, DeltaState, DeltaStats]:
     """Run a ΔGRU over ``xs`` of shape (T, B, I).
@@ -236,16 +247,39 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
         (``kernels.delta_gru_seq``); falls back to a per-step composition
         of the block-sparse ``delta_matvec`` kernel when the weights
         exceed ``vmem_budget_bytes``.
+      * ``"pallas-int"`` — the integer kernel's skeleton in its
+        identity-quant conformance mode (float math, same op order):
+        bit-identical to both paths above, exercising the int kernel's
+        dispatch/plumbing.  The REAL integer datapath (int8 weights,
+        int16 state, code-domain I/O) is ``core.fixed_point.int_gru_scan``
+        on a promoted ``IntGruWeights`` — it has its own entry point
+        because its state and I/O live on integer grids.
 
     The XLA path is differentiable: the delta threshold acts as a
     piecewise-constant gate; gradients flow through the transmitted path
     (straight-through on the gate), matching how DeltaRNN networks are
     trained.  The Pallas paths are inference/serving hot paths.
+    ``h_qformat`` (XLA backend only) enables QAT hidden-state
+    quantization — see ``DeltaGRUCell``.
     """
     T, B, I = xs.shape
     H = params.w_h.shape[0]
     if state is None:
         state = init_delta_state(B, I, H, params, xs.dtype)
+    if h_qformat is not None and backend != "xla":
+        raise ValueError("h_qformat (QAT) requires the differentiable "
+                         f"'xla' backend, got {backend!r}")
+
+    if backend == "pallas-int":
+        from repro.kernels.delta_gru_seq import delta_gru_seq_int
+        f32 = lambda a: a.astype(jnp.float32)
+        th = jnp.full((1, 2), threshold, jnp.float32)
+        hs, final, nz_dx, nz_dh = delta_gru_seq_int(
+            f32(xs), f32(state.h), f32(state.x_hat), f32(state.h_hat),
+            f32(state.m_x), f32(state.m_h), f32(params.w_x),
+            f32(params.w_h), th, fmt=None, block_b=block_b,
+            interpret=interpret)
+        return hs, final, _stats_from_counts(nz_dx, nz_dh, I, H)
 
     if backend == "pallas":
         weight_bytes = (I + H) * 3 * H * 4
@@ -261,7 +295,8 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
     if backend != "xla":
         raise ValueError(f"unknown ΔGRU backend: {backend!r}")
 
-    cell = DeltaGRUCell(hidden_dim=H, threshold=threshold)
+    cell = DeltaGRUCell(hidden_dim=H, threshold=threshold,
+                        h_qformat=h_qformat)
 
     def body(carry, x):
         new_state, h, stats = cell(params, carry, x)

@@ -1,0 +1,545 @@
+"""Golden fixed-point model — the executable spec of the ASIC datapath.
+
+The DeltaKWS IC is not a float machine: 12-bit audio and features, 8-bit
+weights (two per 16-bit SRAM word), 16-bit filter/state registers and a
+24-bit ΔRNN accumulator.  This module is the single source of truth for
+that integer datapath, written as pure jnp ops on integer CODE arrays so
+the same functions execute
+
+  * in ``lax.scan`` — the golden reference (``int_gru_scan``/
+    ``int_fex_scan`` with ``backend="xla"``), and
+  * inside the Pallas kernel bodies (``kernels.delta_gru_seq.
+    delta_gru_seq_int``, ``kernels.iir_fex.batched_iir_fex_int``),
+
+which puts the two under the same bit-exactness contract as the float
+path (tests/test_fixed_point.py): integer arithmetic is deterministic,
+so golden vs kernel is bit-for-bit by construction, on any backend.
+
+Conventions
+  * A value ``v`` in format Q(i).(f) is stored as the integer CODE
+    ``round(v * 2**f)``, saturated to its word width.  All arithmetic is
+    int32; narrower storage (int16 state, int8 weights) is cast up at
+    the point of use.
+  * Rounding is round-half-up via ``rshift_round`` for shifts and
+    ``jnp.round`` (half-to-even) where a float intermediate is
+    requantized — both deterministic and shared golden/kernel.
+  * The gate nonlinearities are the "ideal LUT": the true σ/tanh
+    evaluated on the dequantized, accumulator-saturated pre-activation
+    and requantized to the hidden grid.  A real LUT stores exactly these
+    values; here they are computed on the fly.  Pre-activations are
+    bounded by the 24-bit accumulator saturation, so the float
+    intermediates stay exactly representable and IEEE-deterministic.
+
+Formats (the per-tensor QFormat table — DESIGN.md §9):
+
+  tensor                format       storage   grid step
+  --------------------  -----------  --------  ------------------
+  audio sample          Q0.11        int16     2^-11
+  FEx signal/registers  Q2.13        int16     2^-13
+  FEx envelope          Q0.15        int16     2^-15
+  FEx coeff b / a       Q*.{12,8}b   int32     from dynamic range
+  feature / x̂           Q0.11        int16     2^-11
+  hidden h / ĥ / gates  Q0.15        int16     2^-15
+  ΔGRU weight           Q0.7 × 2^e   int8      per-tensor pow-2 e
+  accumulator M, bias   Q5.18        int32     24-bit saturating
+  FC logits             Q*.{22-e}    int32     —
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import WEIGHT_Q
+from repro.kernels.gru_math import delta_branch, gru_gates
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- primitives
+def rshift_round(x, s: int):
+    """Arithmetic right shift by ``s`` ≥ 1 with round-half-up."""
+    return (x + (1 << (s - 1))) >> s
+
+
+def align(x, shift: int):
+    """Move between grids: ``shift`` ≥ 0 is an exact left shift, < 0 a
+    rounded right shift (the only place precision can be dropped)."""
+    if shift >= 0:
+        return x << shift
+    return rshift_round(x, -shift)
+
+
+def sat(x, bits: int):
+    """Two's-complement saturation to a ``bits``-wide word."""
+    lim = 1 << (bits - 1)
+    return jnp.clip(x, -lim, lim - 1)
+
+
+def to_code(x, frac: int, bits: int, dtype=jnp.int32):
+    """Float value(s) → integer code on the 2^-frac grid, saturated."""
+    xp = jnp if isinstance(x, jax.Array) else np
+    c = xp.clip(xp.round(x * float(1 << frac)),
+                -(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+    return c.astype(dtype)
+
+
+def from_code(c, frac: int):
+    """Integer code → float value.  Exact for codes within 24 bits."""
+    xp = jnp if isinstance(c, jax.Array) else np
+    return c.astype(xp.float32) * float(2.0 ** -frac)
+
+
+def _weight_exp(w) -> int:
+    """Per-tensor power-of-two exponent: scale = 2^e covers max |w|
+    (mirrors ``core.quantize.quantize_weights_8b``)."""
+    max_abs = float(np.max(np.abs(np.asarray(w))))
+    return int(np.ceil(np.log2(max(max_abs, 1e-12))))
+
+
+# ------------------------------------------------------------- ΔGRU formats
+@dataclasses.dataclass(frozen=True)
+class GruFormats:
+    """Static format metadata of a promoted ΔGRU (+FC).  Frozen/hashable:
+    passed as a jit static argument next to the code arrays."""
+
+    feat_frac: int = 11      # x / x̂ grid (the 12-bit feature grid)
+    hid_frac: int = 15       # h / ĥ / gate grid
+    acc_frac: int = 18       # M accumulator grid
+    acc_bits: int = 24       # accumulator word width (saturating)
+    e_x: int = 0             # w_x scale exponent (w = code · 2^(e-7))
+    e_h: int = 0             # w_h scale exponent
+    e_fc: int = 0            # FC weight scale exponent
+
+    @property
+    def shift_x(self) -> int:
+        """Δx·W_x product grid → accumulator grid."""
+        return self.acc_frac - (self.feat_frac + 7 - self.e_x)
+
+    @property
+    def shift_h(self) -> int:
+        """Δh·W_h product grid → accumulator grid."""
+        return self.acc_frac - (self.hid_frac + 7 - self.e_h)
+
+    @property
+    def logit_frac(self) -> int:
+        """FC output grid: h (Q0.hid) × w_fc (Q0.7 · 2^e_fc)."""
+        return self.hid_frac + 7 - self.e_fc
+
+    def th_codes(self, threshold: float) -> tuple[int, int]:
+        """Δ_TH on the x- and h-comparison grids.
+
+        FLOOR, not round: for on-grid values k·2^-f the float gate
+        ``|Δ| > th`` is exactly ``k > floor(th·2^f)``, so the integer
+        compare transmits the same deltas the float path does."""
+        return (int(np.floor(threshold * (1 << self.feat_frac))),
+                int(np.floor(threshold * (1 << self.hid_frac))))
+
+
+class IntGruWeights(NamedTuple):
+    """Promoted ΔGRU weights: int8 codes + bias on the accumulator grid."""
+
+    w_x: Array   # (I, 3H) int8, value = code · 2^(e_x - 7)
+    w_h: Array   # (H, 3H) int8, value = code · 2^(e_h - 7)
+    b: Array     # (3H,)  int32 on the accumulator grid
+
+
+def quantize_gru(params, fmt: GruFormats | None = None
+                 ) -> tuple[IntGruWeights, GruFormats]:
+    """Fold float ``DeltaGRUParams`` into the integer weight set.
+
+    Exponents are chosen per tensor from the trained dynamic range
+    (paper §II-C3's procedure applied to the ΔRNN weights); the formats
+    those choices imply are returned alongside the codes.
+    """
+    fmt = fmt or GruFormats()
+    e_x, e_h = _weight_exp(params.w_x), _weight_exp(params.w_h)
+    fmt = dataclasses.replace(fmt, e_x=e_x, e_h=e_h)
+    w_x = WEIGHT_Q.to_int(np.asarray(params.w_x) / 2.0 ** e_x)
+    w_h = WEIGHT_Q.to_int(np.asarray(params.w_h) / 2.0 ** e_h)
+    b = to_code(np.asarray(params.b), fmt.acc_frac, fmt.acc_bits)
+    return IntGruWeights(
+        w_x=jnp.asarray(w_x, jnp.int8), w_h=jnp.asarray(w_h, jnp.int8),
+        b=jnp.asarray(b, jnp.int32)), fmt
+
+
+def init_int_delta_state(batch: int, input_dim: int, hidden_dim: int,
+                         w: IntGruWeights):
+    """Fresh-stream state in code domain.  Reuses ``DeltaState`` (it is
+    a dtype-agnostic NamedTuple); m_x seeds at the bias codes so
+    M == W x̂ + W ĥ + b holds on the accumulator grid."""
+    from repro.core.delta_gru import DeltaState
+    return DeltaState(
+        h=jnp.zeros((batch, hidden_dim), jnp.int16),
+        x_hat=jnp.zeros((batch, input_dim), jnp.int16),
+        h_hat=jnp.zeros((batch, hidden_dim), jnp.int16),
+        m_x=jnp.broadcast_to(w.b, (batch, 3 * hidden_dim)).astype(jnp.int32),
+        m_h=jnp.zeros((batch, 3 * hidden_dim), jnp.int32))
+
+
+# ------------------------------------------------------------ ΔGRU datapath
+def int_delta_branch(v, v_hat, th_code):
+    """The Δ encoder on integer codes — exact mirror of
+    ``gru_math.delta_branch`` (transmit iff |v − v̂| > Δ_TH)."""
+    diff = v - v_hat
+    mask = jnp.abs(diff) > th_code
+    delta = jnp.where(mask, diff, 0)
+    new_v_hat = jnp.where(mask, v, v_hat)
+    return delta, new_v_hat, mask
+
+
+def int_gru_gates(m_x, m_h, h, fmt: GruFormats):
+    """Type-2 GRU nonlinearity in code domain (ideal-LUT σ/tanh).
+
+    The accumulator saturation bounds |pre| ≤ 2^(acc_bits-1-acc_frac+1),
+    so every dequantized intermediate is f32-exact and the float σ/tanh
+    see identical inputs in the golden scan and the kernel body.
+    """
+    H = h.shape[-1]
+    one = 1 << fmt.hid_frac
+    step = float(2.0 ** -fmt.acc_frac)
+    r_f = jax.nn.sigmoid((m_x[:, :H] + m_h[:, :H]
+                          ).astype(jnp.float32) * step)
+    r = jnp.round(r_f * one).astype(jnp.int32)
+    u_f = jax.nn.sigmoid((m_x[:, H:2 * H] + m_h[:, H:2 * H]
+                          ).astype(jnp.float32) * step)
+    u = jnp.round(u_f * one).astype(jnp.int32)
+    # candidate: the reset gate (on the Q0.hid grid) scales the hidden
+    # pre-activation; the product is formed in f32 (int32 would overflow
+    # r·m_hc) — exact inputs, IEEE-deterministic mul/add.
+    c_pre = (m_x[:, 2 * H:].astype(jnp.float32) * step
+             + (r.astype(jnp.float32) / one)
+             * (m_h[:, 2 * H:].astype(jnp.float32) * step))
+    c = jnp.round(jnp.tanh(c_pre) * one).astype(jnp.int32)
+    h_new = rshift_round(u * h + (one - u) * c, fmt.hid_frac)
+    return sat(h_new, 16)
+
+
+def gru_frame_step(fmt: GruFormats | None, x, h, x_hat, h_hat, m_x, m_h,
+                   w_x, w_h, th_x, th_h):
+    """ONE ΔGRU frame — the single source for golden scan AND kernel body.
+
+    ``fmt=None`` is the identity-quant mode: float operands, the exact
+    op order of the float sequence kernel (``delta_branch``/``gru_gates``
+    + f32 dots) — used by ``backend="pallas-int"`` conformance runs.
+    With a ``GruFormats``, everything is integer-code arithmetic.
+
+    Returns ``(h', x̂', ĥ', m_x', m_h', mask_x, mask_h)``.
+    """
+    if fmt is None:
+        dx, x_hat, mask_x = delta_branch(x, x_hat, th_x)
+        dh, h_hat, mask_h = delta_branch(h, h_hat, th_h)
+        m_x = m_x + jnp.dot(dx, w_x, preferred_element_type=jnp.float32)
+        m_h = m_h + jnp.dot(dh, w_h, preferred_element_type=jnp.float32)
+        h = gru_gates(m_x, m_h, h, h.shape[-1])
+        return h, x_hat, h_hat, m_x, m_h, mask_x, mask_h
+
+    x = x.astype(jnp.int32)
+    h32 = h.astype(jnp.int32)
+    dx, x_hat, mask_x = int_delta_branch(x, x_hat.astype(jnp.int32), th_x)
+    dh, h_hat, mask_h = int_delta_branch(h32, h_hat.astype(jnp.int32), th_h)
+    px = jnp.dot(dx, w_x.astype(jnp.int32),
+                 preferred_element_type=jnp.int32)
+    ph = jnp.dot(dh, w_h.astype(jnp.int32),
+                 preferred_element_type=jnp.int32)
+    m_x = sat(m_x + align(px, fmt.shift_x), fmt.acc_bits)
+    m_h = sat(m_h + align(ph, fmt.shift_h), fmt.acc_bits)
+    h_new = int_gru_gates(m_x, m_h, h32, fmt)
+    return h_new, x_hat, h_hat, m_x, m_h, mask_x, mask_h
+
+
+# VMEM budget for the sequence-resident int kernel (weights must stay
+# resident).  Same budget as the float path in core.delta_gru; int8
+# weights are 4× smaller, so the practical model ceiling is 4× higher.
+_INT_SEQ_KERNEL_VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+
+def int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
+                 threshold: float, state=None, *, backend: str = "xla",
+                 block_b: int | None = None, interpret: bool | None = None,
+                 vmem_budget_bytes: int = _INT_SEQ_KERNEL_VMEM_BUDGET_BYTES):
+    """Run the integer ΔGRU over codes ``xs_codes`` (T, B, I) int16.
+
+    ``backend="xla"`` is the golden ``lax.scan``; ``"pallas"`` the fused
+    sequence-resident kernel — bit-identical by single-source math.
+    Returns ``(hs_codes (T,B,H) int16, final state, nz_dx, nz_dh)``.
+
+    Unlike the float ``delta_gru_scan``, there is no block-sparse
+    fallback for weights exceeding the VMEM budget (no int image of
+    ``delta_matvec`` yet) — the dispatch REFUSES loudly instead of
+    compiling a kernel that cannot keep its weights resident.
+    """
+    T, B, I = xs_codes.shape
+    H = w.w_h.shape[0]
+    if state is None:
+        state = init_int_delta_state(B, I, H, w)
+    th_x, th_h = fmt.th_codes(threshold)
+
+    if backend == "pallas":
+        weight_bytes = (I + H) * 3 * H          # int8: one byte per weight
+        if weight_bytes > vmem_budget_bytes:
+            raise NotImplementedError(
+                f"int8 weights ({weight_bytes} B) exceed the sequence "
+                f"kernel's VMEM budget ({vmem_budget_bytes} B) and the "
+                "blocked int fallback does not exist — use backend='xla' "
+                "or the float path's block-sparse composition")
+        from repro.kernels.delta_gru_seq import delta_gru_seq_int
+        th = jnp.asarray([[th_x, th_h]], jnp.int32)
+        return delta_gru_seq_int(xs_codes, state.h, state.x_hat,
+                                 state.h_hat, state.m_x, state.m_h,
+                                 w.w_x, w.w_h, th, fmt=fmt,
+                                 block_b=block_b, interpret=interpret)
+    if backend != "xla":
+        raise ValueError(f"unknown int ΔGRU backend: {backend!r}")
+
+    from repro.core.delta_gru import DeltaState
+
+    def body(carry, x):
+        h, xh, hh, mx, mh, mask_x, mask_h = gru_frame_step(
+            fmt, x, carry.h, carry.x_hat, carry.h_hat, carry.m_x,
+            carry.m_h, w.w_x, w.w_h, th_x, th_h)
+        new = DeltaState(h=h.astype(jnp.int16),
+                         x_hat=xh.astype(jnp.int16),
+                         h_hat=hh.astype(jnp.int16), m_x=mx, m_h=mh)
+        return new, (new.h, jnp.sum(mask_x, -1).astype(jnp.int32),
+                     jnp.sum(mask_h, -1).astype(jnp.int32))
+
+    final, (hs, nz_dx, nz_dh) = jax.lax.scan(body, state, xs_codes)
+    return hs, final, nz_dx, nz_dh
+
+
+# ----------------------------------------------------------------- FC head
+def int_fc(h_codes, w_fc, b_fc):
+    """FC on hidden codes: int8 weights, int32 accumulate; ``b_fc`` is
+    pre-shifted onto the logit grid so no alignment is needed."""
+    return jnp.dot(h_codes.astype(jnp.int32), w_fc.astype(jnp.int32),
+                   preferred_element_type=jnp.int32) + b_fc
+
+
+def quantize_fc(w_fc, b_fc, fmt: GruFormats
+                ) -> tuple[Array, Array, GruFormats]:
+    """Fold the FC head: int8 weight codes + bias on the logit grid."""
+    e_fc = _weight_exp(w_fc)
+    fmt = dataclasses.replace(fmt, e_fc=e_fc)
+    w = jnp.asarray(WEIGHT_Q.to_int(np.asarray(w_fc) / 2.0 ** e_fc),
+                    jnp.int8)
+    b = jnp.asarray(to_code(np.asarray(b_fc), fmt.logit_frac, 32), jnp.int32)
+    return w, b, fmt
+
+
+# ------------------------------------------------------------- FEx formats
+@dataclasses.dataclass(frozen=True)
+class FexFormats:
+    """Static formats of the integer FEx datapath (frozen/hashable)."""
+
+    sig_frac: int = 13       # Q2.13 signal / biquad registers
+    env_frac: int = 15       # Q0.15 envelope
+    feat_frac: int = 11      # Q0.11 features
+    alpha_frac: int = 15     # envelope LP coefficient grid
+    b_frac: int = 11         # biquad b-coefficient fraction bits
+    a_frac: int = 6          # biquad a-coefficient fraction bits
+    alpha_code: int = 1986   # round(env_alpha · 2^alpha_frac)
+    log_range: float = 11.0  # log2 compression range (12-bit features)
+    eps_code: int = 16       # log_eps on the envelope grid
+
+
+STATE_ROWS = 5               # [s0_1, s0_2, s1_1, s1_2, env] — kernel layout
+
+
+def quantize_fex(coef, env_alpha: float, b_frac: int, a_frac: int,
+                 log_eps: float = 2.0 ** -11
+                 ) -> tuple[Array, FexFormats]:
+    """Packed (6, C) float coefficients → integer codes + formats.
+
+    ``b_frac``/``a_frac`` are the FRACTION bits of the mixed-precision
+    coefficient formats (``frontend.fex.sos_formats`` — b: 12-bit total,
+    a: 8-bit total, integer bits from the dynamic range)."""
+    coef = np.asarray(coef, np.float64)
+    codes = np.empty_like(coef)
+    codes[[0, 3]] = np.round(coef[[0, 3]] * (1 << b_frac))   # b0 rows
+    codes[[1, 2, 4, 5]] = np.round(coef[[1, 2, 4, 5]] * (1 << a_frac))
+    base = FexFormats(b_frac=b_frac, a_frac=a_frac)
+    # alpha/eps codes derive from the grids the SAME FexFormats declares,
+    # so format metadata and codes can never disagree.
+    fmt = dataclasses.replace(
+        base,
+        alpha_code=int(round(env_alpha * (1 << base.alpha_frac))),
+        eps_code=int(round(log_eps * (1 << base.env_frac))))
+    return jnp.asarray(codes, jnp.int32), fmt
+
+
+def int_fex_sample_step(x_code, s, coef, fmt: FexFormats):
+    """Advance every (stream, channel) cascade by ONE audio sample, in
+    code domain — the integer mirror of ``kernels.iir_fex.
+    fex_sample_step`` (same structure, each product requantized to the
+    16-bit register grid, saturating — the serial MAC datapath).
+
+    x_code: (B,) Q0.11 audio codes; s: (B, 5, C) int32 register codes.
+    """
+    b0_0, a1_0, a2_0 = coef[0], coef[1], coef[2]
+    b0_1, a1_1, a2_1 = coef[3], coef[4], coef[5]
+    x = (x_code << (fmt.sig_frac - fmt.feat_frac))[:, None]  # → Q2.13
+    # section 0 (DF2T, symmetric numerator)
+    y0 = sat(rshift_round(b0_0 * x, fmt.b_frac) + s[:, 0], 16)
+    ns0_1 = sat(rshift_round(-a1_0 * y0, fmt.a_frac) + s[:, 1], 16)
+    ns0_2 = sat(rshift_round(-b0_0 * x, fmt.b_frac)
+                + rshift_round(-a2_0 * y0, fmt.a_frac), 16)
+    # section 1
+    y1 = sat(rshift_round(b0_1 * y0, fmt.b_frac) + s[:, 2], 16)
+    ns1_1 = sat(rshift_round(-a1_1 * y1, fmt.a_frac) + s[:, 3], 16)
+    ns1_2 = sat(rshift_round(-b0_1 * y0, fmt.b_frac)
+                + rshift_round(-a2_1 * y1, fmt.a_frac), 16)
+    # envelope: full-wave rectify on the Q0.15 grid + one-pole low-pass
+    y_env = sat(jnp.abs(y1) << (fmt.env_frac - fmt.sig_frac), 16)
+    one = 1 << fmt.alpha_frac
+    env = rshift_round((one - fmt.alpha_code) * s[:, 4]
+                       + fmt.alpha_code * y_env, fmt.alpha_frac)
+    return jnp.stack([ns0_1, ns0_2, ns1_1, ns1_2, env], axis=1)
+
+
+def int_compress_env(env_code, fmt: FexFormats):
+    """log₂ + normalize + quantize onto the 12-bit feature grid — the
+    integer mirror of ``kernels.iir_fex.compress_env`` (the log is the
+    ideal-LUT evaluation on the exact envelope code)."""
+    v = (jnp.log2((env_code + fmt.eps_code).astype(jnp.float32)
+                  * float(2.0 ** -fmt.env_frac))
+         + fmt.log_range) / fmt.log_range
+    v = jnp.clip(v, -1.0, 1.0 - 2.0 ** -fmt.feat_frac)
+    return sat(jnp.round(v * (1 << fmt.feat_frac)).astype(jnp.int32), 16)
+
+
+def init_int_fex_state(batch: int, n_channels: int):
+    """Zero (B, 5, C) int16 carry — quiescent filters, zero envelope."""
+    return jnp.zeros((batch, STATE_ROWS, n_channels), jnp.int16)
+
+
+def fex_state_to_codes(buf, fmt: FexFormats):
+    """(B, 5, C) float state buffer → int16 codes (rows 0–3 on the
+    signal grid, row 4 on the envelope grid).  Exact when the floats
+    already lie on the grids — the carry round-trip contract."""
+    filt = to_code(buf[:, :STATE_ROWS - 1], fmt.sig_frac, 16, jnp.int16)
+    env = to_code(buf[:, STATE_ROWS - 1:], fmt.env_frac, 16, jnp.int16)
+    return jnp.concatenate([filt, env], axis=1)
+
+
+def fex_state_from_codes(codes, fmt: FexFormats):
+    """Inverse of ``fex_state_to_codes`` — always exact (int16 codes are
+    exactly representable in float32)."""
+    filt = from_code(codes[:, :STATE_ROWS - 1], fmt.sig_frac)
+    env = from_code(codes[:, STATE_ROWS - 1:], fmt.env_frac)
+    return jnp.concatenate([filt, env], axis=1)
+
+
+def int_fex_scan(audio_codes, coef_codes, state_codes, fmt: FexFormats, *,
+                 frame_shift: int = 128, backend: str = "xla",
+                 block_b: int | None = None, interpret: bool | None = None):
+    """Integer FEx over a chunk of audio codes (B, T) int16 Q0.11.
+
+    Golden ``backend="xla"`` nested scan vs ``"pallas"`` sequence-resident
+    kernel — bit-identical (single-source per-sample math).  Returns
+    (feature codes (B, F, C) int16, new state codes (B, 5, C) int16).
+    """
+    if backend == "pallas":
+        from repro.kernels.iir_fex import batched_iir_fex_int
+        return batched_iir_fex_int(audio_codes, coef_codes, state_codes,
+                                   fmt=fmt, frame_shift=frame_shift,
+                                   block_b=block_b, interpret=interpret)
+    if backend != "xla":
+        raise ValueError(f"unknown int FEx backend: {backend!r}")
+    return _int_fex_scan_xla(audio_codes, coef_codes, state_codes, fmt,
+                             frame_shift)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "frame_shift"))
+def _int_fex_scan_xla(audio_codes, coef_codes, state_codes,
+                      fmt: FexFormats, frame_shift: int):
+    B, T = audio_codes.shape
+    n_frames = T // frame_shift
+    xf = audio_codes[:, :n_frames * frame_shift].astype(jnp.int32)
+    xf = jnp.moveaxis(xf.reshape(B, n_frames, frame_shift), 1, 0)
+    coef = coef_codes.astype(jnp.int32)
+
+    def frame_step(s, x_frame):                      # x_frame: (B, S)
+        def sample_step(s, x_col):                   # x_col: (B,)
+            return int_fex_sample_step(x_col, s, coef, fmt), None
+
+        s, _ = jax.lax.scan(sample_step, s, x_frame.T)
+        return s, int_compress_env(s[:, STATE_ROWS - 1], fmt)
+
+    s, feats = jax.lax.scan(frame_step, state_codes.astype(jnp.int32), xf)
+    return (jnp.moveaxis(feats, 0, 1).astype(jnp.int16),
+            s.astype(jnp.int16))
+
+
+# ----------------------------------------------------- promotion + forward
+@dataclasses.dataclass
+class IntKwsBundle:
+    """Everything the integer serving path consumes: the promoted weight
+    codes, the static formats, and the deployment threshold.  ``coef``/
+    ``ffmt`` are None until a FEx is folded in (feature-chunk serving
+    needs only the GRU+FC half)."""
+
+    gru: IntGruWeights
+    w_fc: Array                     # (H, 12) int8
+    b_fc: Array                     # (12,)  int32 on the logit grid
+    gfmt: GruFormats
+    threshold: float
+    coef: Array | None = None       # (6, C) int32
+    ffmt: FexFormats | None = None
+
+
+def promote_kws(params, threshold: float, fex=None) -> IntKwsBundle:
+    """Fold a (QAT-)trained float parameter tree into the integer bundle.
+
+    ``params`` is the ``models.kws.init_kws`` tree; ``fex`` an optional
+    ``frontend.fex.FeatureExtractor`` whose coefficient bank is folded
+    for the audio-in path.  Pure fold — no retraining, no calibration
+    data: every format is either fixed by the IC or derived from the
+    trained dynamic range.
+    """
+    from repro.core.delta_gru import DeltaGRUParams
+    gru_p = DeltaGRUParams(params["w_x"], params["w_h"], params["b"])
+    gru, gfmt = quantize_gru(gru_p)
+    w_fc, b_fc, gfmt = quantize_fc(params["w_fc"], params["b_fc"], gfmt)
+    bundle = IntKwsBundle(gru=gru, w_fc=w_fc, b_fc=b_fc, gfmt=gfmt,
+                          threshold=float(threshold))
+    return bundle if fex is None else fold_fex(bundle, fex)
+
+
+def fold_fex(bundle: IntKwsBundle, fex) -> IntKwsBundle:
+    """Return a COPY of ``bundle`` with ``fex``'s coefficient bank folded
+    in (mixed-precision formats from ``cfg.b_bits``/``cfg.a_bits`` —
+    paper §II-C3).  No-op if a bank is already folded; never mutates the
+    input, so a bundle shared across sessions stays pristine."""
+    if bundle.ffmt is not None:
+        return bundle
+    from repro.frontend.fex import build_sos_bank, sos_formats
+    cfg = fex.cfg
+    bank = build_sos_bank(cfg)
+    b_fmt, a_fmt = sos_formats(bank, cfg.b_bits, cfg.a_bits)
+    coef, ffmt = quantize_fex(fex.coef, cfg.env_alpha, b_fmt.frac_bits,
+                              a_fmt.frac_bits, log_eps=cfg.log_eps)
+    return dataclasses.replace(bundle, coef=coef, ffmt=ffmt)
+
+
+def int_forward(bundle: IntKwsBundle, feats, *, backend: str = "xla"):
+    """Integer mirror of ``models.kws.forward``: features (B, F, C) —
+    float values on the 12-bit grid or int16 codes — to
+    ``(logit_codes (B, 12) int32, nz_dx, nz_dh)``.  Decisions are
+    ``argmax`` over the integer logit codes; mean-pool is an integer
+    rounded division (the deploy-time head)."""
+    fmt = bundle.gfmt
+    if not jnp.issubdtype(feats.dtype, jnp.integer):
+        feats = to_code(feats, fmt.feat_frac, 16, jnp.int16)
+    xs = jnp.moveaxis(feats, 1, 0)                    # (F, B, C)
+    hs, _, nz_dx, nz_dh = int_gru_scan(bundle.gru, fmt, xs,
+                                       bundle.threshold, backend=backend)
+    F = hs.shape[0]
+    h_sum = jnp.sum(hs.astype(jnp.int32), axis=0)     # exact (≤ 2^21)
+    h_mean = jnp.round(h_sum.astype(jnp.float32) / F).astype(jnp.int32)
+    logits = int_fc(h_mean, bundle.w_fc, bundle.b_fc)
+    return logits, nz_dx, nz_dh

@@ -97,12 +97,16 @@ def init_fex_state(batch: int, n_channels: int, dtype=jnp.float32) -> FExState:
 
 
 def _pack_state(state: FExState) -> Array:
+    """FExState → the kernels' (B, 5, C) buffer layout.  Dtype-
+    preserving: float32 registers on the float paths, int16 codes in the
+    int8 serving engine — this function is the single owner of the
+    row-layout contract."""
     return jnp.concatenate([state.filt, state.env[:, None, :]],
-                           axis=1).astype(jnp.float32)
+                           axis=1).astype(state.filt.dtype)
 
 
 def _unpack_state(buf: Array) -> FExState:
-    return FExState(filt=buf[:, :4], env=buf[:, STATE_ROWS - 1])
+    return FExState(filt=buf[:, :STATE_ROWS - 1], env=buf[:, STATE_ROWS - 1])
 
 
 @functools.partial(jax.jit, static_argnames=("frame_shift", "env_alpha",
@@ -135,7 +139,8 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
              frame_shift: int = FRAME_SHIFT, env_alpha: float = 0.0606,
              log_eps: float = 2.0 ** -11, compress: bool = True,
              backend: str = "xla", block_b: int | None = None,
-             interpret: bool | None = None) -> tuple[Array, FExState]:
+             interpret: bool | None = None, b_bits: int = 12,
+             a_bits: int = 8, coef_formats=None) -> tuple[Array, FExState]:
     """Run the FEx over a chunk of audio, carrying explicit state.
 
     audio: (B, T) float samples (callers quantize; trailing
@@ -145,6 +150,14 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
     ``backend="xla"`` (bit-exact reference, differentiable) or
     ``"pallas"`` (one sequence-resident kernel per chunk).  Both are
     float-exact against each other and make chunk boundaries invisible.
+    ``"pallas-int"`` runs the integer-code kernel (12-bit audio, 16-bit
+    registers, mixed-precision coefficient codes) and returns grid-exact
+    floats — bit-true against ``core.fixed_point.int_fex_scan``.  Pass
+    ``coef_formats`` (the ``sos_formats`` pair — what FeatureExtractor
+    does) so the codes are STRUCTURALLY the promoted serving path's;
+    without it the formats are re-derived from the packed rows on the
+    ``b_bits``/``a_bits`` budgets (equivalent for symmetric-form banks:
+    b1 = 0, b2 = −b0).
     """
     B = audio.shape[0]
     C = coef.shape[1]
@@ -156,6 +169,41 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
             audio, coef, buf, frame_shift=frame_shift, env_alpha=env_alpha,
             log_eps=log_eps, compress=compress, block_b=block_b,
             interpret=interpret)
+    elif backend == "pallas-int":
+        # The integer-code datapath (DESIGN.md §9): quantize the (concrete)
+        # coefficient bank onto its mixed-precision grids, run the int
+        # kernel on codes, and hand back grid-exact floats so the FExState
+        # carry round-trips bit-true.  Eager-only: the coefficient formats
+        # are static, so ``coef`` must not be a tracer here (inside a
+        # jitted serving step, pre-quantize with ``fixed_point.
+        # quantize_fex`` and call ``int_fex_scan`` directly).
+        from repro.core import fixed_point as fp
+        if not compress:
+            raise ValueError("pallas-int FEx always compresses (the "
+                             "12-bit feature grid IS its output format)")
+        coef_np = np.asarray(coef, np.float64)
+        if coef_formats is not None:
+            b_fmt, a_fmt = coef_formats
+        else:
+            # Fallback derivation from the packed rows: [0,3] are the b
+            # family (b1=0, b2=−b0, so max |b| equals the bank's),
+            # [1,2,4,5] the a family — matches sos_formats for the
+            # symmetric-form banks this repo builds.
+            b_fmt = qformat_for(float(np.max(np.abs(coef_np[[0, 3]]))),
+                                b_bits)
+            a_fmt = qformat_for(float(np.max(np.abs(coef_np[[1, 2, 4, 5]]))),
+                                a_bits)
+        coef_codes, ffmt = fp.quantize_fex(
+            coef_np, env_alpha, b_fmt.frac_bits, a_fmt.frac_bits,
+            log_eps=log_eps)
+        audio_codes = fp.to_code(audio.astype(jnp.float32),
+                                 ffmt.feat_frac, 16, jnp.int16)
+        feats_c, codes = fp.int_fex_scan(
+            audio_codes, coef_codes, fp.fex_state_to_codes(buf, ffmt),
+            ffmt, frame_shift=frame_shift, backend="pallas",
+            block_b=block_b, interpret=interpret)
+        feats = fp.from_code(feats_c, ffmt.feat_frac)
+        buf = fp.fex_state_from_codes(codes, ffmt)
     elif backend == "xla":
         feats, buf = _fex_scan_xla(audio, coef, buf, frame_shift,
                                    env_alpha, log_eps, compress)
@@ -209,6 +257,11 @@ class FeatureExtractor:
         self.interpret = interpret
         self.sos = jnp.asarray(build_sos_bank(self.cfg), jnp.float32)
         self.coef = pack_coefficients(self.sos)
+        # The mixed-precision coefficient formats, derived ONCE from the
+        # bank (single source with the promotion fold — fixed_point.
+        # fold_fex runs the same sos_formats call).
+        self.coef_formats = sos_formats(np.asarray(self.sos),
+                                        self.cfg.b_bits, self.cfg.a_bits)
 
     def __call__(self, audio: Array, backend: str | None = None) -> Array:
         feats, _ = self.scan(audio, None, backend=backend)
@@ -226,7 +279,8 @@ class FeatureExtractor:
         return fex_scan(
             audio, self.coef, state, frame_shift=cfg.frame_shift,
             env_alpha=cfg.env_alpha, log_eps=cfg.log_eps, compress=True,
-            backend=backend or self.backend, interpret=self.interpret)
+            backend=backend or self.backend, interpret=self.interpret,
+            coef_formats=self.coef_formats)
 
     # -- hardware accounting (per input sample, serial datapath) ------------
     def ops_per_sample(self) -> dict:

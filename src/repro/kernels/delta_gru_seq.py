@@ -148,3 +148,110 @@ def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
     )(f32(xs), f32(h0), f32(x_hat0), f32(h_hat0), f32(m_x0), f32(m_h0),
       f32(w_x), f32(w_h), th)
     return hs, (h, x_hat, h_hat, m_x, m_h), nz_dx, nz_dh
+
+
+# --------------------------------------------------------------- int variant
+def _int_kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
+                wx_ref, wh_ref, th_ref,
+                hs_ref, nzx_ref, nzh_ref,
+                h_ref, xh_ref, hh_ref, mx_ref, mh_ref, *, fmt):
+    from repro.core.fixed_point import gru_frame_step
+
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _load_state():
+        h_ref[...] = h0_ref[...]
+        xh_ref[...] = xh0_ref[...]
+        hh_ref[...] = hh0_ref[...]
+        mx_ref[...] = mx0_ref[...]
+        mh_ref[...] = mh0_ref[...]
+
+    h, xh, hh, mx, mh, mask_x, mask_h = gru_frame_step(
+        fmt, x_ref[0], h_ref[...], xh_ref[...], hh_ref[...],
+        mx_ref[...], mh_ref[...], wx_ref[...], wh_ref[...],
+        th_ref[0, 0], th_ref[0, 1])
+
+    h_ref[...] = h.astype(h_ref.dtype)
+    xh_ref[...] = xh.astype(xh_ref.dtype)
+    hh_ref[...] = hh.astype(hh_ref.dtype)
+    mx_ref[...] = mx.astype(mx_ref.dtype)
+    mh_ref[...] = mh.astype(mh_ref.dtype)
+    hs_ref[0] = h.astype(hs_ref.dtype)
+    nzx_ref[0, :] = jnp.sum(mask_x, axis=-1).astype(jnp.int32)
+    nzh_ref[0, :] = jnp.sum(mask_h, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block_b", "interpret"))
+def delta_gru_seq_int(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th,
+                      *, fmt=None, block_b: int | None = None,
+                      interpret: bool | None = None):
+    """The int8-weight/int16-state variant of the fused sequence kernel.
+
+    Same sequence-resident structure as ``delta_gru_seq`` (grid =
+    (n_batch_tiles, T), state buffers VMEM-revisited, weights resident),
+    but the datapath is ``core.fixed_point.gru_frame_step``:
+
+      * ``fmt`` a ``GruFormats`` — integer-code operands: xs/h/x̂/ĥ are
+        int16 codes, m_x/m_h int32 on the 24-bit saturating accumulator
+        grid, weights int8, ``th`` a (1, 2) int32 [th_x, th_h].  Bit-
+        identical to the golden ``fixed_point.int_gru_scan`` scan.
+      * ``fmt=None`` — identity-quant conformance mode: float operands
+        (``th`` (1, 2) float32, both entries Δ_TH) through the SAME
+        kernel skeleton, executing the float math in the float kernel's
+        op order — bit-identical to ``delta_gru_seq`` and the XLA scan.
+        This isolates the int kernel's plumbing (dispatch, block specs,
+        state carry) from quantization in the differential fuzz suite.
+
+    Returns ``(hs, (h, x̂, ĥ, m_x, m_h), nz_dx, nz_dh)``.
+    """
+    T, B, I = xs.shape
+    H = h0.shape[1]
+    assert h0.shape == h_hat0.shape == (B, H), (h0.shape, h_hat0.shape)
+    assert x_hat0.shape == (B, I), (x_hat0.shape, (B, I))
+    assert m_x0.shape == m_h0.shape == (B, 3 * H), (m_x0.shape, m_h0.shape)
+    assert w_x.shape == (I, 3 * H), (w_x.shape, (I, 3 * H))
+    assert w_h.shape == (H, 3 * H), (w_h.shape, (H, 3 * H))
+    assert th.shape == (1, 2), th.shape
+    bb = B if block_b is None else block_b
+    assert B % bb == 0, (B, bb)
+
+    kernel = functools.partial(_int_kernel, fmt=fmt)
+    state_spec = lambda d: pl.BlockSpec((bb, d), lambda b, t: (b, 0))
+    fixed_spec = lambda s: pl.BlockSpec(s, lambda b, t: tuple(
+        0 for _ in s))
+    seq_spec = lambda d: pl.BlockSpec((1, bb, d), lambda b, t: (t, b, 0))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((T, B, H), h0.dtype),      # hs
+        jax.ShapeDtypeStruct((T, B), jnp.int32),        # nz_dx
+        jax.ShapeDtypeStruct((T, B), jnp.int32),        # nz_dh
+        jax.ShapeDtypeStruct((B, H), h0.dtype),         # h
+        jax.ShapeDtypeStruct((B, I), x_hat0.dtype),     # x_hat
+        jax.ShapeDtypeStruct((B, H), h_hat0.dtype),     # h_hat
+        jax.ShapeDtypeStruct((B, 3 * H), m_x0.dtype),   # m_x
+        jax.ShapeDtypeStruct((B, 3 * H), m_h0.dtype),   # m_h
+    )
+    out_specs = (
+        seq_spec(H),
+        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
+        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
+        state_spec(H), state_spec(I), state_spec(H),
+        state_spec(3 * H), state_spec(3 * H),
+    )
+    hs, nz_dx, nz_dh, h, x_hat, h_hat, m_x, m_h = pl.pallas_call(
+        kernel,
+        grid=(B // bb, T),
+        in_specs=[
+            seq_spec(I),
+            state_spec(H), state_spec(I), state_spec(H),
+            state_spec(3 * H), state_spec(3 * H),
+            fixed_spec((I, 3 * H)), fixed_spec((H, 3 * H)),
+            fixed_spec((1, 2)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=resolve_interpret(interpret),
+    )(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th)
+    from repro.core.delta_gru import DeltaState
+    return hs, DeltaState(h, x_hat, h_hat, m_x, m_h), nz_dx, nz_dh

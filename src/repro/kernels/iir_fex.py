@@ -166,6 +166,82 @@ def batched_iir_fex(x: jax.Array, coef: jax.Array, state: jax.Array, *,
     return feats, state_out
 
 
+# --------------------------------------------------------------- int variant
+def _int_kernel(x_ref, coef_ref, s0_ref, feat_ref, state_ref, *,
+                frame_shift: int, fmt):
+    from repro.core.fixed_point import int_compress_env, int_fex_sample_step
+
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _load_state():
+        state_ref[...] = s0_ref[...]
+
+    coef = coef_ref[...]
+
+    def step(t, carry):
+        state_ref[...] = int_fex_sample_step(
+            x_ref[:, t].astype(jnp.int32), state_ref[...].astype(jnp.int32),
+            coef, fmt).astype(state_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, frame_shift, step, 0)
+    env = state_ref[:, STATE_ROWS - 1].astype(jnp.int32)
+    feat_ref[...] = int_compress_env(env, fmt).astype(
+        feat_ref.dtype)[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "frame_shift",
+                                             "block_b", "interpret"))
+def batched_iir_fex_int(x: jax.Array, coef: jax.Array, state: jax.Array, *,
+                        fmt, frame_shift: int = 128,
+                        block_b: int | None = None,
+                        interpret: bool | None = None):
+    """The integer-code variant of the sequence-resident FEx kernel.
+
+    Same structure as ``batched_iir_fex`` (grid = (batch_tiles, frames),
+    (B, 5, C) state VMEM-revisited, in-kernel compression), but the
+    per-sample math is ``core.fixed_point.int_fex_sample_step`` /
+    ``int_compress_env`` on integer codes — bit-identical to the golden
+    ``fixed_point.int_fex_scan`` nested scan (single-source math).
+
+    x: (B, T) int16 Q0.11 audio codes; coef: (6, C) int32 coefficient
+    codes (``fixed_point.quantize_fex``); state: (B, 5, C) int16
+    register codes; ``fmt``: the static ``FexFormats``.
+    Returns (feature codes (B, F, C) int16, new state (B, 5, C) int16).
+    """
+    B, T = x.shape
+    C = coef.shape[1]
+    assert state.shape == (B, STATE_ROWS, C), (state.shape, (B, STATE_ROWS, C))
+    n_frames = T // frame_shift
+    if n_frames == 0:
+        return (jnp.zeros((B, 0, C), jnp.int16), state.astype(jnp.int16))
+    x = x[:, :n_frames * frame_shift].astype(jnp.int16)
+    bb = B if block_b is None else block_b
+    assert B % bb == 0, (B, bb)
+
+    kernel = functools.partial(_int_kernel, frame_shift=frame_shift, fmt=fmt)
+    feats, state_out = pl.pallas_call(
+        kernel,
+        grid=(B // bb, n_frames),
+        in_specs=[
+            pl.BlockSpec((bb, frame_shift), lambda b, f: (b, f)),
+            pl.BlockSpec((6, C), lambda b, f: (0, 0)),
+            pl.BlockSpec((bb, STATE_ROWS, C), lambda b, f: (b, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bb, 1, C), lambda b, f: (b, f, 0)),
+            pl.BlockSpec((bb, STATE_ROWS, C), lambda b, f: (b, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, n_frames, C), jnp.int16),
+            jax.ShapeDtypeStruct((B, STATE_ROWS, C), jnp.int16),
+        ),
+        interpret=resolve_interpret(interpret),
+    )(x, coef.astype(jnp.int32), state.astype(jnp.int16))
+    return feats, state_out
+
+
 def init_fex_kernel_state(batch: int, n_channels: int) -> jax.Array:
     """Zero (B, 5, C) carry — quiescent filters, zero envelope."""
     return jnp.zeros((batch, STATE_ROWS, n_channels), jnp.float32)

@@ -12,14 +12,16 @@ import jax.numpy as jnp
 
 from repro.kernels.delta_matvec import delta_matvec, make_block_mask
 from repro.kernels.delta_gru_cell import delta_gru_cell
-from repro.kernels.delta_gru_seq import delta_gru_seq
-from repro.kernels.iir_fex import (batched_iir_fex, iir_fex,
-                                   init_fex_kernel_state, pack_coefficients)
+from repro.kernels.delta_gru_seq import delta_gru_seq, delta_gru_seq_int
+from repro.kernels.iir_fex import (batched_iir_fex, batched_iir_fex_int,
+                                   iir_fex, init_fex_kernel_state,
+                                   pack_coefficients)
 from repro.kernels.platform import default_interpret, resolve_interpret
 
 __all__ = [
     "delta_matvec", "make_block_mask", "delta_gru_cell", "delta_gru_seq",
-    "iir_fex", "batched_iir_fex", "init_fex_kernel_state",
+    "delta_gru_seq_int", "iir_fex", "batched_iir_fex",
+    "batched_iir_fex_int", "init_fex_kernel_state",
     "pack_coefficients", "delta_matvec_auto", "default_interpret",
     "resolve_interpret",
 ]

@@ -19,6 +19,14 @@ utterance's slot is evicted and the queue re-admitted via
 state is untouched), and the host fetches one vote block per chunk plus
 one energy/sparsity summary at the end (DESIGN.md §5).
 
+``--numerics int8`` serves the DEPLOYED datapath instead of the float
+kernels: the quick training runs QAT (8-bit STE weights, Q0.15 hidden
+grid), the trained tree is promoted into the integer bundle at session
+creation, and every decision is an argmax over int32 logit codes from
+the bit-true fixed-point pipeline (DESIGN.md §9).  ``--bundle X.npz``
+serves a previously promoted bundle (``repro.launch.train --arch
+deltakws --promote X.npz``) without retraining.
+
 With ``--devices N`` (and, on a CPU host,
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported before
 launch) the SAME loop drives the sharded engine: the slot pool is
@@ -51,7 +59,16 @@ def _kws_audio_main(args) -> int:
                              input_dim=fex.cfg.n_active)
     rng = np.random.default_rng(0)
 
-    if args.train_steps:
+    bundle = None
+    if args.bundle:
+        from repro.train.promote import load_bundle
+        args.numerics = "int8"                  # a bundle IS int8 weights
+        bundle = load_bundle(args.bundle)
+        print(f"loaded promoted int8 bundle from {args.bundle} "
+              f"(Δ_TH={bundle.threshold})")
+
+    int8 = args.numerics == "int8"
+    if args.train_steps and bundle is None:
         import jax.numpy as jnp
         ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
                                total_steps=args.train_steps)
@@ -59,12 +76,16 @@ def _kws_audio_main(args) -> int:
 
         @jax.jit
         def step(params, state, feats, labels):
+            # int8 serving trains QAT so the promoted fold sees the same
+            # numerics the loss optimized (8-bit STE weights, Q0.15 ĥ).
             (_, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
-                params, cfg, {"feats": feats, "labels": labels}, 0.1)
+                params, cfg, {"feats": feats, "labels": labels}, 0.1,
+                qat=int8)
             params, state, _ = opt.update(ocfg, g, state, params)
             return params, state
 
-        print(f"training detector for {args.train_steps} steps ...")
+        print(f"training detector for {args.train_steps} steps "
+              f"({'QAT, ' if int8 else ''}{args.numerics} serving) ...")
         for _ in range(args.train_steps):
             audio, labels = synth_batch(rng, 64)
             params, state = step(params, state, fex(jnp.asarray(audio)),
@@ -77,7 +98,8 @@ def _kws_audio_main(args) -> int:
 
     mesh = make_slot_mesh(args.devices) if args.devices != 1 else None
     sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
-                               batch=args.slots, fex=fex, mesh=mesh)
+                               batch=args.slots, fex=fex, mesh=mesh,
+                               numerics=args.numerics, bundle=bundle)
     sched = SlotScheduler(sess)
     for req in range(args.requests):
         sched.submit(req)
@@ -132,7 +154,7 @@ def _kws_audio_main(args) -> int:
     # compile of the fused audio step, not a serving latency.
     lat = np.array(step_s[1:] or step_s) * 1e3 if step_s else np.zeros(1)
     print(f"served {len(done)} utterances ({audio_s:.0f} s audio) in "
-          f"{dt:.1f} s on {sess.n_shards} device(s) — "
+          f"{dt:.1f} s on {sess.n_shards} device(s) [{args.numerics}] — "
           f"{audio_s / dt:.1f}x realtime, "
           f"{frames_served / dt:.0f} decisions/s, "
           f"step latency p50 {np.percentile(lat, 50):.1f} / "
@@ -172,6 +194,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--threshold", type=float, default=0.1)
     ap.add_argument("--train-steps", type=int, default=120,
                     help="quick detector training (0 = random weights)")
+    ap.add_argument("--numerics", choices=["float32", "int8"],
+                    default="float32",
+                    help="serving datapath: float kernels or the bit-true "
+                         "integer pipeline (QAT quick-train + promotion)")
+    ap.add_argument("--bundle", default="",
+                    help="path to a promoted int8 bundle (.npz from "
+                         "repro.launch.train --arch deltakws --promote); "
+                         "implies --numerics int8 weights, skips training")
     return ap
 
 

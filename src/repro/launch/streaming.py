@@ -38,6 +38,14 @@ the others.  At mesh=None (or one device) the engine is bit-identical
 to the original single-device session.  ``SlotScheduler`` maps a
 request queue onto the global slots, balancing admissions across
 shards.
+
+Numerics (DESIGN.md §9): ``numerics="int8"`` swaps the fused float step
+for the bit-true integer pipeline — 12-bit ADC codes → integer FEx →
+int8-weight/int16-state ΔGRU → integer FC — consuming a promoted
+``IntKwsBundle`` (``train.promote``) and carrying every piece of stream
+state as integer codes.  Same shard/scheduler machinery, decisions are
+argmaxes over int32 logit codes, bit-identical to the golden
+fixed-point model (``core.fixed_point``).
 """
 from __future__ import annotations
 
@@ -51,10 +59,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import delta_gru as dg
+from repro.core import fixed_point as fp
 from repro.core.energy_model import fex_energy_nj, frame_cost
 from repro.core.quantize import quantize_audio_12b
 from repro.frontend.fex import (FeatureExtractor, FExConfig, FExState,
-                                fex_scan, init_fex_state)
+                                _pack_state, _unpack_state, fex_scan,
+                                init_fex_state)
 from repro.kernels.platform import resolve_interpret, shard_map_kernels
 from repro.models import kws
 from repro.parallel import sharding as shp
@@ -139,6 +149,60 @@ def _process_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, state: dg.DeltaState,
     return state, _bump(acc, stats, feats.shape[0] * feats.shape[1], 0), out
 
 
+def _classify_int(w_fc, b_fc, hs_codes, stats, logit_frac: int):
+    """FC + argmax on integer codes — the decision is the argmax over
+    int32 logit codes (bit-true); the dequantized logits are returned
+    for the float-typed ChunkResult surface."""
+    codes = fp.int_fc(hs_codes, w_fc, b_fc)           # (F, B, 12) int32
+    votes = jnp.argmax(codes, -1).astype(jnp.int32)
+    return ChunkResult(logits=fp.from_code(codes, logit_frac),
+                       votes=votes, nz=stats.nz_dx + stats.nz_dh)
+
+
+def _process_chunk_int(gru: fp.IntGruWeights, w_fc, b_fc,
+                       state: dg.DeltaState, acc: _Accum, feats, *,
+                       threshold: float, gfmt: fp.GruFormats, backend: str,
+                       interpret: bool | None):
+    """Integer mirror of ``_process_chunk``: feats (F, B, C) floats on the
+    12-bit grid → code domain → int ΔGRU → int FC.  ``state`` carries
+    integer codes (int16/int32 ``DeltaState``)."""
+    xs = fp.to_code(feats, gfmt.feat_frac, 16, jnp.int16)
+    hs, state, nz_dx, nz_dh = fp.int_gru_scan(
+        gru, gfmt, xs, threshold, state=state, backend=backend,
+        interpret=interpret)
+    stats = dg._stats_from_counts(nz_dx, nz_dh, xs.shape[-1],
+                                  gru.w_h.shape[0])
+    out = _classify_int(w_fc, b_fc, hs, stats, gfmt.logit_frac)
+    return state, _bump(acc, stats, feats.shape[0] * feats.shape[1], 0), out
+
+
+def _process_audio_chunk_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
+                             fex_state: FExState, state: dg.DeltaState,
+                             acc: _Accum, audio, *, threshold: float,
+                             backend: str, fex_backend: str,
+                             interpret: bool | None, frame_shift: int,
+                             gfmt: fp.GruFormats, ffmt: fp.FexFormats):
+    """Fused INTEGER audio→decision step: 12-bit ADC → int FEx → int ΔGRU
+    → int FC in one jitted graph — the deployed datapath, bit-true
+    against the golden fixed-point model.  ``fex_state`` holds int16
+    register codes, ``state`` int16/int32 ΔGRU codes."""
+    audio = quantize_audio_12b(audio.astype(jnp.float32))
+    audio_codes = fp.to_code(audio, ffmt.feat_frac, 16, jnp.int16)
+    feats, fex_buf = fp.int_fex_scan(
+        audio_codes, coef, _pack_state(fex_state), ffmt,
+        frame_shift=frame_shift, backend=fex_backend, interpret=interpret)
+    xs = jnp.moveaxis(feats, 1, 0)                    # (F, B, C) codes
+    hs, state, nz_dx, nz_dh = fp.int_gru_scan(
+        gru, gfmt, xs, threshold, state=state, backend=backend,
+        interpret=interpret)
+    stats = dg._stats_from_counts(nz_dx, nz_dh, xs.shape[-1],
+                                  gru.w_h.shape[0])
+    out = _classify_int(w_fc, b_fc, hs, stats, gfmt.logit_frac)
+    decisions = xs.shape[0] * xs.shape[1]             # frames × streams
+    acc = _bump(acc, stats, decisions, decisions * frame_shift)
+    return _unpack_state(fex_buf), state, acc, out
+
+
 def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
                          fex_state: FExState, state: dg.DeltaState,
                          acc: _Accum, audio, *, threshold: float,
@@ -191,10 +255,14 @@ def _reset_gru_slots(state: dg.DeltaState, bias, mask) -> dg.DeltaState:
 
 @jax.jit
 def _reset_fex_slots(state: FExState, mask) -> FExState:
-    """Quiescent filters for every slot where ``mask`` is True (see above)."""
+    """Quiescent filters for every slot where ``mask`` is True (see above).
+    Dtype-preserving: serves both the float state and the int8 path's
+    int16 register codes."""
     return FExState(
-        filt=jnp.where(mask[:, None, None], 0.0, state.filt),
-        env=jnp.where(mask[:, None], 0.0, state.env))
+        filt=jnp.where(mask[:, None, None],
+                       jnp.zeros((), state.filt.dtype), state.filt),
+        env=jnp.where(mask[:, None],
+                      jnp.zeros((), state.env.dtype), state.env))
 
 
 class StreamingKwsSession:
@@ -220,6 +288,15 @@ class StreamingKwsSession:
         over the mesh, weights replicated, telemetry per-shard.  ``batch``
         must divide by the mesh size.  ``None`` (default) = unsharded,
         bit-identical to the sharded engine on one device.
+      numerics: "float32" (default) or "int8" — the deployed integer
+        datapath: 12-bit ADC → integer FEx → int8-weight/int16-state
+        ΔGRU → integer FC, bit-true against the golden fixed-point model
+        (``core.fixed_point``).  All stream state is carried as integer
+        codes; decisions are argmaxes over int32 logit codes.
+      bundle: a promoted ``IntKwsBundle`` (``train.promote``) to serve.
+        With a bundle, ``params`` may be None and the bundle's Δ_TH is
+        authoritative; without one (numerics="int8"), ``params`` is
+        promoted in place — the train→deploy fold at session creation.
     """
 
     def __init__(self, params, cfg, *, threshold: float | None = None,
@@ -227,18 +304,33 @@ class StreamingKwsSession:
                  quantize_8b: bool = False, backend: str = "pallas",
                  interpret: bool | None = None,
                  fex: FeatureExtractor | FExConfig | None = None,
-                 fex_backend: str | None = None, mesh=None):
+                 fex_backend: str | None = None, mesh=None,
+                 numerics: str = "float32",
+                 bundle: fp.IntKwsBundle | None = None):
+        if numerics not in ("float32", "int8"):
+            raise ValueError(f"unknown numerics: {numerics!r}")
         self.cfg = cfg
         self.batch = batch
         self.mesh = mesh
+        self.numerics = numerics
         self.n_shards = shp.check_slot_partition(mesh, batch)
         self.threshold = (cfg.delta_threshold if threshold is None
                           else threshold)
-        self._gru, self._w_fc, self._b_fc = kws.serving_weights(
-            params, quantize_8b, mesh)
-        self._state: dg.DeltaState | None = None
         self._fex = (FeatureExtractor(fex) if isinstance(fex, FExConfig)
                      else fex)
+        self._bundle = bundle
+        if numerics == "int8":
+            if bundle is None:
+                self._bundle = fp.promote_kws(params, self.threshold,
+                                              fex=self._fex)
+            self.threshold = self._bundle.threshold
+            self._gru = shp.put_replicated(self._bundle.gru, mesh)
+            self._w_fc, self._b_fc = shp.put_replicated(
+                (self._bundle.w_fc, self._bundle.b_fc), mesh)
+        else:
+            self._gru, self._w_fc, self._b_fc = kws.serving_weights(
+                params, quantize_8b, mesh)
+        self._state: dg.DeltaState | None = None
         self._coef = None                           # replicated FEx coeffs
         self._fex_state: FExState | None = None
         self._audio_rem: np.ndarray | None = None   # carried tail samples
@@ -249,14 +341,31 @@ class StreamingKwsSession:
             fex_backend = "xla" if resolve_interpret(interpret) else "pallas"
         self._fex_backend = fex_backend
         # _process_chunk(gru, w_fc, b_fc, state, acc, feats): state/acc are
-        # slot-major, feats is time-major with slots on axis 1.
+        # slot-major, feats is time-major with slots on axis 1.  The int8
+        # step has the same argument geometry, so the shard wrapper is
+        # numerics-agnostic.
+        if numerics == "int8":
+            if backend not in ("pallas", "xla"):
+                raise ValueError(f"unknown ΔGRU backend: {backend!r}")
+            step_fn = functools.partial(
+                _process_chunk_int, threshold=self.threshold,
+                gfmt=self._bundle.gfmt, backend=backend,
+                interpret=interpret)
+            self._audio_step_fn = functools.partial(
+                _process_audio_chunk_int, threshold=self.threshold,
+                backend=backend, fex_backend=fex_backend,
+                interpret=interpret, gfmt=self._bundle.gfmt)
+        else:
+            step_fn = functools.partial(
+                _process_chunk, threshold=self.threshold,
+                backend=backend, interpret=interpret)
+            self._audio_step_fn = functools.partial(
+                _process_audio_chunk, threshold=self.threshold,
+                backend=backend, fex_backend=fex_backend,
+                interpret=interpret)
         self._step = jax.jit(self._shard(
-            functools.partial(_process_chunk, threshold=self.threshold,
-                              backend=backend, interpret=interpret),
-            n_args=6, slot_major=(3, 4), time_major=(5,), n_state_out=2))
-        self._audio_step_fn = functools.partial(
-            _process_audio_chunk, threshold=self.threshold, backend=backend,
-            fex_backend=fex_backend, interpret=interpret)
+            step_fn, n_args=6, slot_major=(3, 4), time_major=(5,),
+            n_state_out=2))
         self._audio_step = None                     # built when FEx is known
         if input_dim is not None:
             self._init_state(input_dim)
@@ -288,9 +397,20 @@ class StreamingKwsSession:
 
     def _init_state(self, input_dim: int):
         self._input_dim = input_dim
-        self._state = shp.put_slot_sharded(
-            dg.init_delta_state(self.batch, input_dim, self.cfg.d_model,
-                                self._gru), self.mesh)
+        if self.numerics == "int8":
+            state = fp.init_int_delta_state(self.batch, input_dim,
+                                            self.cfg.d_model,
+                                            self._bundle.gru)
+        else:
+            state = dg.init_delta_state(self.batch, input_dim,
+                                        self.cfg.d_model, self._gru)
+        self._state = shp.put_slot_sharded(state, self.mesh)
+
+    def _fresh_fex_state(self, n_channels: int) -> FExState:
+        if self.numerics == "int8":
+            return _unpack_state(
+                fp.init_int_fex_state(self.batch, n_channels))
+        return init_fex_state(self.batch, n_channels)
 
     def _require_fex(self) -> FeatureExtractor:
         if self._fex is None:
@@ -302,17 +422,28 @@ class StreamingKwsSession:
             raise ValueError(f"FEx emits {fcfg.n_active} channels, session "
                              f"state is {self._input_dim}-wide")
         if self._fex_state is None:
-            self._coef = shp.put_replicated(self._fex.coef, self.mesh)
+            if self.numerics == "int8":
+                # Fold the FEx coefficient bank into the bundle if the
+                # promotion happened without one (feature-mode bundles).
+                # fold_fex copies — a caller-shared bundle is untouched.
+                self._bundle = fp.fold_fex(self._bundle, self._fex)
+                self._coef = shp.put_replicated(self._bundle.coef,
+                                                self.mesh)
+                audio_step_fn = functools.partial(
+                    self._audio_step_fn, frame_shift=fcfg.frame_shift,
+                    ffmt=self._bundle.ffmt)
+            else:
+                self._coef = shp.put_replicated(self._fex.coef, self.mesh)
+                audio_step_fn = functools.partial(
+                    self._audio_step_fn, frame_shift=fcfg.frame_shift,
+                    env_alpha=fcfg.env_alpha, log_eps=fcfg.log_eps)
             self._fex_state = shp.put_slot_sharded(
-                init_fex_state(self.batch, fcfg.n_active), self.mesh)
+                self._fresh_fex_state(fcfg.n_active), self.mesh)
             self._audio_rem = np.zeros((self.batch, 0), np.float32)
-            # _process_audio_chunk(gru, w_fc, b_fc, coef, fex_state, state,
-            # acc, audio): fex_state/state/acc/audio are all slot-major.
+            # _process_audio_chunk[_int](gru, w_fc, b_fc, coef, fex_state,
+            # state, acc, audio): fex_state/state/acc/audio are slot-major.
             self._audio_step = jax.jit(self._shard(
-                functools.partial(self._audio_step_fn,
-                                  frame_shift=fcfg.frame_shift,
-                                  env_alpha=fcfg.env_alpha,
-                                  log_eps=fcfg.log_eps),
+                audio_step_fn,
                 n_args=8, slot_major=(4, 5, 6, 7), time_major=(),
                 n_state_out=3))
         return self._fex
@@ -400,7 +531,7 @@ class StreamingKwsSession:
             self._init_state(self._input_dim)
         if self._fex_state is not None:
             self._fex_state = shp.put_slot_sharded(
-                init_fex_state(self.batch, self._input_dim), self.mesh)
+                self._fresh_fex_state(self._input_dim), self.mesh)
             self._audio_rem = np.zeros((self.batch, 0), np.float32)
         self._acc = shp.put_slot_sharded(_zero_accum(self.n_shards),
                                          self.mesh)

@@ -5,11 +5,74 @@ default); ``--dry-run`` lowers+compiles the production-mesh program instead
 (see dryrun.py for the full campaign driver).  On a real multi-host pod the
 same module runs under ``jax.distributed.initialize()`` — the step
 functions, sharding rules and checkpointing are host-count agnostic.
+
+``--arch deltakws`` trains the paper's KWS model instead: QAT by default
+(8-bit STE weights + Q0.15 hidden grid — training simulates the deployed
+integer numerics), production Trainer (checkpoint/restore), and
+``--promote out.npz`` folds the final checkpoint into the integer weight
+bundle that ``repro.launch.serve --mode kws-audio --bundle out.npz``
+serves bit-true (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import argparse
 import sys
+
+
+def _kws_main(args) -> int:
+    """QAT train → checkpoint → promote: the KWS train-to-deploy path."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.data.gscd import synth_batch
+    from repro.frontend import FeatureExtractor
+    from repro.models import kws
+    from repro.train import optimizer as opt
+    from repro.train.promote import eval_promotion, make_kws_step_fn
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=fex.cfg.n_active)
+    ocfg = opt.AdamWConfig(lr=args.lr, weight_decay=0.01,
+                           warmup_steps=min(20, args.steps // 4),
+                           total_steps=args.steps)
+    opt_state = opt.init(params)
+    qat = not args.no_qat
+    step_fn = make_kws_step_fn(cfg, ocfg, args.threshold, qat=qat)
+
+    def data_fn(step):               # replayable: pure function of step
+        audio, labels = synth_batch(np.random.default_rng(step), args.batch)
+        return {"feats": fex(jnp.asarray(audio)),
+                "labels": jnp.asarray(labels)}
+
+    trainer = Trainer(TrainerConfig(ckpt_dir=args.ckpt_dir,
+                                    ckpt_every=args.ckpt_every),
+                      step_fn, params, opt_state, data_fn)
+    start = trainer.maybe_restore()
+    if start:
+        print(f"restored from step {start}")
+    hist = trainer.run(args.steps)
+    print(f"deltakws ({'QAT' if qat else 'float'}): "
+          f"loss {hist[0].metrics['loss']:.3f} → "
+          f"{hist[-1].metrics['loss']:.3f}, "
+          f"acc {hist[-1].metrics['acc']:.3f}, "
+          f"sparsity {hist[-1].metrics['sparsity']:.3f}")
+
+    # Eval: float forward vs the promoted integer pipeline.
+    acc_f, acc_i, bundle = eval_promotion(trainer.params, cfg, fex,
+                                          args.threshold)
+    print(f"eval acc: float {acc_f:.3f}, promoted int8 {acc_i:.3f} "
+          f"(Δ {acc_i - acc_f:+.3f})")
+    if args.promote:
+        from repro.train.promote import save_bundle
+        out = save_bundle(args.promote, bundle)
+        print(f"promoted int8 bundle → {out}  (serve with: "
+              f"python -m repro.launch.serve --mode kws-audio "
+              f"--bundle {out})")
+    return 0
 
 
 def main(argv=None):
@@ -20,10 +83,30 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (assigned) config instead of smoke")
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default: /tmp/repro_train (LM) or "
+                         "/tmp/deltakws_train (--arch deltakws) — "
+                         "per-arch so the two never mix checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-3)
+    # KWS (--arch deltakws) training options
+    ap.add_argument("--threshold", type=float, default=0.1,
+                    help="deltakws: train/deploy Δ_TH")
+    ap.add_argument("--no-qat", action="store_true",
+                    help="deltakws: disable quantization-aware training")
+    ap.add_argument("--promote", default="",
+                    help="deltakws: fold the trained model into an int8 "
+                         "bundle (.npz) at this path after training")
     args = ap.parse_args(argv)
+
+    if args.arch == "deltakws":
+        if args.batch == 8:          # LM smoke default is tiny for KWS
+            args.batch = 64
+        if args.ckpt_dir is None:
+            args.ckpt_dir = "/tmp/deltakws_train"
+        return _kws_main(args)
+    if args.ckpt_dir is None:
+        args.ckpt_dir = "/tmp/repro_train"
 
     import jax
     import jax.numpy as jnp

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import delta_gru as dg
-from repro.core.quantize import WEIGHT_Q, ste_quantize
+from repro.core.quantize import QFormat, WEIGHT_Q, ste_quantize
 from repro.parallel.sharding import AxTree, Sharder
 
 Array = jax.Array
@@ -67,19 +67,34 @@ def serving_weights(params, quantize_8b: bool = False, mesh=None):
     return shp.put_replicated((gru, params["w_fc"], params["b_fc"]), mesh)
 
 
+# The integer serving path stores ĥ on the Q0.15 grid; QAT snaps the
+# training-time hidden state to the same grid (straight-through).
+QAT_H_FORMAT = QFormat(int_bits=0, frac_bits=15)
+
+
 def forward(params, cfg, feats: Array, threshold: float | None = None,
-            quantize_8b: bool = False, backend: str | None = None):
+            quantize_8b: bool = False, backend: str | None = None,
+            qat: bool = False):
     """feats: (B, F, C) → (logits (B, 12), stats).
 
     ``backend`` overrides ``cfg.gru_backend``: "xla" (differentiable
     training path) or "pallas" (fused sequence-resident serving kernel,
     identical numerics — see core.delta_gru.delta_gru_scan).
+
+    ``qat=True`` makes training simulate the deployed integer numerics:
+    8-bit STE weights (implies ``quantize_8b``) and the hidden state
+    snapped to the Q0.15 grid with a straight-through gradient, so the
+    delta-threshold compares the loss sees are the ones the promoted
+    int8 bundle will perform.  Features are already on the 12-bit grid
+    (the FEx quantizes in-datapath).  XLA backend only.
     """
     th = cfg.delta_threshold if threshold is None else threshold
     be = (getattr(cfg, "gru_backend", "xla") if backend is None else backend)
-    gru = _gru_params(params, quantize_8b)
+    gru = _gru_params(params, quantize_8b or qat)
     xs = jnp.moveaxis(feats, 1, 0)                    # (F, B, C)
-    hs, _, stats = dg.delta_gru_scan(gru, xs, threshold=th, backend=be)
+    hs, _, stats = dg.delta_gru_scan(
+        gru, xs, threshold=th, backend=be,
+        h_qformat=QAT_H_FORMAT if qat else None)
     h_mean = jnp.mean(hs, axis=0)                     # mean-pool over frames
     logits = h_mean @ params["w_fc"] + params["b_fc"]
     return logits, stats
@@ -101,9 +116,9 @@ def forward_audio(params, cfg, audio: Array, fex, *,
 
 
 def loss_fn(params, cfg, batch: dict, threshold: float | None = None,
-            quantize_8b: bool = False):
+            quantize_8b: bool = False, qat: bool = False):
     logits, stats = forward(params, cfg, batch["feats"], threshold,
-                            quantize_8b)
+                            quantize_8b, qat=qat)
     labels = batch["labels"]
     logp = jax.nn.log_softmax(logits)
     ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

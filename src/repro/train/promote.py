@@ -1,0 +1,141 @@
+"""Train→deploy promotion: fold a checkpoint into the integer bundle.
+
+The deployment artifact of this repo is NOT a float parameter tree — it
+is the ``core.fixed_point.IntKwsBundle``: int8 weight codes, int32 bias
+codes on the accumulator grid, the static ``GruFormats``/``FexFormats``
+and the deployment Δ_TH.  This module is the bridge from training to
+that artifact:
+
+  * ``promote`` — pure fold of a (QAT-)trained parameter tree (re-export
+    of ``fixed_point.promote_kws``; no calibration data, no retraining);
+  * ``promote_checkpoint`` — the same fold applied OFFLINE to the newest
+    step of a ``train.checkpoint`` directory (promote a run you no
+    longer hold in memory; ``launch.train --arch deltakws --promote``
+    folds its live ``trainer.params`` instead, which may be ahead of the
+    last checkpoint);
+  * ``save_bundle``/``load_bundle`` — the on-disk format (a single .npz:
+    integer code arrays + a JSON metadata record holding the static
+    formats), consumed by ``StreamingKwsSession(..., numerics="int8",
+    bundle=...)`` and ``launch.serve --numerics int8 --bundle``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fp
+
+promote = fp.promote_kws
+
+
+def make_kws_step_fn(cfg, ocfg, threshold: float, qat: bool = True):
+    """Jitted KWS training step ``(params, opt_state, batch) →
+    (params, opt_state, metrics)`` — the QAT recipe shared by
+    ``launch.train --arch deltakws`` and ``examples/train_kws_e2e.py``
+    (single source: the numerics the promotion fold expects)."""
+    import jax
+
+    from repro.models import kws
+    from repro.train import optimizer as opt
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        (loss, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
+            params, cfg, batch, threshold, qat=qat)
+        params, opt_state, om = opt.update(ocfg, g, opt_state, params)
+        return params, opt_state, {"loss": loss, "acc": m["acc"],
+                                   "sparsity": m["sparsity"], **om}
+
+    return step_fn
+
+
+def eval_promotion(params, cfg, fex, threshold: float, *, n: int = 256,
+                   seed: int = 1234):
+    """Promote ``params`` and compare float vs bit-true int8 forward
+    accuracy on a held-out synthetic batch.  Returns
+    ``(acc_float, acc_int8, bundle)`` — the train→deploy report both
+    training entry points print."""
+    import jax.numpy as jnp
+
+    from repro.data.gscd import synth_batch
+    from repro.models import kws
+
+    audio, labels = synth_batch(np.random.default_rng(seed), n)
+    feats = fex(jnp.asarray(audio))
+    labels = jnp.asarray(labels)
+    logits_f, _ = kws.forward(params, cfg, feats, threshold=threshold)
+    bundle = fp.promote_kws(params, threshold, fex=fex)
+    logits_i, _, _ = fp.int_forward(bundle, feats)
+    acc_f = float(jnp.mean(jnp.argmax(logits_f, -1) == labels))
+    acc_i = float(jnp.mean(jnp.argmax(logits_i, -1) == labels))
+    return acc_f, acc_i, bundle
+
+
+def promote_checkpoint(ckpt_dir: str | pathlib.Path, cfg,
+                       threshold: float, fex=None,
+                       step: int | None = None) -> fp.IntKwsBundle:
+    """Fold the newest (or ``step``-th) checkpoint into an IntKwsBundle."""
+    from repro.models import kws
+    from repro.train import checkpoint as ckpt
+
+    step = ckpt.latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    import jax
+    input_dim = fex.cfg.n_active if fex is not None else 10
+    like, _ = kws.init_kws(jax.random.PRNGKey(0), cfg, input_dim=input_dim)
+    state = ckpt.restore(ckpt_dir, step, {"params": like})
+    return fp.promote_kws(state["params"], threshold, fex=fex)
+
+
+def save_bundle(path: str | pathlib.Path, bundle: fp.IntKwsBundle
+                ) -> pathlib.Path:
+    """Write the bundle as one .npz (code arrays + JSON meta).  Returns
+    the path actually written: np.savez appends ".npz" to bare names,
+    so normalize first — the returned path always loads back."""
+    path = pathlib.Path(path)
+    if not path.name.endswith(".npz"):
+        path = path.with_name(path.name + ".npz")
+    meta = {
+        "gfmt": dataclass_dict(bundle.gfmt),
+        "ffmt": dataclass_dict(bundle.ffmt) if bundle.ffmt else None,
+        "threshold": bundle.threshold,
+    }
+    arrays = {
+        "w_x": np.asarray(bundle.gru.w_x), "w_h": np.asarray(bundle.gru.w_h),
+        "b": np.asarray(bundle.gru.b),
+        "w_fc": np.asarray(bundle.w_fc), "b_fc": np.asarray(bundle.b_fc),
+        "meta": np.frombuffer(json.dumps(meta).encode(), np.uint8),
+    }
+    if bundle.coef is not None:
+        arrays["coef"] = np.asarray(bundle.coef)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **arrays)
+    return path
+
+
+def load_bundle(path: str | pathlib.Path) -> fp.IntKwsBundle:
+    """Inverse of ``save_bundle`` — codes and formats restore exactly
+    (everything is integer, so the round trip is bit-true)."""
+    data = np.load(pathlib.Path(path))
+    meta = json.loads(bytes(data["meta"]).decode())
+    gfmt = fp.GruFormats(**meta["gfmt"])
+    ffmt = fp.FexFormats(**meta["ffmt"]) if meta["ffmt"] else None
+    gru = fp.IntGruWeights(
+        w_x=jnp.asarray(data["w_x"], jnp.int8),
+        w_h=jnp.asarray(data["w_h"], jnp.int8),
+        b=jnp.asarray(data["b"], jnp.int32))
+    coef = (jnp.asarray(data["coef"], jnp.int32)
+            if "coef" in data.files else None)
+    return fp.IntKwsBundle(
+        gru=gru, w_fc=jnp.asarray(data["w_fc"], jnp.int8),
+        b_fc=jnp.asarray(data["b_fc"], jnp.int32), gfmt=gfmt,
+        threshold=float(meta["threshold"]), coef=coef, ffmt=ffmt)
+
+
+def dataclass_dict(dc) -> dict:
+    import dataclasses
+    return dataclasses.asdict(dc)

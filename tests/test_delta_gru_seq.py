@@ -83,6 +83,52 @@ def test_backend_rejects_unknown():
         delta_gru_scan(p, xs, backend="cuda")
 
 
+@pytest.mark.parametrize("seed", range(8))
+def test_differential_fuzz_xla_pallas_pallasint(seed):
+    """Differential fuzz: random shapes, thresholds and UNALIGNED T/B
+    through ``delta_gru_scan`` on all three backends — ``xla``,
+    ``pallas`` and ``pallas-int`` with identity quantization (the int
+    kernel's skeleton executing the float math).  Decisions (argmax of
+    an FC head over the hidden trajectory) and nz-counts must agree
+    bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 40))
+    B = int(rng.integers(1, 11))           # deliberately not power-of-2
+    I = int(rng.integers(2, 20))
+    H = int(rng.integers(3, 48))
+    th = float(rng.uniform(0.0, 0.6))
+    p = init_delta_gru(jax.random.PRNGKey(seed + 100), I, H)
+    xs = jnp.asarray(rng.normal(0, 0.5, (T, B, I)), jnp.float32)
+    w_fc = jnp.asarray(rng.normal(0, 0.3, (H, 12)), jnp.float32)
+
+    outs = {be: delta_gru_scan(p, xs, threshold=th, backend=be)
+            for be in ("xla", "pallas", "pallas-int")}
+    hs_ref, fin_ref, st_ref = outs["xla"]
+    votes_ref = jnp.argmax(hs_ref @ w_fc, -1)
+    for be in ("pallas", "pallas-int"):
+        hs, fin, st = outs[be]
+        np.testing.assert_array_equal(np.asarray(hs), np.asarray(hs_ref),
+                                      err_msg=be)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(hs @ w_fc, -1)), np.asarray(votes_ref),
+            err_msg=be)
+        np.testing.assert_array_equal(np.asarray(st.nz_dx),
+                                      np.asarray(st_ref.nz_dx), err_msg=be)
+        np.testing.assert_array_equal(np.asarray(st.nz_dh),
+                                      np.asarray(st_ref.nz_dh), err_msg=be)
+        for a, b in zip(fin, fin_ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=be)
+
+
+def test_pallas_int_identity_rejects_qat():
+    p, xs = _setup(T=4, B=2)
+    from repro.core.quantize import QFormat
+    with pytest.raises(ValueError):
+        delta_gru_scan(p, xs, backend="pallas-int",
+                       h_qformat=QFormat(0, 15))
+
+
 def test_pallas_blocked_fallback_when_weights_exceed_vmem():
     """Weights over the VMEM budget must route through the block-sparse
     delta_matvec composition and still match the XLA scan."""

@@ -74,13 +74,29 @@ def test_serve_commands_parse_against_the_cli():
     from repro import commands
     from repro.launch import serve
     parser = serve.build_parser()
-    for cmd in (commands.SERVE_CMD, commands.SERVE_SHARDED_CMD):
+    for cmd in (commands.SERVE_CMD, commands.SERVE_SHARDED_CMD,
+                commands.SERVE_INT8_CMD, commands.SERVE_BUNDLE_CMD):
         words = _split_env(cmd)
         flags = words[words.index("repro.launch.serve") + 1:]
         args = parser.parse_args(flags)
         assert args.mode == "kws-audio"
         assert args.slots % args.devices == 0, \
             "documented --slots must divide by documented --devices"
+        if cmd is commands.SERVE_INT8_CMD:
+            assert args.numerics == "int8"
+
+
+def test_train_promote_command_parses_and_feeds_serve_bundle():
+    """The documented train→deploy pair is consistent: the promote path
+    the train command writes is the one the serve command consumes."""
+    from repro import commands
+    from repro.launch import serve
+    words = _split_env(commands.TRAIN_PROMOTE_CMD)
+    assert words[words.index("-m") + 1] == "repro.launch.train"
+    assert words[words.index("--arch") + 1] == "deltakws"
+    promote_path = words[words.index("--promote") + 1]
+    serve_words = _split_env(commands.SERVE_BUNDLE_CMD)
+    assert serve_words[serve_words.index("--bundle") + 1] == promote_path
 
 
 def test_serve_bench_default_sweep_covers_scaling_pair():

@@ -163,6 +163,46 @@ class TestAudioInSession:
         assert not np.array_equal(np.asarray(again[:, 1]),
                                   np.asarray(first[:, 1]))
 
+    @pytest.mark.parametrize("numerics,seed", [("float32", 0),
+                                               ("float32", 1),
+                                               ("int8", 0), ("int8", 1)])
+    def test_chunk_split_fuzz_bit_identical(self, numerics, seed):
+        """Streaming chunk-invariance fuzz: RANDOM chunk splits —
+        including 1-sample chunks — through ``process_audio`` produce
+        bit-identical decisions to the one-shot call, in both float and
+        int8 numerics (the remainder-carry + state-carry contract)."""
+        from repro.configs import get_config
+        from repro.launch.streaming import StreamingKwsSession
+        from repro.models import kws
+        cfg = get_config("deltakws")
+        params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg, input_dim=10)
+        rng = np.random.default_rng(seed)
+        T = 1200
+        audio = rng.uniform(-0.8, 0.8, T).astype(np.float32)
+        # random cut points; force a 1-sample chunk into every split
+        cuts = np.sort(rng.choice(np.arange(1, T), size=4, replace=False))
+        one = int(rng.integers(1, T - 1))
+        cuts = np.unique(np.concatenate([cuts, [one, one + 1]]))
+        bounds = [0, *cuts.tolist(), T]
+
+        def session():
+            return StreamingKwsSession(params, cfg, threshold=0.1,
+                                       fex=FeatureExtractor(),
+                                       numerics=numerics)
+
+        once = session().process_audio(audio)
+        sess = session()
+        outs = [sess.process_audio(audio[a:b])
+                for a, b in zip(bounds, bounds[1:])]
+        chunked_lg = jnp.concatenate(
+            [o.logits for o in outs if o.logits.shape[0]], axis=0)
+        chunked_votes = jnp.concatenate(
+            [o.votes for o in outs if o.votes.shape[0]], axis=0)
+        np.testing.assert_array_equal(np.asarray(chunked_lg),
+                                      np.asarray(once.logits))
+        np.testing.assert_array_equal(np.asarray(chunked_votes),
+                                      np.asarray(once.votes))
+
     def test_forward_audio_matches_offline_pipeline(self):
         from repro.models import kws
         cfg, params, fex, _ = self._session()

@@ -1,0 +1,95 @@
+"""Property tests for ``core.quantize`` — the formats every integer
+surface (golden model, kernels, promotion) is built on.
+
+Runs under hypothesis when installed; degrades to the deterministic
+sample grid of ``tests/_hypothesis_compat.py`` in a bare container.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.quantize import (QFormat, quantize_audio_12b,
+                                 quantize_weights_8b, ste_quantize)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 14))
+def test_to_int_from_int_roundtrip(int_bits, frac_bits):
+    """from_int ∘ to_int == quantize for in-range values, and
+    to_int ∘ from_int is the identity on every representable code."""
+    fmt = QFormat(int_bits, frac_bits)
+    rng = np.random.default_rng(int_bits * 31 + frac_bits)
+    x = rng.uniform(fmt.min_val, fmt.max_val, 128)
+    np.testing.assert_allclose(fmt.from_int(fmt.to_int(x)),
+                               fmt.quantize(x), rtol=0, atol=0)
+    codes = np.arange(-(2 ** (fmt.total_bits - 1)),
+                      2 ** (fmt.total_bits - 1))
+    np.testing.assert_array_equal(fmt.to_int(fmt.from_int(codes)), codes)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 14))
+def test_saturation_at_min_and_max(int_bits, frac_bits):
+    fmt = QFormat(int_bits, frac_bits)
+    big = np.array([1e12, fmt.max_val + 1.0, fmt.max_val + fmt.step])
+    np.testing.assert_array_equal(fmt.quantize(big),
+                                  np.full(3, fmt.max_val))
+    small = np.array([-1e12, fmt.min_val - 1.0, fmt.min_val - fmt.step])
+    np.testing.assert_array_equal(fmt.quantize(small),
+                                  np.full(3, fmt.min_val))
+    # integer codes saturate at the word limits, consistently with the
+    # value-domain clip
+    assert int(fmt.to_int(np.array([1e12]))[0]) == \
+        2 ** (fmt.total_bits - 1) - 1
+    assert int(fmt.to_int(np.array([-1e12]))[0]) == \
+        -(2 ** (fmt.total_bits - 1))
+    # min_val/max_val themselves are exactly representable fixed points
+    np.testing.assert_array_equal(
+        fmt.quantize(np.array([fmt.min_val, fmt.max_val])),
+        np.array([fmt.min_val, fmt.max_val]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2), st.integers(2, 12))
+def test_ste_gradient_is_identity(int_bits, frac_bits):
+    """The straight-through estimator quantizes forward but passes the
+    cotangent through unchanged — including where quantize saturates
+    (the STE contract QAT training relies on)."""
+    fmt = QFormat(int_bits, frac_bits)
+    x = jnp.asarray(np.linspace(fmt.min_val - 1.0, fmt.max_val + 1.0, 64),
+                    jnp.float32)
+    y, vjp = jax.vjp(lambda v: ste_quantize(v, fmt), x)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(fmt.quantize(x)))
+    ct = jnp.asarray(np.random.default_rng(0).normal(size=64), jnp.float32)
+    (grad,) = vjp(ct)
+    np.testing.assert_array_equal(np.asarray(grad), np.asarray(ct))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 14))
+def test_quantize_idempotent_on_grid(frac_bits):
+    fmt = QFormat(0, frac_bits)
+    rng = np.random.default_rng(frac_bits)
+    q = fmt.quantize(rng.uniform(fmt.min_val, fmt.max_val, 256))
+    np.testing.assert_array_equal(fmt.quantize(q), q)
+
+
+def test_audio_12b_is_on_grid_and_saturates():
+    x = jnp.asarray([-2.0, -1.0, 0.0, 0.3, 1.0, 2.0], jnp.float32)
+    q = np.asarray(quantize_audio_12b(x))
+    fmt = QFormat(0, 11)
+    assert q.min() >= fmt.min_val and q.max() <= fmt.max_val
+    steps = q / fmt.step
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-6)
+
+
+def test_weight_quantization_scale_is_power_of_two():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(0, 0.4, (16, 8)), jnp.float32)
+    wq, scale = quantize_weights_8b(w)
+    assert float(np.log2(scale)) == int(np.log2(scale))
+    codes = np.asarray(wq) / (scale * 2.0 ** -7)
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+    assert np.abs(codes).max() <= 128          # Q0.7: [-1, 1 − 2⁻⁷]

@@ -225,6 +225,24 @@ for r in range(4):
     sched.submit(r)
 sched.admit()
 assert sched.occupancy() == [2, 2], sched.occupancy()
+
+# int8 numerics: the sharded INTEGER engine is bit-identical too (the
+# promoted bundle's code-domain state shards on slots like the floats).
+ref_i = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex,
+                            numerics="int8")
+eng_i = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex,
+                            mesh=make_slot_mesh(2), numerics="int8")
+for sess in (ref_i, eng_i):
+    sess.process_audio(audio)
+    sess.reset_streams([1, 2])
+o_ri = ref_i.process_audio(audio)
+o_ei = eng_i.process_audio(audio)
+np.testing.assert_array_equal(np.asarray(o_ri.logits),
+                              np.asarray(o_ei.logits))
+np.testing.assert_array_equal(np.asarray(o_ri.votes),
+                              np.asarray(o_ei.votes))
+assert ref_i.summary() == eng_i.summary()
+print("SHARDED_INT8_OK")
 print("SHARDED_SERVE_OK")
 """
 
@@ -237,4 +255,5 @@ def test_sharded_engine_two_devices_bit_identical():
         env={**__import__("os").environ, "PYTHONPATH": str(REPO / "src")},
         timeout=540)
     assert r.returncode == 0, f"{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "SHARDED_INT8_OK" in r.stdout
     assert "SHARDED_SERVE_OK" in r.stdout
