@@ -26,11 +26,12 @@ def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(ts) * 1e6)
 
 
-def train_kws(n_steps: int = 300, train_th: float = 0.1,
-              fex_cfg: FExConfig | None = None, seed: int = 0,
-              batch: int = 64):
-    """Train the paper's KWS model on SynthCommands; returns
-    (cfg, params, fex, eval_feats, eval_labels)."""
+def _train_kws_loop(loss_fn, label_key: str, synth, n_steps: int,
+                    train_th: float, fex_cfg: FExConfig | None, seed: int,
+                    batch: int):
+    """One parameterized training loop for both KWS losses (utterance
+    mean-pool CE and frame-level detection CE): a hyperparameter change
+    here moves the benchmark model and the served model together."""
     cfg = get_config("deltakws")
     fex = FeatureExtractor(fex_cfg or FExConfig())
     params, _ = kws.init_kws(jax.random.PRNGKey(seed), cfg,
@@ -42,19 +43,41 @@ def train_kws(n_steps: int = 300, train_th: float = 0.1,
 
     @jax.jit
     def step(params, state, feats, labels):
-        (loss, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
-            params, cfg, {"feats": feats, "labels": labels}, train_th)
+        (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, {"feats": feats, label_key: labels}, train_th)
         params, state, _ = opt.update(ocfg, g, state, params)
         return params, state, loss
 
     for _ in range(n_steps):
-        audio, labels = synth_batch(rng, batch)
+        audio, labels = synth(rng, batch)
         feats = fex(jnp.asarray(audio))
         params, state, _ = step(params, state, feats, jnp.asarray(labels))
+    return cfg, params, fex
 
+
+def train_kws(n_steps: int = 300, train_th: float = 0.1,
+              fex_cfg: FExConfig | None = None, seed: int = 0,
+              batch: int = 64):
+    """Train the paper's KWS model on SynthCommands; returns
+    (cfg, params, fex, eval_feats, eval_labels)."""
+    cfg, params, fex = _train_kws_loop(kws.loss_fn, "labels", synth_batch,
+                                       n_steps, train_th, fex_cfg, seed,
+                                       batch)
     audio, labels = synth_batch(np.random.default_rng(1234), 256)
     feats = fex(jnp.asarray(audio))
     return cfg, params, fex, feats, jnp.asarray(labels)
+
+
+def train_kws_frames(n_steps: int = 300, train_th: float = 0.1,
+                     fex_cfg: FExConfig | None = None, seed: int = 0,
+                     batch: int = 32):
+    """Frame-level detection training (``kws.frame_loss_fn`` on short
+    continuous streams) — the model detect_bench sweeps; returns
+    (cfg, params, fex)."""
+    from repro.data.continuous import synth_frame_batch
+    return _train_kws_loop(kws.frame_loss_fn, "frame_labels",
+                           synth_frame_batch, n_steps, train_th, fex_cfg,
+                           seed, batch)
 
 
 def eval_at_threshold(cfg, params, feats, labels, th: float):

@@ -1,0 +1,208 @@
+"""DET-curve sweep for the always-on detection runtime (DESIGN.md §10).
+
+Produces the documented operating-point story: for each Δ_TH (the
+paper's temporal-sparsity/energy knob) the continuous-audio stream is
+served ONCE through the full VAD→FEx→ΔGRU pipeline (collecting per-frame
+posteriors, temporal sparsity, VAD duty and modeled energy/decision),
+then the detection threshold is swept over the SAME posterior trace with
+``detector_scan`` — valid because the decision head is causal and
+chunk-invariant, so re-scanning the recorded posteriors is bit-identical
+to serving each threshold live, at a fraction of the cost.
+
+Each (Δ_TH, fire_threshold) pair is one operating point:
+miss rate × FA/hr (the DET axes) × sparsity × nJ/decision.  A VAD-off
+row at the SMALLEST swept Δ_TH (0.0 by default, where the delta
+deadband is closed and the gate is the only thing clamping silence)
+isolates what the energy gate contributes on silence-heavy audio.
+Written to ``BENCH_detect.json`` at the repo root; CI runs a quick
+configuration and uploads the artifact.
+
+Sanity gates (skipped with BENCH_STRICT=0 on noisy shared runners):
+FA/hr must be non-increasing in fire_threshold along each DET curve,
+and the model must actually detect something at the friendliest point.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_detect.json"
+
+FRAME_SHIFT = 128
+
+
+def serve_stream(params, cfg, fex, stream, *, delta_th, vad_cfg,
+                 chunk_samples, numerics="float32"):
+    """Serve one continuous stream through a detect session; returns
+    (posteriors (F, K) np.float32, summary) — the per-Δ_TH base run the
+    threshold sweep re-scans."""
+    import jax
+    import numpy as np
+    from repro.launch.streaming import StreamingKwsSession
+    from repro.models.detector import DetectorConfig
+
+    sess = StreamingKwsSession(params, cfg, threshold=delta_th, batch=1,
+                               fex=fex, numerics=numerics,
+                               detector=DetectorConfig(), vad=vad_cfg)
+    n = len(stream.audio) - len(stream.audio) % FRAME_SHIFT
+    chunk = chunk_samples - chunk_samples % FRAME_SHIFT or FRAME_SHIFT
+    posts = []
+    for off in range(0, n, chunk):
+        out = sess.process_audio(stream.audio[None, off:off + chunk])
+        posts.append(np.asarray(jax.nn.softmax(out.logits, -1))[:, 0])
+    return np.concatenate(posts, axis=0), sess.summary()
+
+
+def sweep_fire_thresholds(posts, truth, fire_thresholds, tol_frames):
+    """Re-scan recorded posteriors at each fire threshold → DET points."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import detector as det
+
+    points = []
+    for fire in fire_thresholds:
+        cfg = det.DetectorConfig(fire_threshold=fire,
+                                 release_threshold=0.75 * fire)
+        state = det.init_detector_state(1, posts.shape[-1])
+        _, events = det.detector_scan(cfg, state,
+                                      jnp.asarray(posts[:, None, :]))
+        fires = det.fires_from_events(np.asarray(events))
+        p = det.det_point(fires, truth, len(posts), tol_frames=tol_frames)
+        points.append((fire, p))
+    return points
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    import numpy as np
+
+    sys.path.insert(0, str(pathlib.Path(__file__).parent))
+    from common import train_kws_frames
+
+    from repro.data.continuous import make_stream
+    from repro.data.gscd import FS
+    from repro.frontend.vad import VADConfig, VAD_OFF
+
+    print(f"# training detector ({args.train_steps} frame-level steps) ...")
+    cfg, params, fex = train_kws_frames(n_steps=args.train_steps)
+
+    stream = make_stream(np.random.default_rng(args.seed),
+                         duration_s=args.stream_seconds,
+                         snr_db=args.snr_db,
+                         events_per_min=args.events_per_min)
+    truth = stream.truth_frames(FRAME_SHIFT)
+    print(f"# stream: {stream.duration_s:.0f} s, {len(truth)} ground-truth "
+          f"events @ {args.snr_db:.0f} dB SNR")
+
+    # Ascending order is load-bearing: the ablation row pins itself to
+    # the smallest Δ_TH and the FA-monotonicity gate walks each DET
+    # curve from the most permissive fire threshold up.
+    delta_ths = sorted(float(x) for x in args.delta_thresholds.split(","))
+    fire_ths = sorted(float(x) for x in args.fire_thresholds.split(","))
+    tol = int(round(args.tol_s * FS / FRAME_SHIFT))
+    vad_on = VADConfig(energy_threshold=args.vad_threshold)
+
+    rows = []
+    configs = [(dth, True) for dth in delta_ths]
+    # VAD ablation at the FIRST (smallest) Δ_TH: with the delta deadband
+    # closed the gate is the only thing clamping silence, so this row
+    # isolates its sparsity/energy contribution.
+    configs.append((delta_ths[0], False))
+    for delta_th, use_vad in configs:
+        posts, summ = serve_stream(
+            params, cfg, fex, stream, delta_th=delta_th,
+            vad_cfg=vad_on if use_vad else VAD_OFF,
+            chunk_samples=args.chunk_samples)
+        for fire, p in sweep_fire_thresholds(posts, truth, fire_ths, tol):
+            rows.append({
+                "delta_threshold": delta_th,
+                "vad": use_vad,
+                "fire_threshold": fire,
+                "miss_rate": p.miss_rate,
+                "fa_per_hour": p.fa_per_hour,
+                "hits": p.hits, "misses": p.misses,
+                "false_alarms": p.false_alarms,
+                "n_events": p.n_events,
+                "sparsity": summ.sparsity,
+                "vad_duty": summ.vad_duty,
+                "energy_nj_per_decision": summ.energy_nj_per_decision,
+                "fex_energy_nj_per_decision":
+                    summ.fex_energy_nj_per_decision,
+                "vad_energy_nj_per_decision":
+                    summ.vad_energy_nj_per_decision,
+                "latency_ms": summ.latency_ms,
+            })
+        tag = f"Δ_TH={delta_th} vad={'on' if use_vad else 'off'}"
+        print(f"# {tag}: sparsity {summ.sparsity:.3f}, duty "
+              f"{summ.vad_duty:.3f}, {summ.energy_nj_per_decision:.1f} "
+              f"nJ/decision")
+        for r in rows[-len(fire_ths):]:
+            print(f"    fire={r['fire_threshold']:.2f}: miss "
+                  f"{r['miss_rate']:.2f}, {r['fa_per_hour']:.1f} FA/hr")
+
+    BENCH_JSON.write_text(json.dumps({
+        "note": "synthetic continuous-audio DET sweep (SynthCommands "
+                "keywords in noise); energy/latency from the calibrated "
+                "IC model, detection quality is relative — absolute "
+                "GSCD numbers need the real dataset",
+        "workload": {
+            "stream_seconds": args.stream_seconds,
+            "snr_db": args.snr_db,
+            "events_per_min": args.events_per_min,
+            "train_steps": args.train_steps,
+            "vad_threshold": args.vad_threshold,
+            "tol_s": args.tol_s,
+            "n_events": len(truth),
+        },
+        "operating_points": rows,
+    }, indent=2) + "\n")
+    print(f"# wrote {BENCH_JSON} ({len(rows)} operating points)")
+
+    strict = os.environ.get("BENCH_STRICT", "1") != "0"
+    problems = []
+    for delta_th, use_vad in configs:
+        curve = [r for r in rows if r["delta_threshold"] == delta_th
+                 and r["vad"] == use_vad]
+        fa = [r["false_alarms"] for r in curve]
+        # Non-increasing along the curve, with one FA of slack: raising
+        # the threshold can delay a crossing past an event's tolerance
+        # window, converting a single hit into a single false alarm.
+        if any(b > a + 1 for a, b in zip(fa, fa[1:])):
+            problems.append(f"false alarms not non-increasing along the "
+                            f"DET curve at Δ_TH={delta_th} "
+                            f"vad={use_vad}: {fa}")
+    if all(r["hits"] == 0 for r in rows):
+        problems.append("detector never hit a single ground-truth event "
+                        "at any operating point")
+    for msg in problems:
+        if strict:
+            raise AssertionError(msg)
+        print("# WARNING: " + msg)
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="detect_bench")
+    ap.add_argument("--train-steps", type=int, default=700)
+    ap.add_argument("--stream-seconds", type=float, default=120.0)
+    ap.add_argument("--snr-db", type=float, default=20.0)
+    ap.add_argument("--events-per-min", type=float, default=10.0)
+    ap.add_argument("--delta-thresholds", default="0.0,0.1,0.2",
+                    help="comma list of Δ_TH values (the energy knob)")
+    ap.add_argument("--fire-thresholds",
+                    default="0.30,0.40,0.50,0.60,0.70,0.80",
+                    help="comma list of detector fire thresholds "
+                         "(the DET-curve sweep; release = 0.75x fire)")
+    ap.add_argument("--vad-threshold", type=float, default=0.02)
+    ap.add_argument("--chunk-samples", type=int, default=16384)
+    ap.add_argument("--tol-s", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=7)
+    return ap
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,6 +30,12 @@ SERVE_INT8_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
                   "--mode kws-audio --slots 8 --requests 16 "
                   "--numerics int8")
 
+# Always-on detection (continuous audio in, keyword events out) -------------
+SERVE_DETECT_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
+                    "--mode kws-detect --slots 4 --stream-seconds 30 "
+                    "--train-steps 700")
+DETECT_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/detect_bench.py"
+
 # Train → deploy (QAT + promotion to the integer bundle) --------------------
 TRAIN_PROMOTE_CMD = ("PYTHONPATH=src python -m repro.launch.train "
                      "--arch deltakws --steps 300 "
@@ -52,6 +58,8 @@ ALL_COMMANDS = {
     "serve": SERVE_CMD,
     "serve_sharded": SERVE_SHARDED_CMD,
     "serve_int8": SERVE_INT8_CMD,
+    "serve_detect": SERVE_DETECT_CMD,
+    "detect_bench": DETECT_BENCH_CMD,
     "train_promote": TRAIN_PROMOTE_CMD,
     "serve_bundle": SERVE_BUNDLE_CMD,
     "serve_bench": SERVE_BENCH_CMD,

@@ -237,30 +237,48 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
                    ) -> tuple[Array, DeltaState, DeltaStats]:
     """Run a ΔGRU over ``xs`` of shape (T, B, I).
 
-    Returns (hs (T,B,H), final_state, per-step stats stacked over T).
+    Args:
+      params: ``DeltaGRUParams`` (w_x (I, 3H), w_h (H, 3H), b (3H,)).
+      xs: (T, B, I) frame-major inputs.
+      threshold: Δ_TH — the transmit deadband (0.0 = dense GRU exactly).
+      state: carried ``DeltaState`` (None = fresh stream: zero x̂/ĥ/h,
+        M seeded with the bias so M == W_x x̂ + W_h ĥ + b holds).
+      backend: implementation selector, identical numerics —
+        * ``"xla"``    — ``jax.lax.scan`` over ``DeltaGRUCell`` (default;
+          differentiable — the training path).
+        * ``"pallas"`` — ONE fused ``pallas_call`` for the whole sequence
+          with weights and delta state VMEM-resident across grid steps
+          (``kernels.delta_gru_seq``); falls back to a per-step
+          composition of the block-sparse ``delta_matvec`` kernel when
+          the weights exceed ``vmem_budget_bytes``.
+        * ``"pallas-int"`` — the integer kernel's skeleton in its
+          identity-quant conformance mode (float math, same op order):
+          bit-identical to both paths above, exercising the int kernel's
+          dispatch/plumbing.  The REAL integer datapath (int8 weights,
+          int16 state, code-domain I/O) is
+          ``core.fixed_point.int_gru_scan`` on a promoted
+          ``IntGruWeights`` — it has its own entry point because its
+          state and I/O live on integer grids.
+      interpret: force the Pallas interpreter on/off (None = platform
+        default).
+      block_b / block_i / block_o: Pallas tile-size overrides (batch,
+        input-block, output-block; None = auto divisors).
+      h_qformat: QAT hidden-state quantization grid (XLA backend only —
+        see ``DeltaGRUCell``).
+      vmem_budget_bytes: weight budget above which "pallas" takes the
+        block-sparse per-step fallback.
 
-    ``backend`` selects the implementation (identical numerics):
-      * ``"xla"``    — ``jax.lax.scan`` over ``DeltaGRUCell`` (default;
-        differentiable — the training path).
-      * ``"pallas"`` — ONE fused ``pallas_call`` for the whole sequence
-        with weights and delta state VMEM-resident across grid steps
-        (``kernels.delta_gru_seq``); falls back to a per-step composition
-        of the block-sparse ``delta_matvec`` kernel when the weights
-        exceed ``vmem_budget_bytes``.
-      * ``"pallas-int"`` — the integer kernel's skeleton in its
-        identity-quant conformance mode (float math, same op order):
-        bit-identical to both paths above, exercising the int kernel's
-        dispatch/plumbing.  The REAL integer datapath (int8 weights,
-        int16 state, code-domain I/O) is ``core.fixed_point.int_gru_scan``
-        on a promoted ``IntGruWeights`` — it has its own entry point
-        because its state and I/O live on integer grids.
+    Returns:
+      (hs (T, B, H), final ``DeltaState``, per-step ``DeltaStats``
+      stacked over T).
 
-    The XLA path is differentiable: the delta threshold acts as a
-    piecewise-constant gate; gradients flow through the transmitted path
-    (straight-through on the gate), matching how DeltaRNN networks are
-    trained.  The Pallas paths are inference/serving hot paths.
-    ``h_qformat`` (XLA backend only) enables QAT hidden-state
-    quantization — see ``DeltaGRUCell``.
+    State contract: the returned state makes chunking bit-invisible —
+    scanning [a|b] with the state carried equals one scan of the
+    concatenation, on every backend.  The XLA path is differentiable:
+    the delta threshold acts as a piecewise-constant gate; gradients
+    flow through the transmitted path (straight-through on the gate),
+    matching how DeltaRNN networks are trained.  The Pallas paths are
+    inference/serving hot paths.
     """
     T, B, I = xs.shape
     H = params.w_h.shape[0]

@@ -140,6 +140,24 @@ def fex_energy_nj(n_samples: float, n_channels: int = 10) -> float:
     return n_samples * E_FEX_SAMPLE_NJ * _fex_channel_scale(n_channels)
 
 
+# VAD energy gate (DESIGN.md §10): one rectify + accumulate per audio
+# sample plus a per-frame compare, running on the FEx's serial datapath.
+# Priced as that op share of the measured per-sample FEx energy: the
+# 10-channel bank spends ~12 ops/sample/channel (two biquads + envelope),
+# the VAD ~2 ops/sample — so the always-on gate costs ~1.7% of the FEx
+# block, orders of magnitude below the ΔRNN energy it saves in silence.
+VAD_OPS_PER_SAMPLE = 2
+_FEX_OPS_PER_SAMPLE_10CH = 12 * 10
+E_VAD_SAMPLE_NJ = (E_FEX_SAMPLE_NJ * VAD_OPS_PER_SAMPLE
+                   / _FEX_OPS_PER_SAMPLE_10CH)
+
+
+def vad_energy_nj(n_samples: float) -> float:
+    """Energy of the always-on VAD energy detector over ``n_samples``
+    raw audio samples (channel-count independent: it taps the input)."""
+    return n_samples * E_VAD_SAMPLE_NJ
+
+
 def cost_from_sparsity(sparsity: float, **kw) -> CostReport:
     """Convenience: cost at a given average temporal sparsity."""
     return frame_cost(macs_exec=(1.0 - sparsity) * DENSE_GRU_MACS, **kw)

@@ -495,11 +495,22 @@ class IntKwsBundle:
 def promote_kws(params, threshold: float, fex=None) -> IntKwsBundle:
     """Fold a (QAT-)trained float parameter tree into the integer bundle.
 
-    ``params`` is the ``models.kws.init_kws`` tree; ``fex`` an optional
-    ``frontend.fex.FeatureExtractor`` whose coefficient bank is folded
-    for the audio-in path.  Pure fold — no retraining, no calibration
-    data: every format is either fixed by the IC or derived from the
-    trained dynamic range.
+    Args:
+      params: the ``models.kws.init_kws`` tree (w_x/w_h/b/w_fc/b_fc).
+      threshold: the float Δ_TH to serve at; stored on the bundle and
+        FLOOR-quantized to a code at serving time so the integer gate
+        transmits exactly the deltas the float gate transmits on grid
+        values.
+      fex: optional ``frontend.fex.FeatureExtractor`` whose coefficient
+        bank is folded in for the audio-in path (feature-mode bundles
+        fold it lazily at session creation — see ``fold_fex``).
+
+    Returns:
+      An ``IntKwsBundle``: int8 Q0.7×2^e weight codes, bias codes on
+      the Q5.18 accumulator grid, static per-tensor formats, and Δ_TH.
+
+    Pure fold — no retraining, no calibration data: every format is
+    either fixed by the IC or derived from the trained dynamic range.
     """
     from repro.core.delta_gru import DeltaGRUParams
     gru_p = DeltaGRUParams(params["w_x"], params["w_h"], params["b"])

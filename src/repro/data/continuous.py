@@ -1,0 +1,170 @@
+"""Continuous-audio stream synthesis with ground-truth event labels.
+
+The per-utterance GSCD fixtures (``data.gscd``) answer "which keyword is
+this 1 s clip?"; the deployment question is "when did a keyword occur in
+this unbounded stream, and how often does the detector cry wolf?".
+This module synthesizes arbitrarily long audio streams — keyword
+utterances from the SynthCommands formant model placed into a
+background-noise bed at a controlled SNR, separated by exponentially
+distributed silences — together with the exact sample span and label of
+every placed keyword.  ``benchmarks/detect_bench.py`` and
+``serve.py --mode kws-detect`` score detector fires against these
+ground-truth events (FA/hr, miss rate — the DET-curve axes).
+
+Level convention: keywords are synthesized at the TRAINING amplitude
+distribution (peak 0.3–0.9, what ``gscd.synth_batch`` produces), and
+``snr_db`` sets the noise bed RELATIVE to the keyword RMS — so a sweep
+over SNR degrades the stream without pushing the keywords themselves
+off the distribution the model was trained on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.gscd import FS, ClassSpec, _SPECS
+from repro.models.kws import CLASSES
+
+KEYWORD_CLASSES = tuple(i for i, name in enumerate(CLASSES)
+                        if name in _SPECS)        # class ids 2..11
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One ground-truth keyword occurrence (inclusive sample bounds)."""
+
+    start: int        # first sample of the utterance
+    end: int          # last sample (inclusive)
+    label: int        # class id (models.kws.CLASSES index)
+
+    def frames(self, frame_shift: int = 128) -> tuple[int, int, int]:
+        """(start_frame, end_frame, label) at decision granularity."""
+        return (self.start // frame_shift, self.end // frame_shift,
+                self.label)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousStream:
+    """A synthesized always-on audio stream with its event labels."""
+
+    audio: np.ndarray                  # (T,) float32 in [-1, 1)
+    events: list[StreamEvent]
+    fs: int = FS
+    snr_db: float = 0.0
+
+    @property
+    def duration_s(self) -> float:
+        return len(self.audio) / self.fs
+
+    def truth_frames(self, frame_shift: int = 128
+                     ) -> list[tuple[int, int, int]]:
+        """Ground truth at frame granularity — the ``detector.det_point``
+        truth format."""
+        return [e.frames(frame_shift) for e in self.events]
+
+
+def _synth_utterance(rng: np.random.Generator, spec: ClassSpec,
+                     dur_s: float) -> np.ndarray:
+    """One keyword utterance occupying EXACTLY its returned samples
+    (unlike ``gscd._synth_keyword``, which hides the utterance somewhere
+    inside a fixed 1 s window — useless as a ground-truth span)."""
+    n = int(round(dur_s * FS))
+    t = np.arange(n) / FS
+    env = np.exp(-0.5 * ((t - dur_s / 2) / (dur_s / 2.5)) ** 2)
+    env *= 0.5 * (1 + np.cos(2 * np.pi * spec.am_rate * t)) ** 0.7
+    jitter = rng.uniform(0.9, 1.1)
+    f1 = (spec.f1_start + (spec.f1_end - spec.f1_start) * t / dur_s) * jitter
+    f2 = (spec.f2_start + (spec.f2_end - spec.f2_start) * t / dur_s) * jitter
+    sig = env * (0.6 * np.sin(2 * np.pi * np.cumsum(f1) / FS)
+                 + 0.4 * np.sin(2 * np.pi * np.cumsum(f2) / FS))
+    sig += spec.noise * rng.standard_normal(n)
+    peak = np.max(np.abs(sig)) + 1e-9
+    return (sig / peak * rng.uniform(0.3, 0.9)).astype(np.float32)
+
+
+def make_stream(rng: np.random.Generator, duration_s: float = 30.0,
+                snr_db: float = 10.0, events_per_min: float = 12.0,
+                keyword_classes: tuple[int, ...] = KEYWORD_CLASSES,
+                min_gap_s: float = 0.4) -> ContinuousStream:
+    """Synthesize one continuous stream.
+
+    duration_s: total stream length (hours-long streams are fine — cost
+      is O(T) numpy).
+    snr_db: keyword-RMS over noise-RMS ratio of the background bed.
+    events_per_min: mean keyword rate; inter-keyword gaps are
+      ``min_gap_s`` plus an exponential draw, so silence stretches
+      dominate at low rates (the always-on regime the VAD gate targets).
+    keyword_classes: class ids eligible for placement.
+
+    Keywords never overlap; each placement is recorded as a
+    ``StreamEvent`` with exact inclusive sample bounds.
+    """
+    n_total = int(round(duration_s * FS))
+    audio = np.zeros(n_total, np.float32)
+    events: list[StreamEvent] = []
+
+    # Place keywords left to right with exponential gaps.
+    mean_gap_s = max(60.0 / max(events_per_min, 1e-6) - 0.45, 0.05)
+    pos = int(rng.exponential(mean_gap_s) * FS)
+    kw_rms = []
+    while True:
+        label = int(keyword_classes[rng.integers(len(keyword_classes))])
+        spec = _SPECS[CLASSES[label]]
+        dur_s = rng.uniform(0.3, 0.55)
+        utt = _synth_utterance(rng, spec, dur_s)
+        if pos + len(utt) > n_total:
+            break
+        audio[pos:pos + len(utt)] += utt
+        events.append(StreamEvent(start=pos, end=pos + len(utt) - 1,
+                                  label=label))
+        kw_rms.append(float(np.sqrt(np.mean(utt ** 2))))
+        pos += len(utt) + int((min_gap_s + rng.exponential(mean_gap_s)) * FS)
+
+    # Noise bed at snr_db below the mean keyword RMS (or a quiet mic
+    # floor when the stream holds no keywords at all).
+    ref_rms = float(np.mean(kw_rms)) if kw_rms else 0.05
+    noise_rms = ref_rms / (10.0 ** (snr_db / 20.0))
+    audio += noise_rms * rng.standard_normal(n_total).astype(np.float32)
+    np.clip(audio, -1.0, 1.0 - 2.0 ** -11, out=audio)
+    return ContinuousStream(audio=audio, events=events, snr_db=snr_db)
+
+
+def make_streams(seed: int, n_streams: int, **kw) -> list[ContinuousStream]:
+    """Independent streams (one per serving slot), seeded per stream."""
+    return [make_stream(np.random.default_rng(seed + 1000 * i), **kw)
+            for i in range(n_streams)]
+
+
+def frame_labels(stream: ContinuousStream, frame_shift: int = 128
+                 ) -> np.ndarray:
+    """(F,) int32 per-frame labels: the event's class over its frame
+    span, silence (class 0) elsewhere — detection-training targets."""
+    n_frames = len(stream.audio) // frame_shift
+    labels = np.zeros(n_frames, np.int32)           # CLASSES[0] = silence
+    for e in stream.events:
+        s, end, lb = e.frames(frame_shift)
+        labels[s:min(end + 1, n_frames)] = lb
+    return labels
+
+
+def synth_frame_batch(rng: np.random.Generator, batch: int,
+                      duration_s: float = 2.0, snr_db: float = 20.0,
+                      events_per_min: float = 40.0, frame_shift: int = 128
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """A batch of short streams with FRAME-level labels for detection
+    training: → (audio (B, T), labels (B, F) int32).
+
+    Per-frame supervision is what calibrates the posterior trace the
+    decision head consumes — utterance-level mean-pool training leaves
+    noise-frame posteriors unconstrained (DESIGN.md §10)."""
+    n = int(round(duration_s * FS))
+    n -= n % frame_shift
+    audio = np.empty((batch, n), np.float32)
+    labels = np.empty((batch, n // frame_shift), np.int32)
+    for i in range(batch):
+        s = make_stream(rng, duration_s=duration_s, snr_db=snr_db,
+                        events_per_min=events_per_min)
+        audio[i] = s.audio[:n]
+        labels[i] = frame_labels(s, frame_shift)[:n // frame_shift]
+    return audio, labels

@@ -1,7 +1,9 @@
-"""IIR BPF-based feature extractor (paper §II-C)."""
+"""IIR BPF-based feature extractor (paper §II-C) + energy VAD gate."""
 from repro.frontend.fex import (FExConfig, FExState, FeatureExtractor,
                                 build_sos_bank, fex_scan, init_fex_state,
                                 quantize_sos)
+from repro.frontend.vad import (VAD_OFF, VADConfig, VADState, frame_energy,
+                                init_vad_state, vad_gate)
 from repro.frontend.filters import (
     design_butter_bandpass_sos,
     make_filterbank,

@@ -143,21 +143,41 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
              a_bits: int = 8, coef_formats=None) -> tuple[Array, FExState]:
     """Run the FEx over a chunk of audio, carrying explicit state.
 
-    audio: (B, T) float samples (callers quantize; trailing
-    ``T % frame_shift`` samples are ignored — carry them to the next
-    chunk).  Returns (features (B, T//frame_shift, C), new state).
+    Args:
+      audio: (B, T) float samples in [-1, 1) (callers quantize to the
+        12-bit grid; trailing ``T % frame_shift`` samples are ignored —
+        carry them to the next chunk).
+      coef: (6, C) packed coefficient rows (``pack_coefficients``).
+      state: a carried ``FExState`` (None = quiescent filters).
+      frame_shift: samples per decision frame (128 = 16 ms @ 8 kHz).
+      env_alpha: envelope one-pole low-pass coefficient
+        (``FExConfig.env_alpha``).
+      log_eps: log₂-compression epsilon (one 12-bit LSB).
+      compress: apply in-datapath log₂ + normalize + 12-bit quantization
+        (the serving output format); False returns raw envelopes.
+      backend: "xla" (bit-exact nested-scan reference, differentiable),
+        "pallas" (ONE batched sequence-resident kernel per chunk,
+        float-exact against "xla"), or "pallas-int" (the integer-code
+        kernel: 12-bit audio, 16-bit registers, mixed-precision
+        coefficient codes; returns grid-exact floats, bit-true against
+        ``core.fixed_point.int_fex_scan``).
+      block_b: batch-tile override for the Pallas kernels.
+      interpret: force the Pallas interpreter on/off (None = platform
+        default).
+      b_bits / a_bits: coefficient word widths for the "pallas-int"
+        fallback format derivation (paper §II-C3).
+      coef_formats: the ``sos_formats`` pair (what ``FeatureExtractor``
+        passes) so "pallas-int" codes are STRUCTURALLY the promoted
+        serving path's; without it the formats are re-derived from the
+        packed rows on the ``b_bits``/``a_bits`` budgets (equivalent for
+        symmetric-form banks: b1 = 0, b2 = −b0).
 
-    ``backend="xla"`` (bit-exact reference, differentiable) or
-    ``"pallas"`` (one sequence-resident kernel per chunk).  Both are
-    float-exact against each other and make chunk boundaries invisible.
-    ``"pallas-int"`` runs the integer-code kernel (12-bit audio, 16-bit
-    registers, mixed-precision coefficient codes) and returns grid-exact
-    floats — bit-true against ``core.fixed_point.int_fex_scan``.  Pass
-    ``coef_formats`` (the ``sos_formats`` pair — what FeatureExtractor
-    does) so the codes are STRUCTURALLY the promoted serving path's;
-    without it the formats are re-derived from the packed rows on the
-    ``b_bits``/``a_bits`` budgets (equivalent for symmetric-form banks:
-    b1 = 0, b2 = −b0).
+    Returns:
+      (features (B, T // frame_shift, C), new ``FExState``).
+
+    State contract: every backend advances the SAME carried registers in
+    the same order, so chunk boundaries are bit-invisible — processing
+    [a|b] with the state carried equals the concatenation in one call.
     """
     B = audio.shape[0]
     C = coef.shape[1]

@@ -1,0 +1,131 @@
+"""Energy-based voice-activity gate for the always-on delta path.
+
+The ΔGRU's energy is proportional to transmitted deltas, and an
+always-on stream is mostly silence — the cheapest MAC is the one the
+Δ-encoder never sees.  This gate computes a per-frame energy estimate
+from the raw audio (one rectify+accumulate per sample — a rounding
+error next to the filterbank) and, while the stream is judged silent,
+CLAMPS the ΔGRU's delta path by sample-and-holding the feature vector:
+
+    speech_t = frame_energy_t > energy_threshold
+    gate_t   = speech_t  OR  hangover counter > 0
+    x_out_t  = x_t        if gate_t else  x_held   (last gated-through x)
+
+A held (constant) input produces Δx = 0 EXACTLY — no kernel change, no
+approximation knob: the Δ-encoder's own deadband does the skipping, the
+hidden deltas decay as h converges, and temporal sparsity is driven
+toward (and past) the paper's 87 % silence-heavy operating point.  The
+``hangover_frames`` counter keeps the gate open across short intra-word
+dips so keyword tails are not clipped.
+
+State (``VADState``) is per stream slot, carried on device across
+chunks, elementwise along the slot axis — it shards and chunk-splits
+exactly like the FEx/ΔGRU state (bit-invisible boundaries).
+
+``energy_threshold < 0`` disables the gate (energy is nonnegative, so
+every frame passes) — the serving sessions use that as the "VAD off"
+configuration with an identical compiled step.
+
+Pricing: `core.energy_model.vad_energy_nj` charges the comparator from
+the measured FEx power, scaled by its op share (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class VADConfig(NamedTuple):
+    """Static VAD configuration (compiled into the serving step).
+
+    energy_threshold: mean-|sample| level (on the 12-bit audio grid,
+      full scale 1.0) above which a frame counts as speech.  Negative
+      disables the gate entirely (always open, bit-identical features).
+    hangover_frames: frames the gate stays open after the energy drops
+      below threshold (~16 ms each; the default ≈ 200 ms bridges
+      intra-word gaps and keyword tails).
+    """
+
+    energy_threshold: float = 0.01
+    hangover_frames: int = 12
+
+
+# The all-pass configuration: energy ≥ 0 always beats a negative
+# threshold, so the gate is open every frame and the features pass
+# through bit-identically (used as the "VAD off" serving config).
+VAD_OFF = VADConfig(energy_threshold=-1.0, hangover_frames=0)
+
+
+class VADState(NamedTuple):
+    """Per-slot carried VAD state (device-resident, slot-sharded).
+
+    hold: (B, C) — last feature vector that passed the gate (the value
+      fed to the ΔGRU while gated shut; dtype follows the feature path:
+      float32 in the float engine, int16 codes in the int8 engine).
+    hang: (B,) int32 — hangover countdown.
+    """
+
+    hold: Array
+    hang: Array
+
+
+def init_vad_state(batch: int, n_channels: int,
+                   dtype=jnp.float32) -> VADState:
+    """Fresh-stream VAD state: zero hold (matching the ΔGRU's x̂ = 0, so
+    a stream that starts gated-shut transmits no input deltas at all)
+    and no hangover."""
+    return VADState(hold=jnp.zeros((batch, n_channels), dtype),
+                    hang=jnp.zeros((batch,), jnp.int32))
+
+
+def frame_energy(audio: Array, frame_shift: int) -> Array:
+    """Per-frame mean |sample|:  audio (B, S) → energy (F, B) float32,
+    F = S // frame_shift (whole frames only — the session's contract).
+    """
+    B, S = audio.shape
+    n_frames = S // frame_shift
+    frames = audio[:, :n_frames * frame_shift].astype(jnp.float32)
+    frames = frames.reshape(B, n_frames, frame_shift)
+    return jnp.moveaxis(jnp.mean(jnp.abs(frames), axis=-1), 0, 1)
+
+
+def vad_gate(feats: Array, energy: Array, state: VADState,
+             cfg: VADConfig) -> tuple[Array, Array, VADState]:
+    """Gate a chunk of frames through the energy VAD.
+
+    Args:
+      feats: (F, B, C) frame-major feature vectors (float features or
+        int16 codes — the hold is dtype-preserving).
+      energy: (F, B) per-frame energies from ``frame_energy`` (always
+        float, computed pre-quantization in both numerics).
+      state: carried ``VADState`` (``init_vad_state`` for a fresh
+        stream).
+      cfg: the static ``VADConfig`` (threshold + hangover), compiled
+        into the step; ``VAD_OFF`` makes this an identity gate.
+
+    Returns:
+      (gated feats (F, B, C), gate mask (F, B) bool, carried state).
+
+    State contract: frame-sequential scan, elementwise in B.  Where the
+    gate is open the features pass unchanged (bit-identical); where
+    shut, the last passed vector is held, which zeroes the downstream
+    input deltas exactly.  Chunk boundaries with the state carried are
+    bit-invisible, and slot-sharded execution is bit-identical.
+    """
+    def step(carry, xe):
+        hold, hang = carry
+        x, e = xe
+        speech = e > cfg.energy_threshold                 # (B,)
+        gate = speech | (hang > 0)
+        hang = jnp.where(speech, jnp.int32(cfg.hangover_frames),
+                         jnp.maximum(hang - 1, 0))
+        out = jnp.where(gate[:, None], x, hold)
+        return (out, hang), (out, gate)
+
+    (hold, hang), (gated, gate) = jax.lax.scan(
+        step, (state.hold, state.hang), (feats, energy))
+    return gated, gate, VADState(hold=hold, hang=hang)

@@ -2,6 +2,7 @@
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --requests 12``
 ``python -m repro.launch.serve --mode kws-audio --slots 4 --requests 12``
+``python -m repro.launch.serve --mode kws-detect --slots 4``
 
 LM mode implements the minimal production serving pattern the decode
 dry-run cells model: a fixed decode batch of slots, continuous batching
@@ -27,6 +28,15 @@ the bit-true fixed-point pipeline (DESIGN.md §9).  ``--bundle X.npz``
 serves a previously promoted bundle (``repro.launch.train --arch
 deltakws --promote X.npz``) without retraining.
 
+KWS-DETECT mode serves the always-on scenario itself (DESIGN.md §10):
+one CONTINUOUS audio stream per slot (``data.continuous`` synthesizes
+keywords into noise at a controlled SNR with ground-truth event spans),
+the fused step runs VAD→FEx→ΔGRU→detector with all decision state
+device-resident, and the run is scored with deployment metrics — miss
+rate and false alarms per hour at the configured operating point
+(Δ_TH × fire/release thresholds), next to the measured VAD duty cycle,
+temporal sparsity and modeled energy per decision.
+
 With ``--devices N`` (and, on a CPU host,
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported before
 launch) the SAME loop drives the sharded engine: the slot pool is
@@ -41,15 +51,22 @@ import sys
 import time
 
 
-def _kws_audio_main(args) -> int:
+def _prep_kws_model(args, frame_level: bool = False):
+    """Shared serving-model prep for the kws-audio / kws-detect modes:
+    config + FEx + parameter tree, an optional promoted bundle, and the
+    quick (QAT-aware) training loop.  Returns (cfg, fex, params, bundle).
+
+    ``frame_level=True`` (kws-detect) trains with per-frame labels on
+    short continuous streams (``kws.frame_loss_fn``) instead of the
+    utterance-level mean-pool loss — detection needs calibrated
+    per-frame posteriors, not just a correct pooled argmax.
+    """
     import jax
     import numpy as np
     from repro.configs import get_config
-    from repro.data.gscd import T as UTT_SAMPLES
+    from repro.data.continuous import synth_frame_batch
     from repro.data.gscd import synth_batch
     from repro.frontend import FeatureExtractor
-    from repro.launch.mesh import make_slot_mesh
-    from repro.launch.streaming import SlotScheduler, StreamingKwsSession
     from repro.models import kws
     from repro.train import optimizer as opt
 
@@ -73,23 +90,42 @@ def _kws_audio_main(args) -> int:
         ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
                                total_steps=args.train_steps)
         state = opt.init(params)
+        loss = kws.frame_loss_fn if frame_level else kws.loss_fn
+        key = "frame_labels" if frame_level else "labels"
 
         @jax.jit
         def step(params, state, feats, labels):
             # int8 serving trains QAT so the promoted fold sees the same
             # numerics the loss optimized (8-bit STE weights, Q0.15 ĥ).
-            (_, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
-                params, cfg, {"feats": feats, "labels": labels}, 0.1,
+            (_, m), g = jax.value_and_grad(loss, has_aux=True)(
+                params, cfg, {"feats": feats, key: labels}, 0.1,
                 qat=int8)
             params, state, _ = opt.update(ocfg, g, state, params)
             return params, state
 
         print(f"training detector for {args.train_steps} steps "
-              f"({'QAT, ' if int8 else ''}{args.numerics} serving) ...")
+              f"({'QAT, ' if int8 else ''}"
+              f"{'frame-level, ' if frame_level else ''}"
+              f"{args.numerics} serving) ...")
         for _ in range(args.train_steps):
-            audio, labels = synth_batch(rng, 64)
+            if frame_level:
+                audio, labels = synth_frame_batch(rng, 32)
+            else:
+                audio, labels = synth_batch(rng, 64)
             params, state = step(params, state, fex(jnp.asarray(audio)),
                                  jnp.asarray(labels))
+    return cfg, fex, params, bundle
+
+
+def _kws_audio_main(args) -> int:
+    import numpy as np
+    from repro.data.gscd import T as UTT_SAMPLES
+    from repro.data.gscd import synth_batch
+    from repro.launch.mesh import make_slot_mesh
+    from repro.launch.streaming import SlotScheduler, StreamingKwsSession
+    from repro.models import kws
+
+    cfg, fex, params, bundle = _prep_kws_model(args)
 
     # Request queue: synthesized 1 s utterances with ground-truth labels.
     audio_q, label_q = synth_batch(np.random.default_rng(1), args.requests)
@@ -169,11 +205,95 @@ def _kws_audio_main(args) -> int:
     return 0
 
 
+def _kws_detect_main(args) -> int:
+    """Always-on DETECTION serving (DESIGN.md §10): one continuous audio
+    stream per slot, VAD→FEx→ΔGRU→detector in a single fused step, and
+    the deployment metrics — miss rate and false alarms per hour at the
+    configured operating point — scored against the streams' ground
+    truth events."""
+    import numpy as np
+    from repro.data.continuous import make_streams
+    from repro.data.gscd import FS
+    from repro.frontend.vad import VADConfig, VAD_OFF
+    from repro.launch.mesh import make_slot_mesh
+    from repro.launch.streaming import StreamingKwsSession
+    from repro.models.detector import (DetectorConfig, det_point,
+                                       fires_from_events, pool_points)
+
+    cfg, fex, params, bundle = _prep_kws_model(args, frame_level=True)
+    if bundle is not None:
+        # Bundles carry no training provenance; the documented promote
+        # flow (launch/train) optimizes the utterance-level mean-pool
+        # loss, whose per-frame posteriors are uncalibrated on noise
+        # (DESIGN.md §10) — detection quality from such a bundle is
+        # unreliable even though the pipeline runs it bit-true.
+        print("WARNING: serving a promoted bundle through the detection "
+              "head — unless it was QAT-trained with frame-level labels, "
+              "expect a poor (miscalibrated) operating point")
+    shift = fex.cfg.frame_shift
+
+    streams = make_streams(args.seed, args.slots,
+                           duration_s=args.stream_seconds,
+                           snr_db=args.snr_db,
+                           events_per_min=args.events_per_min)
+    n_samples = min(len(s.audio) for s in streams)
+    n_samples -= n_samples % shift
+
+    det = DetectorConfig(fire_threshold=args.fire_threshold,
+                         release_threshold=args.release_threshold)
+    vad = (VAD_OFF if args.no_vad
+           else VADConfig(energy_threshold=args.vad_threshold))
+    mesh = make_slot_mesh(args.devices) if args.devices != 1 else None
+    sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
+                               batch=args.slots, fex=fex, mesh=mesh,
+                               numerics=args.numerics, bundle=bundle,
+                               detector=det, vad=vad)
+
+    chunk = args.chunk_samples - args.chunk_samples % shift or shift
+    fires = [[] for _ in range(args.slots)]
+    frame_base = 0
+    t0 = time.time()
+    for off in range(0, n_samples, chunk):
+        block = np.stack([s.audio[off:off + chunk] for s in streams])
+        out = sess.process_audio(block)
+        ev = np.asarray(out.events)             # ONE fetch per serve step
+        for slot in range(args.slots):
+            fires[slot] += fires_from_events(ev[:, slot], frame_base)
+        frame_base += ev.shape[0]
+    dt = time.time() - t0
+
+    tol = int(round(args.tol_s * FS / shift))
+    point = pool_points([
+        det_point(fires[slot], streams[slot].truth_frames(shift),
+                  frame_base, tol_frames=tol, frame_s=shift / FS)
+        for slot in range(args.slots)])
+    summ = sess.summary()
+    audio_s = args.slots * n_samples / FS
+    print(f"detect: {args.slots} stream(s) x {n_samples / FS:.0f} s "
+          f"({point.hours:.3f} h audio) in {dt:.1f} s on "
+          f"{sess.n_shards} device(s) [{args.numerics}] — "
+          f"{audio_s / dt:.1f}x realtime")
+    print(f"operating point Δ_TH={sess.threshold} "
+          f"fire={det.fire_threshold} release={det.release_threshold}: "
+          f"{point.n_events} events, {point.hits} hits, "
+          f"{point.misses} misses (miss rate {point.miss_rate:.2f}), "
+          f"{point.false_alarms} false alarms "
+          f"({point.fa_per_hour:.1f} FA/hr)")
+    print(f"vad duty {summ.vad_duty:.3f}, "
+          f"stream sparsity {summ.sparsity:.3f}, "
+          f"{summ.energy_nj_per_decision:.1f} nJ/decision "
+          f"(FEx {summ.fex_energy_nj_per_decision:.1f} nJ, "
+          f"VAD {summ.vad_energy_nj_per_decision:.2f} nJ), "
+          f"modeled latency {summ.latency_ms:.2f} ms")
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The serve CLI (separate from ``main`` so the README docs-sanity
     test can parse every documented command line against it)."""
     ap = argparse.ArgumentParser(prog="repro.launch.serve")
-    ap.add_argument("--mode", choices=["lm", "kws-audio"], default="lm")
+    ap.add_argument("--mode", choices=["lm", "kws-audio", "kws-detect"],
+                    default="lm")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode batch / global KWS stream slots "
@@ -202,6 +322,28 @@ def build_parser() -> argparse.ArgumentParser:
                     help="path to a promoted int8 bundle (.npz from "
                          "repro.launch.train --arch deltakws --promote); "
                          "implies --numerics int8 weights, skips training")
+    # kws-detect options (DESIGN.md §10)
+    ap.add_argument("--stream-seconds", type=float, default=30.0,
+                    help="continuous-audio stream length per slot")
+    ap.add_argument("--snr-db", type=float, default=20.0,
+                    help="keyword-over-noise SNR of the synthesized "
+                         "streams")
+    ap.add_argument("--events-per-min", type=float, default=12.0,
+                    help="mean ground-truth keyword rate per stream")
+    ap.add_argument("--fire-threshold", type=float, default=0.40,
+                    help="smoothed posterior that opens a keyword event")
+    ap.add_argument("--release-threshold", type=float, default=0.30,
+                    help="smoothed posterior that closes it (hysteresis)")
+    ap.add_argument("--vad-threshold", type=float, default=0.02,
+                    help="VAD frame-energy (mean |sample|) speech "
+                         "threshold; the delta path is clamped below it")
+    ap.add_argument("--no-vad", action="store_true",
+                    help="disable the VAD gate (always-open features; "
+                         "isolates the detector from the energy knob)")
+    ap.add_argument("--tol-s", type=float, default=0.5,
+                    help="fire-to-event matching tolerance in seconds")
+    ap.add_argument("--seed", type=int, default=100,
+                    help="stream-synthesis seed (one stream per slot)")
     return ap
 
 
@@ -210,6 +352,8 @@ def main(argv=None):
 
     if args.mode == "kws-audio":
         return _kws_audio_main(args)
+    if args.mode == "kws-detect":
+        return _kws_detect_main(args)
 
     import jax
     import jax.numpy as jnp

@@ -46,6 +46,17 @@ int8-weight/int16-state ΔGRU → integer FC — consuming a promoted
 state as integer codes.  Same shard/scheduler machinery, decisions are
 argmaxes over int32 logit codes, bit-identical to the golden
 fixed-point model (``core.fixed_point``).
+
+Detection (DESIGN.md §10): pass ``detector=DetectorConfig(...)`` and the
+session serves the always-on scenario the IC was built for — continuous
+audio in, discrete keyword EVENTS out.  The fused step grows two stages:
+an energy VAD (``frontend.vad``) that sample-and-holds the features
+during silence so the Δ-encoder transmits nothing (the temporal-sparsity
+/ energy knob), and a posterior-smoothing hysteresis head
+(``models.detector``) that turns per-frame posteriors into one event per
+spoken keyword.  Both carry per-slot device state, compose with either
+numerics and the slot mesh, and keep every bit-invariance guarantee
+above; ``process_audio`` returns ``DetectResult`` (events + gate trace).
 """
 from __future__ import annotations
 
@@ -60,13 +71,17 @@ import numpy as np
 
 from repro.core import delta_gru as dg
 from repro.core import fixed_point as fp
-from repro.core.energy_model import fex_energy_nj, frame_cost
+from repro.core.energy_model import fex_energy_nj, frame_cost, vad_energy_nj
 from repro.core.quantize import quantize_audio_12b
 from repro.frontend.fex import (FeatureExtractor, FExConfig, FExState,
                                 _pack_state, _unpack_state, fex_scan,
                                 init_fex_state)
+from repro.frontend.vad import (VADConfig, VADState, VAD_OFF, frame_energy,
+                                init_vad_state, vad_gate)
 from repro.kernels.platform import resolve_interpret, shard_map_kernels
 from repro.models import kws
+from repro.models.detector import (DetectorConfig, DetectorState,
+                                   detector_scan, init_detector_state)
 from repro.parallel import sharding as shp
 from jax.sharding import PartitionSpec as P
 
@@ -79,6 +94,20 @@ class ChunkResult(NamedTuple):
     logits: Array   # (frames, batch, n_classes) per-frame logits
     votes: Array    # (frames, batch) int32 per-frame argmax
     nz: Array       # (frames, batch) transmitted deltas per frame
+
+
+class DetectResult(NamedTuple):
+    """Per-chunk outputs of the DETECTION pipeline (``detector=`` mode).
+
+    Everything frame-major and device-side, like ``ChunkResult``; the
+    extra fields are the decision head's fires and the VAD gate trace.
+    """
+
+    logits: Array   # (frames, batch, n_classes) per-frame logits
+    votes: Array    # (frames, batch) int32 per-frame argmax
+    nz: Array       # (frames, batch) transmitted deltas per frame
+    events: Array   # (frames, batch) int32 — fired class id, -1 = none
+    gate: Array     # (frames, batch) bool — VAD gate (True = open)
 
 
 class _Accum(NamedTuple):
@@ -100,6 +129,8 @@ class _Accum(NamedTuple):
     fex_samples: Array  # (n_shards,) f32 — raw audio samples through the
                         #         FEx (f32 like macs: an always-on stream
                         #          overflows int32 within ~3 days)
+    vad_open: Array     # (n_shards,) f32 — frame-slots the VAD gate was
+                        #         open (== frames when no VAD is gating)
 
 
 @dataclasses.dataclass
@@ -112,13 +143,16 @@ class StreamSummary:
     dense_energy_nj: float
     fex_samples: int = 0
     fex_energy_nj_per_decision: float = 0.0
+    vad_duty: float = 1.0                  # gate-open fraction of frames
+    vad_energy_nj_per_decision: float = 0.0
 
 
 def _zero_accum(n_shards: int = 1) -> _Accum:
     return _Accum(macs=jnp.zeros((n_shards,), jnp.float32),
                   macs_dense=jnp.zeros((n_shards,), jnp.float32),
                   frames=jnp.zeros((n_shards,), jnp.int32),
-                  fex_samples=jnp.zeros((n_shards,), jnp.float32))
+                  fex_samples=jnp.zeros((n_shards,), jnp.float32),
+                  vad_open=jnp.zeros((n_shards,), jnp.float32))
 
 
 def _classify(w_fc, b_fc, hs, stats):
@@ -128,13 +162,20 @@ def _classify(w_fc, b_fc, hs, stats):
                        nz=stats.nz_dx + stats.nz_dh)
 
 
-def _bump(acc: _Accum, stats, n_frames: int, n_samples: int) -> _Accum:
+def _bump(acc: _Accum, stats, n_frames: int, n_samples: int,
+          vad_open=None) -> _Accum:
+    """Accumulate one chunk's telemetry.  ``vad_open`` is the device-side
+    count of gate-open frame-slots (detect mode); ungated paths count
+    every frame as open so ``vad_duty`` reads 1.0."""
     return _Accum(
         macs=acc.macs + jnp.sum(stats.macs).astype(jnp.float32),
         macs_dense=acc.macs_dense + jnp.sum(stats.macs_dense
                                             ).astype(jnp.float32),
         frames=acc.frames + jnp.asarray(n_frames, jnp.int32),
         fex_samples=acc.fex_samples + jnp.asarray(n_samples, jnp.float32),
+        vad_open=acc.vad_open + (jnp.asarray(n_frames, jnp.float32)
+                                 if vad_open is None
+                                 else vad_open.astype(jnp.float32)),
     )
 
 
@@ -230,6 +271,93 @@ def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
     return fex_state, state, acc, out
 
 
+def _detect_tail(w_fc, b_fc, hs, stats, gate, *, logit_frac=None,
+                 det_cfg: DetectorConfig, det_state: DetectorState):
+    """Shared back half of the detect steps: FC → posterior smoothing →
+    hysteresis events.  ``logit_frac`` set = integer FC on hidden CODES
+    (the decision head consumes the dequantized — grid-exact — logits)."""
+    if logit_frac is None:
+        cls = _classify(w_fc, b_fc, hs, stats)
+    else:
+        cls = _classify_int(w_fc, b_fc, hs, stats, logit_frac)
+    post = jax.nn.softmax(cls.logits, axis=-1)       # (F, B, K)
+    det_state, events = detector_scan(det_cfg, det_state, post)
+    out = DetectResult(logits=cls.logits, votes=cls.votes, nz=cls.nz,
+                       events=events, gate=gate)
+    return det_state, out
+
+
+def _process_audio_chunk_detect(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
+                                fex_state: FExState, state: dg.DeltaState,
+                                vad_state: VADState,
+                                det_state: DetectorState, acc: _Accum,
+                                audio, *, threshold: float, backend: str,
+                                fex_backend: str, interpret: bool | None,
+                                frame_shift: int, env_alpha: float,
+                                log_eps: float, vad_cfg: VADConfig,
+                                det_cfg: DetectorConfig):
+    """Fused always-on DETECTION step: audio → FEx → VAD gate → ΔGRU →
+    FC → posterior smoothing/hysteresis, one jitted graph, all state
+    (filters, hold/hangover, x̂/ĥ/M, smoothed posteriors) slot-resident
+    on device.  The VAD clamps the delta path by sample-and-holding the
+    features during silence — Δx = 0 exactly, no kernel change."""
+    audio = quantize_audio_12b(audio.astype(jnp.float32))
+    energy = frame_energy(audio, frame_shift)        # (F, B)
+    feats, fex_state = fex_scan(
+        audio, coef, fex_state, frame_shift=frame_shift,
+        env_alpha=env_alpha, log_eps=log_eps, compress=True,
+        backend=fex_backend, interpret=interpret)
+    xs = jnp.moveaxis(feats, 1, 0)                   # (F, B, C)
+    xs, gate, vad_state = vad_gate(xs, energy, vad_state, vad_cfg)
+    hs, state, stats = dg.delta_gru_scan(
+        gru, xs, threshold=threshold, state=state,
+        backend=backend, interpret=interpret)
+    det_state, out = _detect_tail(w_fc, b_fc, hs, stats, gate,
+                                  det_cfg=det_cfg, det_state=det_state)
+    decisions = xs.shape[0] * xs.shape[1]
+    acc = _bump(acc, stats, decisions, decisions * frame_shift,
+                vad_open=jnp.sum(gate))
+    return fex_state, state, vad_state, det_state, acc, out
+
+
+def _process_audio_chunk_detect_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
+                                    fex_state: FExState,
+                                    state: dg.DeltaState,
+                                    vad_state: VADState,
+                                    det_state: DetectorState, acc: _Accum,
+                                    audio, *, threshold: float,
+                                    backend: str, fex_backend: str,
+                                    interpret: bool | None,
+                                    frame_shift: int, gfmt: fp.GruFormats,
+                                    ffmt: fp.FexFormats,
+                                    vad_cfg: VADConfig,
+                                    det_cfg: DetectorConfig):
+    """Integer mirror of ``_process_audio_chunk_detect``: the VAD holds
+    int16 FEATURE CODES (a held code stream is a zero integer delta,
+    bit-true), the detector smooths posteriors from the dequantized int32
+    logit codes (grid-exact floats, deterministic)."""
+    audio = quantize_audio_12b(audio.astype(jnp.float32))
+    energy = frame_energy(audio, frame_shift)        # float — pre-codes
+    audio_codes = fp.to_code(audio, ffmt.feat_frac, 16, jnp.int16)
+    feats, fex_buf = fp.int_fex_scan(
+        audio_codes, coef, _pack_state(fex_state), ffmt,
+        frame_shift=frame_shift, backend=fex_backend, interpret=interpret)
+    xs = jnp.moveaxis(feats, 1, 0)                   # (F, B, C) codes
+    xs, gate, vad_state = vad_gate(xs, energy, vad_state, vad_cfg)
+    hs, state, nz_dx, nz_dh = fp.int_gru_scan(
+        gru, gfmt, xs, threshold, state=state, backend=backend,
+        interpret=interpret)
+    stats = dg._stats_from_counts(nz_dx, nz_dh, xs.shape[-1],
+                                  gru.w_h.shape[0])
+    det_state, out = _detect_tail(w_fc, b_fc, hs, stats, gate,
+                                  logit_frac=gfmt.logit_frac,
+                                  det_cfg=det_cfg, det_state=det_state)
+    decisions = xs.shape[0] * xs.shape[1]
+    acc = _bump(acc, stats, decisions, decisions * frame_shift,
+                vad_open=jnp.sum(gate))
+    return _unpack_state(fex_buf), state, vad_state, det_state, acc, out
+
+
 @jax.jit
 def _reset_gru_slots(state: dg.DeltaState, bias, mask) -> dg.DeltaState:
     """Fresh-stream state for every slot where ``mask`` is True.
@@ -265,6 +393,27 @@ def _reset_fex_slots(state: FExState, mask) -> FExState:
                       jnp.zeros((), state.env.dtype), state.env))
 
 
+@jax.jit
+def _reset_vad_slots(state: VADState, mask) -> VADState:
+    """Fresh-stream VAD state for masked slots (see _reset_gru_slots):
+    zero hold (matches x̂ = 0), no hangover.  Dtype-preserving (int16
+    code hold in the int8 engine)."""
+    return VADState(
+        hold=jnp.where(mask[:, None], jnp.zeros((), state.hold.dtype),
+                       state.hold),
+        hang=jnp.where(mask, jnp.int32(0), state.hang))
+
+
+@jax.jit
+def _reset_det_slots(state: DetectorState, mask) -> DetectorState:
+    """Idle detector for masked slots: zero smoothed posteriors, no open
+    event, no refractory — bit-identical to a fresh stream's head."""
+    return DetectorState(
+        smooth=jnp.where(mask[:, None], 0.0, state.smooth),
+        active=jnp.where(mask, jnp.int32(-1), state.active),
+        refract=jnp.where(mask, jnp.int32(0), state.refract))
+
+
 class StreamingKwsSession:
     """Carries FEx + ΔGRU state and telemetry on device across chunks.
 
@@ -297,6 +446,27 @@ class StreamingKwsSession:
         With a bundle, ``params`` may be None and the bundle's Δ_TH is
         authoritative; without one (numerics="int8"), ``params`` is
         promoted in place — the train→deploy fold at session creation.
+      quantize_8b: 8-bit STE weight quantization on the FLOAT path (the
+        pre-§9 approximation; the bit-true route is ``numerics="int8"``).
+      interpret: force the Pallas interpreter on/off (None = platform
+        default via ``kernels.platform.resolve_interpret``).
+      detector: a ``models.detector.DetectorConfig`` switching the
+        session into always-on DETECTION mode (DESIGN.md §10):
+        ``process_audio`` runs audio → FEx → VAD gate → ΔGRU → FC →
+        posterior-smoothing/hysteresis head in the one fused step and
+        returns ``DetectResult`` (per-frame fired events + gate trace).
+        Detector state is per-slot, device-resident, slot-sharded, and
+        reset by ``reset_streams`` like every other stream state.
+      vad: a ``frontend.vad.VADConfig`` for the energy gate that clamps
+        the ΔGRU delta path during silence (detect mode only; default
+        ``VADConfig()``; pass ``vad=VAD_OFF`` to disable gating while
+        keeping the detection head).
+
+    State contract: between ``process_audio`` calls, ALL stream state —
+    FEx registers, carried sample remainder length aside, ΔGRU x̂/ĥ/M,
+    VAD hold/hangover, detector smooth/latch — lives on device, sharded
+    on the slot axis; chunk boundaries (any split, frame-aligned or
+    not) and mesh size do not change a single output bit.
     """
 
     def __init__(self, params, cfg, *, threshold: float | None = None,
@@ -306,9 +476,24 @@ class StreamingKwsSession:
                  fex: FeatureExtractor | FExConfig | None = None,
                  fex_backend: str | None = None, mesh=None,
                  numerics: str = "float32",
-                 bundle: fp.IntKwsBundle | None = None):
+                 bundle: fp.IntKwsBundle | None = None,
+                 detector: DetectorConfig | None = None,
+                 vad: VADConfig | None = None):
         if numerics not in ("float32", "int8"):
             raise ValueError(f"unknown numerics: {numerics!r}")
+        if vad is not None and detector is None:
+            raise ValueError("vad gating is part of detection mode: pass "
+                             "a DetectorConfig alongside the VADConfig")
+        if detector is not None and \
+                detector.release_threshold > detector.fire_threshold:
+            raise ValueError(
+                f"inverted hysteresis band: release_threshold "
+                f"({detector.release_threshold}) must be <= fire_threshold "
+                f"({detector.fire_threshold}) — an inverted band degrades "
+                f"the head into a refractory-paced pulse generator")
+        self._detector = detector
+        self._vad = (vad if vad is not None else VADConfig()) \
+            if detector is not None else None
         self.cfg = cfg
         self.batch = batch
         self.mesh = mesh
@@ -333,6 +518,8 @@ class StreamingKwsSession:
         self._state: dg.DeltaState | None = None
         self._coef = None                           # replicated FEx coeffs
         self._fex_state: FExState | None = None
+        self._vad_state: VADState | None = None
+        self._det_state: DetectorState | None = None
         self._audio_rem: np.ndarray | None = None   # carried tail samples
         self._acc = shp.put_slot_sharded(_zero_accum(self.n_shards), mesh)
         self._chunks = 0
@@ -344,6 +531,8 @@ class StreamingKwsSession:
         # slot-major, feats is time-major with slots on axis 1.  The int8
         # step has the same argument geometry, so the shard wrapper is
         # numerics-agnostic.
+        det_kw = ({"vad_cfg": self._vad, "det_cfg": self._detector}
+                  if detector is not None else {})
         if numerics == "int8":
             if backend not in ("pallas", "xla"):
                 raise ValueError(f"unknown ΔGRU backend: {backend!r}")
@@ -351,18 +540,22 @@ class StreamingKwsSession:
                 _process_chunk_int, threshold=self.threshold,
                 gfmt=self._bundle.gfmt, backend=backend,
                 interpret=interpret)
+            audio_fn = (_process_audio_chunk_detect_int
+                        if detector is not None else _process_audio_chunk_int)
             self._audio_step_fn = functools.partial(
-                _process_audio_chunk_int, threshold=self.threshold,
+                audio_fn, threshold=self.threshold,
                 backend=backend, fex_backend=fex_backend,
-                interpret=interpret, gfmt=self._bundle.gfmt)
+                interpret=interpret, gfmt=self._bundle.gfmt, **det_kw)
         else:
             step_fn = functools.partial(
                 _process_chunk, threshold=self.threshold,
                 backend=backend, interpret=interpret)
+            audio_fn = (_process_audio_chunk_detect
+                        if detector is not None else _process_audio_chunk)
             self._audio_step_fn = functools.partial(
-                _process_audio_chunk, threshold=self.threshold,
+                audio_fn, threshold=self.threshold,
                 backend=backend, fex_backend=fex_backend,
-                interpret=interpret)
+                interpret=interpret, **det_kw)
         self._step = jax.jit(self._shard(
             step_fn, n_args=6, slot_major=(3, 4), time_major=(5,),
             n_state_out=2))
@@ -440,12 +633,32 @@ class StreamingKwsSession:
             self._fex_state = shp.put_slot_sharded(
                 self._fresh_fex_state(fcfg.n_active), self.mesh)
             self._audio_rem = np.zeros((self.batch, 0), np.float32)
-            # _process_audio_chunk[_int](gru, w_fc, b_fc, coef, fex_state,
-            # state, acc, audio): fex_state/state/acc/audio are slot-major.
-            self._audio_step = jax.jit(self._shard(
-                audio_step_fn,
-                n_args=8, slot_major=(4, 5, 6, 7), time_major=(),
-                n_state_out=3))
+            if self._detector is not None:
+                # VAD holds what the ΔGRU eats: float features on the
+                # float path, int16 feature CODES in the int8 engine.
+                hold_dtype = (jnp.int16 if self.numerics == "int8"
+                              else jnp.float32)
+                self._vad_state = shp.put_slot_sharded(
+                    init_vad_state(self.batch, fcfg.n_active, hold_dtype),
+                    self.mesh)
+                self._det_state = shp.put_slot_sharded(
+                    init_detector_state(self.batch, kws.N_CLASSES),
+                    self.mesh)
+                # _process_audio_chunk_detect[_int](gru, w_fc, b_fc, coef,
+                # fex_state, state, vad_state, det_state, acc, audio):
+                # the four state trees + acc + audio are slot-major.
+                self._audio_step = jax.jit(self._shard(
+                    audio_step_fn,
+                    n_args=10, slot_major=(4, 5, 6, 7, 8, 9),
+                    time_major=(), n_state_out=5))
+            else:
+                # _process_audio_chunk[_int](gru, w_fc, b_fc, coef,
+                # fex_state, state, acc, audio): fex_state/state/acc/audio
+                # are slot-major.
+                self._audio_step = jax.jit(self._shard(
+                    audio_step_fn,
+                    n_args=8, slot_major=(4, 5, 6, 7), time_major=(),
+                    n_state_out=3))
         return self._fex
 
     def process_audio(self, audio) -> ChunkResult:
@@ -475,13 +688,22 @@ class StreamingKwsSession:
         self._audio_rem = audio[:, n_frames * shift:]
         if n_frames == 0:
             z = jnp.zeros((0, self.batch), jnp.int32)
-            return ChunkResult(
-                logits=jnp.zeros((0, self.batch, kws.N_CLASSES)),
-                votes=z, nz=z)
-        self._fex_state, self._state, self._acc, out = self._audio_step(
-            self._gru, self._w_fc, self._b_fc, self._coef, self._fex_state,
-            self._state, self._acc,
-            jnp.asarray(audio[:, :n_frames * shift]))
+            logits = jnp.zeros((0, self.batch, kws.N_CLASSES))
+            if self._detector is not None:
+                return DetectResult(logits=logits, votes=z, nz=z, events=z,
+                                    gate=jnp.zeros((0, self.batch), bool))
+            return ChunkResult(logits=logits, votes=z, nz=z)
+        block = jnp.asarray(audio[:, :n_frames * shift])
+        if self._detector is not None:
+            (self._fex_state, self._state, self._vad_state, self._det_state,
+             self._acc, out) = self._audio_step(
+                self._gru, self._w_fc, self._b_fc, self._coef,
+                self._fex_state, self._state, self._vad_state,
+                self._det_state, self._acc, block)
+        else:
+            self._fex_state, self._state, self._acc, out = self._audio_step(
+                self._gru, self._w_fc, self._b_fc, self._coef,
+                self._fex_state, self._state, self._acc, block)
         self._chunks += 1
         return out
 
@@ -499,6 +721,9 @@ class StreamingKwsSession:
         serving, buffer audio to a fixed frames-per-chunk; a single
         ragged tail chunk at end-of-stream costs one extra compile.
         """
+        if self._detector is not None:
+            raise ValueError("detection mode needs raw audio (the VAD "
+                             "gates on sample energy): use process_audio")
         feats = jnp.asarray(feats, jnp.float32)
         if feats.ndim == 2:
             feats = feats[:, None, :]                 # (F, 1, C)
@@ -533,6 +758,13 @@ class StreamingKwsSession:
             self._fex_state = shp.put_slot_sharded(
                 self._fresh_fex_state(self._input_dim), self.mesh)
             self._audio_rem = np.zeros((self.batch, 0), np.float32)
+        if self._vad_state is not None:
+            self._vad_state = shp.put_slot_sharded(
+                init_vad_state(self.batch, self._input_dim,
+                               self._vad_state.hold.dtype), self.mesh)
+        if self._det_state is not None:
+            self._det_state = shp.put_slot_sharded(
+                init_detector_state(self.batch, kws.N_CLASSES), self.mesh)
         self._acc = shp.put_slot_sharded(_zero_accum(self.n_shards),
                                          self.mesh)
         self._chunks = 0
@@ -573,6 +805,10 @@ class StreamingKwsSession:
             self._state = _reset_gru_slots(self._state, self._gru.b, mask)
         if self._fex_state is not None:
             self._fex_state = _reset_fex_slots(self._fex_state, mask)
+        if self._vad_state is not None:
+            self._vad_state = _reset_vad_slots(self._vad_state, mask)
+        if self._det_state is not None:
+            self._det_state = _reset_det_slots(self._det_state, mask)
         if self._audio_rem is not None and self._audio_rem.shape[1]:
             self._audio_rem[slots] = 0.0
 
@@ -602,10 +838,16 @@ class StreamingKwsSession:
         # default — the GRU input width is NOT a channel count.
         n_ch = self._fex.cfg.n_active if self._fex is not None else 10
         c = frame_cost(macs_pf, n_channels=n_ch)
+        # The energy detector is only powered when the gate is actually
+        # configured (detect mode, non-negative threshold — VAD_OFF is
+        # an unpowered comparator); its cost joins the headline total.
+        vad_nj = (vad_energy_nj(float(acc.fex_samples)) / frames
+                  if self._vad is not None
+                  and self._vad.energy_threshold >= 0 else 0.0)
         return StreamSummary(
             frames=int(acc.frames), chunks=self._chunks,
             sparsity=1.0 - float(acc.macs) / max(float(acc.macs_dense), 1.0),
-            energy_nj_per_decision=c.energy_nj_per_decision,
+            energy_nj_per_decision=c.energy_nj_per_decision + vad_nj,
             latency_ms=c.latency_ms,
             dense_energy_nj=frame_cost(dense_pf,
                                        n_channels=n_ch).energy_nj_per_decision,
@@ -614,6 +856,8 @@ class StreamingKwsSession:
             # model's per-frame FEx share when every frame saw 128 samples.
             fex_energy_nj_per_decision=fex_energy_nj(
                 float(acc.fex_samples), n_ch) / frames,
+            vad_duty=float(acc.vad_open) / frames,
+            vad_energy_nj_per_decision=vad_nj,
         )
 
 

@@ -72,6 +72,23 @@ def serving_weights(params, quantize_8b: bool = False, mesh=None):
 QAT_H_FORMAT = QFormat(int_bits=0, frac_bits=15)
 
 
+def _gru_hidden(params, cfg, feats: Array, threshold, quantize_8b,
+                backend, qat):
+    """Shared forward scaffolding: feats (B, F, C) → (hs (F, B, H),
+    stats).  Single source for threshold/backend resolution and the
+    QAT wiring, so ``forward`` (mean-pool classification) and
+    ``forward_frames`` (per-frame detection) stay bit-identical up to
+    the pooling."""
+    th = cfg.delta_threshold if threshold is None else threshold
+    be = (getattr(cfg, "gru_backend", "xla") if backend is None else backend)
+    gru = _gru_params(params, quantize_8b or qat)
+    xs = jnp.moveaxis(feats, 1, 0)                    # (F, B, C)
+    hs, _, stats = dg.delta_gru_scan(
+        gru, xs, threshold=th, backend=be,
+        h_qformat=QAT_H_FORMAT if qat else None)
+    return hs, stats
+
+
 def forward(params, cfg, feats: Array, threshold: float | None = None,
             quantize_8b: bool = False, backend: str | None = None,
             qat: bool = False):
@@ -88,13 +105,8 @@ def forward(params, cfg, feats: Array, threshold: float | None = None,
     int8 bundle will perform.  Features are already on the 12-bit grid
     (the FEx quantizes in-datapath).  XLA backend only.
     """
-    th = cfg.delta_threshold if threshold is None else threshold
-    be = (getattr(cfg, "gru_backend", "xla") if backend is None else backend)
-    gru = _gru_params(params, quantize_8b or qat)
-    xs = jnp.moveaxis(feats, 1, 0)                    # (F, B, C)
-    hs, _, stats = dg.delta_gru_scan(
-        gru, xs, threshold=th, backend=be,
-        h_qformat=QAT_H_FORMAT if qat else None)
+    hs, stats = _gru_hidden(params, cfg, feats, threshold, quantize_8b,
+                            backend, qat)
     h_mean = jnp.mean(hs, axis=0)                     # mean-pool over frames
     logits = h_mean @ params["w_fc"] + params["b_fc"]
     return logits, stats
@@ -113,6 +125,41 @@ def forward_audio(params, cfg, audio: Array, fex, *,
     """
     feats, _ = fex.scan(audio, None, backend=fex_backend)
     return forward(params, cfg, feats, threshold, quantize_8b, backend)
+
+
+def forward_frames(params, cfg, feats: Array, threshold: float | None = None,
+                   quantize_8b: bool = False, backend: str | None = None,
+                   qat: bool = False):
+    """feats: (B, F, C) → (per-frame logits (F, B, 12), stats).
+
+    The DETECTION-mode forward: no mean-pooling — every 16 ms frame gets
+    its own logit vector, exactly what the serving step's FC head
+    computes per decision.  Same Δ-threshold/QAT semantics as
+    ``forward`` (shared scaffolding: ``_gru_hidden``)."""
+    hs, stats = _gru_hidden(params, cfg, feats, threshold, quantize_8b,
+                            backend, qat)
+    logits = hs @ params["w_fc"] + params["b_fc"]     # (F, B, 12)
+    return logits, stats
+
+
+def frame_loss_fn(params, cfg, batch: dict, threshold: float | None = None,
+                  quantize_8b: bool = False, qat: bool = False):
+    """Per-frame cross-entropy for always-on detection training.
+
+    batch: {"feats": (B, F, C), "frame_labels": (B, F) int32} — frame
+    labels come from ``data.continuous.synth_frame_batch`` (the event's
+    class during its span, silence elsewhere).  Training per frame is
+    what calibrates the posterior trace the detection head smooths: a
+    mean-pool-trained model is confidently wrong on noise frames
+    (DESIGN.md §10)."""
+    logits, stats = forward_frames(params, cfg, batch["feats"], threshold,
+                                   quantize_8b, qat=qat)
+    labels = jnp.moveaxis(batch["frame_labels"], 1, 0)   # (F, B)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return ce, {"ce": ce, "acc": acc,
+                "sparsity": dg.temporal_sparsity(stats)}
 
 
 def loss_fn(params, cfg, batch: dict, threshold: float | None = None,

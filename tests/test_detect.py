@@ -1,0 +1,273 @@
+"""Always-on detection runtime: VAD gate, continuous-audio synthesis,
+and the detect-mode streaming session (DESIGN.md §10).
+
+The session cases hold the acceptance contract: VAD→FEx→ΔGRU→detector
+runs as one fused step in BOTH numerics, chunk splits are bit-invisible,
+mesh=1 is bit-identical to unsharded, churned slots equal fresh streams,
+and the VAD gate measurably raises temporal sparsity on silence.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.continuous import (frame_labels, make_stream,
+                                   synth_frame_batch)
+from repro.frontend.vad import (VADConfig, VAD_OFF, frame_energy,
+                                init_vad_state, vad_gate)
+from repro.models.detector import NO_EVENT, DetectorConfig
+
+
+# ------------------------------------------------------------------- VAD --
+
+def test_frame_energy_shapes_and_values():
+    audio = np.zeros((2, 256), np.float32)
+    audio[1, 128:] = 0.5
+    e = np.asarray(frame_energy(jnp.asarray(audio), 128))
+    assert e.shape == (2, 2)
+    np.testing.assert_allclose(e[:, 0], 0.0)
+    np.testing.assert_allclose(e[:, 1], [0.0, 0.5])
+
+
+def test_vad_gate_silence_stays_shut_and_holds_features():
+    cfg = VADConfig(energy_threshold=0.01, hangover_frames=2)
+    feats = np.arange(5 * 1 * 3, dtype=np.float32).reshape(5, 1, 3)
+    energy = np.zeros((5, 1), np.float32)
+    state = init_vad_state(1, 3)
+    gated, gate, state = vad_gate(jnp.asarray(feats), jnp.asarray(energy),
+                                  state, cfg)
+    assert not np.asarray(gate).any()
+    np.testing.assert_array_equal(np.asarray(gated), 0.0)   # hold = init 0
+
+
+def test_vad_gate_speech_passes_and_hangover_counts_down():
+    cfg = VADConfig(energy_threshold=0.01, hangover_frames=2)
+    feats = np.arange(7 * 1 * 2, dtype=np.float32).reshape(7, 1, 2) + 1.0
+    energy = np.zeros((7, 1), np.float32)
+    energy[2] = 0.5                         # one speech frame
+    state = init_vad_state(1, 2)
+    gated, gate, state = vad_gate(jnp.asarray(feats), jnp.asarray(energy),
+                                  state, cfg)
+    # Open on the speech frame + 2 hangover frames, shut elsewhere.
+    np.testing.assert_array_equal(
+        np.asarray(gate)[:, 0], [0, 0, 1, 1, 1, 0, 0])
+    # While shut after the burst, the LAST passed frame (index 4) holds.
+    np.testing.assert_array_equal(np.asarray(gated)[5, 0], feats[4, 0])
+    np.testing.assert_array_equal(np.asarray(gated)[6, 0], feats[4, 0])
+    np.testing.assert_array_equal(np.asarray(state.hold), feats[4])
+
+
+def test_vad_gate_chunk_split_invariance():
+    cfg = VADConfig(energy_threshold=0.1, hangover_frames=3)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(30, 2, 4)).astype(np.float32)
+    energy = rng.uniform(0, 0.3, (30, 2)).astype(np.float32)
+    g_full, m_full, s_full = vad_gate(jnp.asarray(feats),
+                                      jnp.asarray(energy),
+                                      init_vad_state(2, 4), cfg)
+    s = init_vad_state(2, 4)
+    outs, masks = [], []
+    for lo, hi in [(0, 11), (11, 12), (12, 30)]:
+        o, m, s = vad_gate(jnp.asarray(feats[lo:hi]),
+                           jnp.asarray(energy[lo:hi]), s, cfg)
+        outs.append(np.asarray(o))
+        masks.append(np.asarray(m))
+    np.testing.assert_array_equal(np.concatenate(outs), np.asarray(g_full))
+    np.testing.assert_array_equal(np.concatenate(masks), np.asarray(m_full))
+    for a, b in zip(s, s_full):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vad_off_is_identity():
+    rng = np.random.default_rng(1)
+    feats = rng.normal(size=(10, 1, 3)).astype(np.float32)
+    energy = np.zeros((10, 1), np.float32)          # dead silence
+    gated, gate, _ = vad_gate(jnp.asarray(feats), jnp.asarray(energy),
+                              init_vad_state(1, 3), VAD_OFF)
+    assert np.asarray(gate).all()
+    np.testing.assert_array_equal(np.asarray(gated), feats)
+
+
+# ------------------------------------------------------- continuous audio --
+
+def test_make_stream_events_are_exact_spans():
+    stream = make_stream(np.random.default_rng(0), duration_s=20.0,
+                         snr_db=20.0, events_per_min=20.0)
+    assert stream.audio.shape == (160000,)
+    assert stream.audio.dtype == np.float32
+    assert np.abs(stream.audio).max() <= 1.0
+    assert len(stream.events) >= 2
+    prev_end = -1
+    for e in stream.events:
+        assert 0 <= e.start <= e.end < len(stream.audio)
+        assert e.start > prev_end                   # non-overlapping, sorted
+        assert 2 <= e.label <= 11                   # keyword classes only
+        prev_end = e.end
+        # The labeled span really contains signal well above the bed.
+        span_rms = float(np.sqrt(np.mean(
+            stream.audio[e.start:e.end + 1] ** 2)))
+        bed = stream.audio[max(0, e.start - 2000):e.start]
+        assert span_rms > 2.0 * float(np.sqrt(np.mean(bed ** 2)) + 1e-9)
+
+
+def test_make_stream_snr_controls_noise_bed():
+    quiet = make_stream(np.random.default_rng(3), duration_s=10.0,
+                        snr_db=30.0, events_per_min=6.0)
+    noisy = make_stream(np.random.default_rng(3), duration_s=10.0,
+                        snr_db=0.0, events_per_min=6.0)
+    def bed_rms(s):
+        mask = np.ones(len(s.audio), bool)
+        for e in s.events:
+            mask[e.start:e.end + 1] = False
+        return float(np.sqrt(np.mean(s.audio[mask] ** 2)))
+    assert bed_rms(noisy) > 5.0 * bed_rms(quiet)
+
+
+def test_frame_labels_match_event_spans():
+    stream = make_stream(np.random.default_rng(5), duration_s=10.0,
+                         events_per_min=20.0)
+    labels = frame_labels(stream, 128)
+    assert labels.shape == (len(stream.audio) // 128,)
+    for s, e, lb in stream.truth_frames(128):
+        assert (labels[s:e + 1] == lb).all()
+    covered = np.zeros_like(labels, bool)
+    for s, e, _ in stream.truth_frames(128):
+        covered[s:e + 1] = True
+    assert (labels[~covered] == 0).all()            # silence elsewhere
+
+
+def test_synth_frame_batch_shapes():
+    audio, labels = synth_frame_batch(np.random.default_rng(0), 3,
+                                      duration_s=1.0)
+    # 8000 samples truncated to whole 128-sample frames: 7936 = 62 × 128.
+    assert audio.shape == (3, 7936) and labels.shape == (3, 62)
+    assert labels.dtype == np.int32 and labels.max() <= 11
+
+
+# ------------------------------------------------- detect-mode sessions --
+
+@pytest.fixture(scope="module")
+def kws_bits():
+    from repro.configs import get_config
+    from repro.frontend import FeatureExtractor
+    from repro.models import kws
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=fex.cfg.n_active)
+    return cfg, fex, params
+
+
+@pytest.fixture(scope="module")
+def stream_audio():
+    stream = make_stream(np.random.default_rng(11), duration_s=3.0,
+                         snr_db=20.0, events_per_min=20.0)
+    n = len(stream.audio) - len(stream.audio) % 128   # frame-aligned, so
+    return stream.audio[None, :n]                     # resets are exact
+
+
+def _detect_session(kws_bits, batch=1, **kw):
+    from repro.launch.streaming import StreamingKwsSession
+    cfg, fex, params = kws_bits
+    kw.setdefault("detector", DetectorConfig())
+    return StreamingKwsSession(params, cfg, threshold=0.1, batch=batch,
+                               fex=fex, **kw)
+
+
+@pytest.mark.parametrize("numerics", ["float32", "int8"])
+def test_detect_chunk_split_bit_invariance(kws_bits, stream_audio, numerics):
+    one = _detect_session(kws_bits, numerics=numerics)
+    o_full = one.process_audio(stream_audio)
+    split = _detect_session(kws_bits, numerics=numerics)
+    outs = []
+    for lo, hi in [(0, 5000), (5000, 5130), (5130, 24000)]:
+        outs.append(split.process_audio(stream_audio[:, lo:hi]))
+    for field in ("logits", "votes", "events", "gate"):
+        full = np.asarray(getattr(o_full, field))
+        parts = np.concatenate(
+            [np.asarray(getattr(o, field)) for o in outs])
+        np.testing.assert_array_equal(parts, full, err_msg=field)
+    import dataclasses
+    assert dataclasses.replace(one.summary(), chunks=0) == \
+        dataclasses.replace(split.summary(), chunks=0)
+
+
+@pytest.mark.parametrize("numerics", ["float32", "int8"])
+def test_detect_mesh1_bit_identical(kws_bits, stream_audio, numerics):
+    audio = np.concatenate([stream_audio, stream_audio], axis=0)
+    plain = _detect_session(kws_bits, batch=2, numerics=numerics)
+    shard = _detect_session(kws_bits, batch=2, numerics=numerics,
+                            mesh=jax.make_mesh((1,), ("data",)))
+    o_p = plain.process_audio(audio)
+    o_s = shard.process_audio(audio)
+    for field in ("logits", "votes", "events", "gate"):
+        np.testing.assert_array_equal(np.asarray(getattr(o_p, field)),
+                                      np.asarray(getattr(o_s, field)),
+                                      err_msg=field)
+    assert plain.summary() == shard.summary()
+
+
+def test_detect_reset_stream_equals_fresh(kws_bits, stream_audio):
+    sess = _detect_session(kws_bits, batch=2)
+    audio = np.concatenate([stream_audio, stream_audio], axis=0)
+    sess.process_audio(audio)
+    sess.reset_stream(1)
+    churned = sess.process_audio(audio)
+    fresh = _detect_session(kws_bits, batch=1)
+    o_f = fresh.process_audio(stream_audio)
+    np.testing.assert_array_equal(np.asarray(churned.logits)[:, 1],
+                                  np.asarray(o_f.logits)[:, 0])
+    np.testing.assert_array_equal(np.asarray(churned.events)[:, 1],
+                                  np.asarray(o_f.events)[:, 0])
+
+
+def test_vad_raises_sparsity_on_silence_heavy_audio(kws_bits):
+    stream = make_stream(np.random.default_rng(21), duration_s=4.0,
+                         snr_db=25.0, events_per_min=8.0)
+    audio = stream.audio[None, :]
+    gated = _detect_session(kws_bits,
+                            vad=VADConfig(energy_threshold=0.02))
+    ungated = _detect_session(kws_bits, vad=VAD_OFF)
+    s_on = (gated.process_audio(audio), gated.summary())[1]
+    s_off = (ungated.process_audio(audio), ungated.summary())[1]
+    assert s_on.vad_duty < 0.8 < s_off.vad_duty == 1.0
+    assert s_on.sparsity >= s_off.sparsity
+    # The gated ΔRNN-side energy (headline total minus the comparator's
+    # own cost) can only go down; VAD_OFF is an unpowered comparator.
+    assert (s_on.energy_nj_per_decision - s_on.vad_energy_nj_per_decision
+            <= s_off.energy_nj_per_decision)
+    assert s_on.vad_energy_nj_per_decision > 0.0
+    assert s_off.vad_energy_nj_per_decision == 0.0
+
+
+def test_detect_mode_rejects_feature_chunks(kws_bits):
+    sess = _detect_session(kws_bits)
+    with pytest.raises(ValueError, match="process_audio"):
+        sess.process_chunk(np.zeros((4, 10), np.float32))
+
+
+def test_vad_without_detector_rejected(kws_bits):
+    from repro.launch.streaming import StreamingKwsSession
+    cfg, fex, params = kws_bits
+    with pytest.raises(ValueError, match="DetectorConfig"):
+        StreamingKwsSession(params, cfg, fex=fex, vad=VADConfig())
+
+
+def test_inverted_hysteresis_band_rejected(kws_bits):
+    from repro.launch.streaming import StreamingKwsSession
+    cfg, fex, params = kws_bits
+    with pytest.raises(ValueError, match="hysteresis"):
+        StreamingKwsSession(
+            params, cfg, fex=fex,
+            detector=DetectorConfig(fire_threshold=0.3,
+                                    release_threshold=0.4))
+
+
+def test_serve_cli_kws_detect_smoke(capsys):
+    from repro.launch import serve
+    rc = serve.main(["--mode", "kws-detect", "--slots", "2",
+                     "--stream-seconds", "2", "--train-steps", "0",
+                     "--chunk-samples", "2048"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "FA/hr" in out and "miss rate" in out and "vad duty" in out

@@ -243,6 +243,28 @@ np.testing.assert_array_equal(np.asarray(o_ri.votes),
                               np.asarray(o_ei.votes))
 assert ref_i.summary() == eng_i.summary()
 print("SHARDED_INT8_OK")
+
+# Detection mode (DESIGN.md §10): the sharded engine carries VAD +
+# detector state per slot; events/gates must be bit-identical at mesh=2.
+from repro.models.detector import DetectorConfig
+ref_d = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex,
+                            detector=DetectorConfig())
+eng_d = StreamingKwsSession(params, cfg, threshold=0.1, batch=4, fex=fex,
+                            mesh=make_slot_mesh(2),
+                            detector=DetectorConfig())
+for sess in (ref_d, eng_d):
+    sess.process_audio(audio)
+    sess.reset_streams([1, 2])
+o_rd = ref_d.process_audio(audio)
+o_ed = eng_d.process_audio(audio)
+np.testing.assert_array_equal(np.asarray(o_rd.events),
+                              np.asarray(o_ed.events))
+np.testing.assert_array_equal(np.asarray(o_rd.gate),
+                              np.asarray(o_ed.gate))
+np.testing.assert_array_equal(np.asarray(o_rd.logits),
+                              np.asarray(o_ed.logits))
+assert ref_d.summary() == eng_d.summary()
+print("SHARDED_DETECT_OK")
 print("SHARDED_SERVE_OK")
 """
 
@@ -256,4 +278,5 @@ def test_sharded_engine_two_devices_bit_identical():
         timeout=540)
     assert r.returncode == 0, f"{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
     assert "SHARDED_INT8_OK" in r.stdout
+    assert "SHARDED_DETECT_OK" in r.stdout
     assert "SHARDED_SERVE_OK" in r.stdout
