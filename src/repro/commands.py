@@ -44,6 +44,15 @@ SERVE_BUNDLE_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
                     "--mode kws-audio --slots 8 --requests 16 "
                     "--bundle /tmp/deltakws_int8.npz")
 
+# Fault tolerance (DESIGN.md §11) -------------------------------------------
+SERVE_FAULTS_CMD = (
+    "PYTHONPATH=src python -m repro.launch.serve "
+    "--mode kws-audio --slots 8 --requests 16 "
+    '--faults "nan_burst:0.05,drop_chunk:0.05,churn_storm:0.05" '
+    "--degrade-thresholds 0.4 --max-queue 32")
+SOAK_CMD = ("PYTHONPATH=src:. python benchmarks/serve_bench.py --soak "
+            "--slots-per-device 8 --chunk-samples 1024")
+
 # Benchmarks ----------------------------------------------------------------
 SERVE_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/serve_bench.py"
 KERNEL_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/kernel_bench.py"
@@ -62,6 +71,8 @@ ALL_COMMANDS = {
     "detect_bench": DETECT_BENCH_CMD,
     "train_promote": TRAIN_PROMOTE_CMD,
     "serve_bundle": SERVE_BUNDLE_CMD,
+    "serve_faults": SERVE_FAULTS_CMD,
+    "soak": SOAK_CMD,
     "serve_bench": SERVE_BENCH_CMD,
     "kernel_bench": KERNEL_BENCH_CMD,
 }

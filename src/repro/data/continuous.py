@@ -99,7 +99,32 @@ def make_stream(rng: np.random.Generator, duration_s: float = 30.0,
 
     Keywords never overlap; each placement is recorded as a
     ``StreamEvent`` with exact inclusive sample bounds.
+
+    Raises ``ValueError`` for unusable combinations (non-positive or
+    non-finite duration, non-finite SNR, negative rate or gap) rather
+    than synthesizing an empty/NaN stream that fails obscurely in the
+    detector scoring downstream.
     """
+    if not np.isfinite(duration_s) or duration_s <= 0.0:
+        raise ValueError(f"duration_s must be finite and > 0, "
+                         f"got {duration_s}")
+    if not np.isfinite(snr_db):
+        raise ValueError(f"snr_db must be finite, got {snr_db} "
+                         f"(use a large value, not inf, for 'no noise')")
+    if not np.isfinite(events_per_min) or events_per_min < 0.0:
+        raise ValueError(f"events_per_min must be finite and >= 0, "
+                         f"got {events_per_min}")
+    if not np.isfinite(min_gap_s) or min_gap_s < 0.0:
+        raise ValueError(f"min_gap_s must be finite and >= 0, "
+                         f"got {min_gap_s}")
+    if not keyword_classes:
+        raise ValueError("keyword_classes must not be empty")
+    bad = [c for c in keyword_classes if CLASSES[c] not in _SPECS] \
+        if all(0 <= c < len(CLASSES) for c in keyword_classes) \
+        else keyword_classes
+    if bad:
+        raise ValueError(f"keyword_classes {list(bad)} are not keyword "
+                         f"class ids (eligible: {list(KEYWORD_CLASSES)})")
     n_total = int(round(duration_s * FS))
     audio = np.zeros(n_total, np.float32)
     events: list[StreamEvent] = []
@@ -132,6 +157,8 @@ def make_stream(rng: np.random.Generator, duration_s: float = 30.0,
 
 def make_streams(seed: int, n_streams: int, **kw) -> list[ContinuousStream]:
     """Independent streams (one per serving slot), seeded per stream."""
+    if n_streams < 1:
+        raise ValueError(f"n_streams must be >= 1, got {n_streams}")
     return [make_stream(np.random.default_rng(seed + 1000 * i), **kw)
             for i in range(n_streams)]
 
@@ -160,6 +187,9 @@ def synth_frame_batch(rng: np.random.Generator, batch: int,
     noise-frame posteriors unconstrained (DESIGN.md §10)."""
     n = int(round(duration_s * FS))
     n -= n % frame_shift
+    if n <= 0:
+        raise ValueError(f"duration_s={duration_s} yields no whole "
+                         f"{frame_shift}-sample frame at {FS} Hz")
     audio = np.empty((batch, n), np.float32)
     labels = np.empty((batch, n // frame_shift), np.int32)
     for i in range(batch):

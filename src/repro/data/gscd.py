@@ -104,13 +104,35 @@ def synth_epoch(seed: int, n: int):
 
 # ------------------------------------------------------------- real GSCD
 def load_wav_8k(path: pathlib.Path) -> np.ndarray:
-    with wave.open(str(path), "rb") as w:
-        fs = w.getframerate()
-        raw = np.frombuffer(w.readframes(w.getnframes()), np.int16)
-    x = raw.astype(np.float32) / 32768.0
+    """Read one GSCD wav → (8000,) float32 at 8 kHz.
+
+    A corrupt file in a 100k-file dataset should name ITSELF, not
+    surface as a bare ``struct.error`` three frames deep — every failure
+    mode here (truncated/garbage container, wrong sample format, empty
+    payload, unusable rate) raises ``ValueError`` carrying the path.
+    """
+    try:
+        with wave.open(str(path), "rb") as w:
+            fs = w.getframerate()
+            width = w.getsampwidth()
+            n = w.getnframes()
+            raw = w.readframes(n)
+    except (wave.Error, EOFError, OSError) as e:
+        raise ValueError(f"corrupt or unreadable wav {path}: {e}") from e
+    if width != 2:
+        raise ValueError(f"{path}: expected 16-bit PCM, got "
+                         f"{8 * width}-bit")
+    if n == 0 or len(raw) == 0:
+        raise ValueError(f"{path}: wav holds no samples")
+    if len(raw) < 2 * n:
+        raise ValueError(f"{path}: truncated payload ({len(raw)} bytes "
+                         f"for {n} declared frames)")
+    if fs < FS or fs % FS != 0:
+        raise ValueError(f"{path}: sample rate {fs} is not a multiple "
+                         f"of {FS} (cannot decimate)")
+    x = np.frombuffer(raw, np.int16).astype(np.float32) / 32768.0
     if fs != FS:                                   # naive decimation
-        step = fs // FS
-        x = x[::step]
+        x = x[::fs // FS]
     if len(x) < T:
         x = np.pad(x, (0, T - len(x)))
     return x[:T]
@@ -118,10 +140,14 @@ def load_wav_8k(path: pathlib.Path) -> np.ndarray:
 
 def load_dataset(path: str | None, n_per_class: int = 100, seed: int = 0):
     """Real GSCD if ``path`` given, else SynthCommands."""
+    if n_per_class < 1:
+        raise ValueError(f"n_per_class must be >= 1, got {n_per_class}")
     if path is None:
         rng = np.random.default_rng(seed)
         return synth_batch(rng, n_per_class * len(CLASSES))
     root = pathlib.Path(path)
+    if not root.is_dir():
+        raise ValueError(f"GSCD path {root} is not a directory")
     audio, labels = [], []
     for li, name in enumerate(CLASSES):
         d = root / name
@@ -130,4 +156,8 @@ def load_dataset(path: str | None, n_per_class: int = 100, seed: int = 0):
         for f in sorted(d.glob("*.wav"))[:n_per_class]:
             audio.append(load_wav_8k(f))
             labels.append(li)
+    if not audio:
+        raise ValueError(
+            f"GSCD path {root} holds no <label>/<uid>.wav files for any "
+            f"of the {len(CLASSES)} classes ({', '.join(CLASSES[:4])}, …)")
     return np.stack(audio), np.asarray(labels, np.int32)

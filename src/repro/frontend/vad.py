@@ -82,6 +82,22 @@ def init_vad_state(batch: int, n_channels: int,
                     hang=jnp.zeros((batch,), jnp.int32))
 
 
+def vad_state_flags(state: VADState) -> Array:
+    """Per-slot health predicate over the carried VAD state (DESIGN.md
+    §11): (B,) bool, True where the hold register is poisoned.
+
+    A non-finite hold is fatal in a way no later input can cure: while
+    the gate is shut the held vector IS the feature stream, so a NaN
+    hold feeds the ΔGRU NaNs for as long as the stream stays silent.
+    Integer-code holds (the int8 engine) cannot be non-finite and always
+    read healthy here — their corruption surfaces through the FEx/ΔGRU
+    saturation predicates instead.  Elementwise in B, pure, sharding-safe.
+    """
+    if not jnp.issubdtype(state.hold.dtype, jnp.floating):
+        return jnp.zeros(state.hold.shape[:1], bool)
+    return jnp.any(~jnp.isfinite(state.hold), axis=-1)
+
+
 def frame_energy(audio: Array, frame_shift: int) -> Array:
     """Per-frame mean |sample|:  audio (B, S) → energy (F, B) float32,
     F = S // frame_shift (whole frames only — the session's contract).

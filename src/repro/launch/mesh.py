@@ -40,6 +40,8 @@ def make_slot_mesh(devices: int | None = None):
     """
     avail = jax.devices()
     n = len(avail) if devices is None else devices
+    if n < 1:
+        raise ValueError(f"device count must be >= 1, got {n}")
     if n > len(avail):
         raise ValueError(f"asked for {n} devices, only {len(avail)} visible "
                          f"(CPU hosts: set {host_device_flags(n)} before "

@@ -43,12 +43,149 @@ launch) the SAME loop drives the sharded engine: the slot pool is
 partitioned over an N-device mesh, weights are replicated, and the
 scheduler balances admissions across shards (DESIGN.md §6).  Decisions
 are bit-identical to ``--devices 1``.
+
+Fault tolerance (DESIGN.md §11): ``--faults "nan_burst:0.05,clip:0.1"``
+arms a seeded ``launch.faults`` campaign against the KWS loops (replay
+any run from ``--fault-seed``), the session runs with the self-healing
+supervisor unless ``--no-supervisor``, and ``--input-policy`` picks the
+``process_audio`` boundary behavior.  ``AdmissionController`` is the
+overload half: a bounded request queue that SHEDS load when full, a
+Δ_TH ladder (``--degrade-thresholds``) stepped UP under sustained
+queue pressure — trading accuracy for compute along the measured
+nJ/decision curve — and back DOWN with hysteresis when pressure
+clears, plus a step-latency watchdog (``--watchdog-ms``) whose
+breaches count as pressure.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Graceful-degradation policy for ``AdmissionController``.
+
+    thresholds: the Δ_TH ladder, base operating point FIRST, ascending —
+      each escalation moves one rung up (cheaper, less accurate), each
+      release one rung down (per BENCH_detect.json's 26↔119 nJ curve).
+    max_queue: bounded-queue depth; ``submit`` beyond it is SHED.
+    high_water / low_water: queue-pressure fractions that count a step
+      toward escalation / release.  The dead band between them is the
+      hysteresis that keeps the controller from flapping.
+    up_after / down_after: consecutive high- (low-) pressure steps
+      before the ladder moves.  ``down_after > up_after`` by default:
+      degrade fast, recover deliberately.
+    watchdog_ms: step-latency budget; a breach counts as a high-pressure
+      observation even with an empty queue (None disables).
+    """
+
+    thresholds: tuple = (0.1,)
+    max_queue: int = 64
+    high_water: float = 0.75
+    low_water: float = 0.25
+    up_after: int = 3
+    down_after: int = 8
+    watchdog_ms: float | None = None
+
+    def __post_init__(self):
+        if not self.thresholds:
+            raise ValueError("need at least one (base) Δ_TH rung")
+        if list(self.thresholds) != sorted(set(self.thresholds)):
+            raise ValueError(f"Δ_TH ladder must be strictly ascending, "
+                             f"got {self.thresholds}")
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if not (0.0 <= self.low_water < self.high_water <= 1.0):
+            raise ValueError(
+                f"need 0 <= low_water < high_water <= 1, got "
+                f"low={self.low_water} high={self.high_water}")
+        if self.up_after < 1 or self.down_after < 1:
+            raise ValueError("up_after / down_after must be >= 1")
+
+
+class AdmissionController:
+    """Bounded admission + graceful degradation for a KWS serve loop.
+
+    Host-side only.  The loop calls ``submit(payload)`` instead of
+    enqueueing directly (False = queue full, request shed) and
+    ``observe(step_s)`` once per serve step; the controller tracks queue
+    pressure against the ``OverloadPolicy`` watermarks and drives the
+    session's ``set_threshold`` up and down the Δ_TH ladder with
+    hysteresis.  ``level`` is the current rung (0 = base operating
+    point); ``stats()`` reports sheds, escalations, releases and
+    watchdog breaches for the run report / BENCH_soak.json.
+    """
+
+    def __init__(self, session, scheduler, policy: OverloadPolicy):
+        self._sess = session
+        self._sched = scheduler
+        self.policy = policy
+        self.level = 0
+        self.shed = 0
+        self.escalations = 0
+        self.releases = 0
+        self.watchdog_breaches = 0
+        self._hi_streak = 0
+        self._lo_streak = 0
+        session.set_threshold(policy.thresholds[0])
+
+    def submit(self, payload) -> bool:
+        """Admit one request into the bounded queue; False = shed."""
+        if len(self._sched) >= self.policy.max_queue:
+            self.shed += 1
+            return False
+        self._sched.submit(payload)
+        return True
+
+    @property
+    def threshold(self) -> float:
+        return self.policy.thresholds[self.level]
+
+    def observe(self, step_s: float):
+        """One per-step pressure observation (queue depth + latency)."""
+        p = self.policy
+        pressure = len(self._sched) / p.max_queue
+        slow = p.watchdog_ms is not None and step_s * 1e3 > p.watchdog_ms
+        if slow:
+            self.watchdog_breaches += 1
+        if pressure >= p.high_water or slow:
+            self._hi_streak += 1
+            self._lo_streak = 0
+            if self._hi_streak >= p.up_after and \
+                    self.level < len(p.thresholds) - 1:
+                self.level += 1
+                self.escalations += 1
+                self._hi_streak = 0
+                self._sess.set_threshold(p.thresholds[self.level])
+        elif pressure <= p.low_water:
+            self._lo_streak += 1
+            self._hi_streak = 0
+            if self._lo_streak >= p.down_after and self.level > 0:
+                self.level -= 1
+                self.releases += 1
+                self._lo_streak = 0
+                self._sess.set_threshold(p.thresholds[self.level])
+        else:                       # dead band: hold level, reset streaks
+            self._hi_streak = 0
+            self._lo_streak = 0
+
+    def stats(self) -> dict:
+        return {"level": self.level, "threshold": self.threshold,
+                "shed": self.shed, "escalations": self.escalations,
+                "releases": self.releases,
+                "watchdog_breaches": self.watchdog_breaches}
+
+
+def _parse_ladder(text: str, base: float) -> tuple:
+    """CLI Δ_TH ladder: ``--degrade-thresholds "0.2,0.4"`` lists the
+    degraded rungs ABOVE the base operating point (empty = no
+    degradation, base rung only)."""
+    rungs = tuple(float(x) for x in
+                  filter(None, (s.strip() for s in text.split(","))))
+    return (base,) + rungs
 
 
 def _prep_kws_model(args, frame_level: bool = False):
@@ -117,6 +254,28 @@ def _prep_kws_model(args, frame_level: bool = False):
     return cfg, fex, params, bundle
 
 
+def _session_extras(args):
+    """Shared fault-tolerance wiring for the KWS mains: (supervisor,
+    input_policy, injector) from the CLI flags."""
+    from repro.launch.faults import (FaultInjector, FaultPlan,
+                                     parse_fault_specs)
+    from repro.launch.streaming import SupervisorConfig
+
+    supervisor = None if args.no_supervisor else SupervisorConfig()
+    injector = None
+    if args.faults:
+        plan = FaultPlan(seed=args.fault_seed,
+                         specs=parse_fault_specs(args.faults))
+        injector = FaultInjector(plan, args.slots)
+    # Injected NaN/Inf must REACH the device for self-healing to have
+    # anything to heal — rejecting them at the host boundary would test
+    # the validator, not the supervisor.
+    policy = args.input_policy
+    if injector is not None and policy == "reject":
+        policy = "trust"
+    return supervisor, policy, injector
+
+
 def _kws_audio_main(args) -> int:
     import numpy as np
     from repro.data.gscd import T as UTT_SAMPLES
@@ -132,13 +291,20 @@ def _kws_audio_main(args) -> int:
     chunk = args.chunk_samples
     chunks_per_utt = -(-UTT_SAMPLES // chunk)
 
+    supervisor, input_policy, injector = _session_extras(args)
     mesh = make_slot_mesh(args.devices) if args.devices != 1 else None
     sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
                                batch=args.slots, fex=fex, mesh=mesh,
-                               numerics=args.numerics, bundle=bundle)
+                               numerics=args.numerics, bundle=bundle,
+                               supervisor=supervisor,
+                               input_policy=input_policy)
     sched = SlotScheduler(sess)
+    ladder = _parse_ladder(args.degrade_thresholds, args.threshold)
+    ctl = AdmissionController(sess, sched, OverloadPolicy(
+        thresholds=ladder, max_queue=args.max_queue,
+        watchdog_ms=args.watchdog_ms or None))
     for req in range(args.requests):
-        sched.submit(req)
+        ctl.submit(req)
     real_frames = UTT_SAMPLES // fex.cfg.frame_shift   # frames of real audio
     # slot -> [chunks consumed, real frames left to vote on]
     progress: dict[int, list] = {}
@@ -161,8 +327,23 @@ def _kws_audio_main(args) -> int:
             seg = audio_q[req, progress[slot][0] * chunk:
                           (progress[slot][0] + 1) * chunk]
             block[slot, :len(seg)] = seg   # zero-pad a short final chunk
-        out = sess.process_audio(block)
-        v = np.asarray(out.votes)               # ONE fetch per serve step
+        pieces, actions = ([block], []) if injector is None \
+            else injector.inject(block)
+        vote_blocks = []
+        for piece in pieces:
+            out = sess.process_audio(piece)
+            vote_blocks.append(np.asarray(out.votes))  # one fetch per chunk
+        v = (np.concatenate(vote_blocks, axis=0) if vote_blocks
+             else np.zeros((0, args.slots), np.int32))
+        for act in actions:                 # driver directives
+            if act.kind == "stall":
+                time.sleep(act.detail)
+            elif act.kind == "churn_storm":
+                storm = [s for s in act.slots if s in sched.live]
+                sess.reset_streams(storm)   # poof — streams restart
+                for s in storm:
+                    votes[s] = 0
+                    progress[s] = [0, real_frames]
         n_f = v.shape[0]
         pad_frames += n_f * (args.slots - len(sched.live))  # idle slots
         for slot, req in list(sched.live.items()):
@@ -181,6 +362,7 @@ def _kws_audio_main(args) -> int:
         admit()
         steps += 1
         step_s.append(time.perf_counter() - ts)
+        ctl.observe(step_s[-1])
     dt = time.time() - t0
 
     correct = sum(1 for req, pred in done if pred == int(label_q[req]))
@@ -202,6 +384,15 @@ def _kws_audio_main(args) -> int:
           f"{summ.energy_nj_per_decision:.1f} nJ/decision "
           f"(FEx {summ.fex_energy_nj_per_decision:.1f} nJ), "
           f"modeled latency {summ.latency_ms:.2f} ms{pad_note}")
+    cst = ctl.stats()
+    print(f"robustness: {summ.recoveries} slot recoveries "
+          f"{summ.recovery_reasons or '{}'}, "
+          f"{len(sess.unhealthy_slots())} unhealthy, "
+          f"controller level {cst['level']} (Δ_TH={cst['threshold']}), "
+          f"{cst['shed']} shed, {cst['escalations']} escalations / "
+          f"{cst['releases']} releases, "
+          f"{cst['watchdog_breaches']} watchdog breaches"
+          + (", counters overflowed" if summ.overflowed else ""))
     return 0
 
 
@@ -243,11 +434,14 @@ def _kws_detect_main(args) -> int:
                          release_threshold=args.release_threshold)
     vad = (VAD_OFF if args.no_vad
            else VADConfig(energy_threshold=args.vad_threshold))
+    supervisor, input_policy, injector = _session_extras(args)
     mesh = make_slot_mesh(args.devices) if args.devices != 1 else None
     sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
                                batch=args.slots, fex=fex, mesh=mesh,
                                numerics=args.numerics, bundle=bundle,
-                               detector=det, vad=vad)
+                               detector=det, vad=vad,
+                               supervisor=supervisor,
+                               input_policy=input_policy)
 
     chunk = args.chunk_samples - args.chunk_samples % shift or shift
     fires = [[] for _ in range(args.slots)]
@@ -255,11 +449,19 @@ def _kws_detect_main(args) -> int:
     t0 = time.time()
     for off in range(0, n_samples, chunk):
         block = np.stack([s.audio[off:off + chunk] for s in streams])
-        out = sess.process_audio(block)
-        ev = np.asarray(out.events)             # ONE fetch per serve step
-        for slot in range(args.slots):
-            fires[slot] += fires_from_events(ev[:, slot], frame_base)
-        frame_base += ev.shape[0]
+        pieces, actions = ([block], []) if injector is None \
+            else injector.inject(block)
+        for act in actions:
+            if act.kind == "stall":
+                time.sleep(act.detail)
+            elif act.kind == "churn_storm":
+                sess.reset_streams(list(act.slots))
+        for piece in pieces:
+            out = sess.process_audio(piece)
+            ev = np.asarray(out.events)         # ONE fetch per chunk
+            for slot in range(args.slots):
+                fires[slot] += fires_from_events(ev[:, slot], frame_base)
+            frame_base += ev.shape[0]
     dt = time.time() - t0
 
     tol = int(round(args.tol_s * FS / shift))
@@ -285,6 +487,11 @@ def _kws_detect_main(args) -> int:
           f"(FEx {summ.fex_energy_nj_per_decision:.1f} nJ, "
           f"VAD {summ.vad_energy_nj_per_decision:.2f} nJ), "
           f"modeled latency {summ.latency_ms:.2f} ms")
+    if summ.recoveries or injector is not None:
+        print(f"robustness: {summ.recoveries} slot recoveries "
+              f"{summ.recovery_reasons or '{}'}, "
+              f"{len(sess.unhealthy_slots())} unhealthy"
+              + (", counters overflowed" if summ.overflowed else ""))
     return 0
 
 
@@ -344,11 +551,92 @@ def build_parser() -> argparse.ArgumentParser:
                     help="fire-to-event matching tolerance in seconds")
     ap.add_argument("--seed", type=int, default=100,
                     help="stream-synthesis seed (one stream per slot)")
+    # fault tolerance / overload (DESIGN.md §11)
+    ap.add_argument("--faults", default="",
+                    help='seeded fault campaign, "kind:rate,..." pairs '
+                         '(e.g. "nan_burst:0.05,clip:0.1"); see '
+                         "launch.faults for the taxonomy")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="replay seed for --faults (same seed = "
+                         "bit-identical corruption)")
+    ap.add_argument("--input-policy",
+                    choices=["reject", "sanitize", "trust"],
+                    default="reject",
+                    help="process_audio boundary policy for hostile "
+                         "samples (forced to 'trust' while --faults is "
+                         "armed, so injected NaNs reach the device)")
+    ap.add_argument("--no-supervisor", action="store_true",
+                    help="disable the self-healing slot supervisor "
+                         "(poisoned slots stay poisoned)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="bounded request-queue depth; submissions "
+                         "beyond it are load-shed")
+    ap.add_argument("--degrade-thresholds", default="",
+                    help='Δ_TH degradation ladder above the base, '
+                         'ascending (e.g. "0.2,0.4"); stepped up under '
+                         "sustained queue pressure, released with "
+                         "hysteresis")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="step-latency watchdog budget in ms (0 = off); "
+                         "breaches count as overload pressure")
     return ap
 
 
+def validate_args(args):
+    """Reject nonsensical knob combinations with a clear ``ValueError``
+    before any device work starts (DESIGN.md §11's fail-early boundary).
+    Called by ``main``; importable so tests can hit it directly."""
+    import math
+
+    def _positive(name, v, minimum=1):
+        if v < minimum:
+            raise ValueError(f"--{name} must be >= {minimum}, got {v}")
+
+    _positive("slots", args.slots)
+    _positive("devices", args.devices)
+    _positive("chunk-samples", args.chunk_samples)
+    _positive("requests", args.requests, minimum=0)
+    _positive("train-steps", args.train_steps, minimum=0)
+    _positive("max-queue", args.max_queue)
+    if not math.isfinite(args.threshold) or args.threshold < 0:
+        raise ValueError(f"--threshold must be finite and >= 0, "
+                         f"got {args.threshold}")
+    if args.slots % args.devices:
+        raise ValueError(f"--slots ({args.slots}) must divide by "
+                         f"--devices ({args.devices})")
+    if args.mode == "kws-detect":
+        if args.fire_threshold <= args.release_threshold:
+            raise ValueError(
+                f"--fire-threshold ({args.fire_threshold}) must exceed "
+                f"--release-threshold ({args.release_threshold}): an "
+                f"inverted hysteresis band never latches")
+        if args.stream_seconds <= 0 or not math.isfinite(args.stream_seconds):
+            raise ValueError(f"--stream-seconds must be positive, "
+                             f"got {args.stream_seconds}")
+        if args.events_per_min <= 0 or not math.isfinite(args.events_per_min):
+            raise ValueError(f"--events-per-min must be positive, "
+                             f"got {args.events_per_min}")
+        if not math.isfinite(args.snr_db):
+            raise ValueError(f"--snr-db must be finite, got {args.snr_db}")
+        if args.tol_s < 0:
+            raise ValueError(f"--tol-s must be >= 0, got {args.tol_s}")
+    if args.watchdog_ms < 0:
+        raise ValueError(f"--watchdog-ms must be >= 0, got {args.watchdog_ms}")
+    if args.faults:
+        from repro.launch.faults import parse_fault_specs
+        parse_fault_specs(args.faults)      # raises on a malformed spec
+    if args.degrade_thresholds:
+        ladder = _parse_ladder(args.degrade_thresholds, args.threshold)
+        OverloadPolicy(thresholds=ladder)   # raises on a bad ladder
+
+
 def main(argv=None):
-    args = build_parser().parse_args(argv)
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    try:
+        validate_args(args)
+    except ValueError as e:
+        ap.error(str(e))
 
     if args.mode == "kws-audio":
         return _kws_audio_main(args)

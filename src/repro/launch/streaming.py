@@ -47,6 +47,26 @@ state as integer codes.  Same shard/scheduler machinery, decisions are
 argmaxes over int32 logit codes, bit-identical to the golden
 fixed-point model (``core.fixed_point``).
 
+Fault tolerance (DESIGN.md §11): the fused step also emits a per-slot
+HEALTH bitmask — finite-state predicates over the FEx biquad registers,
+the ΔGRU x̂/ĥ/M, the VAD hold and the detector EMA (saturation-rail
+compares in the int8 engine, where state cannot go non-finite) plus a
+non-finite-input flag computed before the ADC quantizer.  Pass
+``supervisor=SupervisorConfig(...)`` and a host-side supervisor reads
+that mask (one tiny fetch per ``check_every`` chunks), quarantines
+slots whose poisoned state can never recover on its own, and resets
+them through the same mask-batched ``reset_streams`` that serves
+continuous-batching churn — a healed slot is bit-identical to a fresh
+stream.  Recovery counts and reasons surface in ``StreamSummary``; on
+healthy streams every flag is zero and the engine is bit-identical to
+an unsupervised session.  ``input_policy`` guards the ``process_audio``
+boundary (reject / sanitize / trust hostile samples), telemetry counters
+are carried as split int32 pairs exact to 2^61 (``overflowed`` flags the
+saturation that would silently wedge float32 partial sums at 2^24), and
+``set_threshold`` re-points the compiled step at a different Δ_TH
+operating point mid-stream — the graceful-degradation lever the serve
+launcher's admission controller drives under overload.
+
 Detection (DESIGN.md §10): pass ``detector=DetectorConfig(...)`` and the
 session serves the always-on scenario the IC was built for — continuous
 audio in, discrete keyword EVENTS out.  The fused step grows two stages:
@@ -77,11 +97,12 @@ from repro.frontend.fex import (FeatureExtractor, FExConfig, FExState,
                                 _pack_state, _unpack_state, fex_scan,
                                 init_fex_state)
 from repro.frontend.vad import (VADConfig, VADState, VAD_OFF, frame_energy,
-                                init_vad_state, vad_gate)
+                                init_vad_state, vad_gate, vad_state_flags)
 from repro.kernels.platform import resolve_interpret, shard_map_kernels
 from repro.models import kws
 from repro.models.detector import (DetectorConfig, DetectorState,
-                                   detector_scan, init_detector_state)
+                                   detector_scan, detector_state_flags,
+                                   init_detector_state)
 from repro.parallel import sharding as shp
 from jax.sharding import PartitionSpec as P
 
@@ -110,6 +131,163 @@ class DetectResult(NamedTuple):
     gate: Array     # (frames, batch) bool — VAD gate (True = open)
 
 
+class StreamInputError(ValueError):
+    """Typed rejection at the ``process_audio`` boundary (DESIGN.md §11):
+    non-finite samples, un-decodable dtypes, or out-of-range integer
+    codes.  Raised BEFORE anything reaches the device, so a hostile
+    chunk cannot poison carried stream state."""
+
+
+# --------------------------------------------------------- health bitmask --
+# Per-slot health flags computed INSIDE the fused serving step (pure reads
+# of the carried state — the datapath is untouched, so enabling the check
+# changes no output bit).  Each bit names one failure mode of DESIGN.md
+# §11's catalog; HEALTH_REASONS maps bits to the telemetry reason strings.
+HEALTH_INPUT = 1 << 0      # non-finite samples entered this chunk
+HEALTH_FEX = 1 << 1        # biquad registers non-finite / rail-pinned
+HEALTH_GRU = 1 << 2        # ΔGRU x̂/ĥ/M non-finite / x̂ off-grid (int)
+HEALTH_DET = 1 << 3        # detector EMA non-finite or outside [0, 1]
+HEALTH_VAD = 1 << 4        # VAD hold register non-finite
+HEALTH_SAT = 1 << 5        # int accumulator at the 24-bit saturation rail
+HEALTH_REASONS = {
+    HEALTH_INPUT: "input_nonfinite",
+    HEALTH_FEX: "fex_state",
+    HEALTH_GRU: "gru_state",
+    HEALTH_DET: "detector_state",
+    HEALTH_VAD: "vad_state",
+    HEALTH_SAT: "accumulator_saturation",
+}
+# Default quarantine set: every unrecoverable-state bit.  HEALTH_SAT is
+# excluded — a saturating accumulator is the fixed-point design WORKING
+# (it recovers as soon as the input calms down), so it is counted as
+# telemetry (``StreamSummary.sat_events``) rather than treated as poison.
+QUARANTINE_DEFAULT = (HEALTH_INPUT | HEALTH_FEX | HEALTH_GRU
+                      | HEALTH_DET | HEALTH_VAD)
+
+_FEX_MAG_BOUND = 1e6       # float biquad register blow-up bound
+_INT16_RAIL = 32767        # int16 register saturation rail
+_FEAT_CODE_BOUND = 1 << 12  # 12-bit feature grid + 1 bit of slack
+_ACC_RAIL = (1 << 23) - 1  # 24-bit saturating accumulator rail
+
+
+class SupervisorConfig(NamedTuple):
+    """Host-side self-healing policy (DESIGN.md §11).
+
+    check_every: chunks between health-mask fetches (each fetch is one
+      (batch,) int32 sync — 1 checks after every chunk).
+    quarantine_after: consecutive flagged checks before a slot is reset
+      (1 = immediate; raise it to ride out transient flags).
+    quarantine_mask: which HEALTH_* bits trigger a reset (default: every
+      poisoned-state bit; saturation stays telemetry-only).
+    """
+
+    check_every: int = 1
+    quarantine_after: int = 1
+    quarantine_mask: int = QUARANTINE_DEFAULT
+
+
+def _slot_any(bad: Array) -> Array:
+    """(B, ...) bool → per-slot (B,) any-reduction."""
+    if bad.ndim == 1:
+        return bad
+    return jnp.any(bad.reshape(bad.shape[0], -1), axis=1)
+
+
+def _flag(bit: int, bad: Array) -> Array:
+    return jnp.where(bad, jnp.int32(bit), jnp.int32(0))
+
+
+def slot_health(input_bad: Array, fex_state: FExState | None,
+                gru_state, vad_state: VADState | None,
+                det_state: DetectorState | None) -> Array:
+    """Fuse the per-slot health predicates into one (B,) int32 bitmask.
+
+    Pure reads over the carried state trees, elementwise along the slot
+    axis (sharding-safe, no collectives).  Float state checks are
+    finiteness/magnitude predicates; integer-code state cannot go
+    non-finite, so the int8 engine checks saturation rails instead —
+    the "saturation-flag counters" of the paper's datapath, priced at a
+    handful of compares per slot per chunk.  ``input_bad`` is the
+    pre-quantizer non-finite-sample flag (computed before the 12-bit
+    clip, which would otherwise launder an Inf into full-scale).
+    """
+    flags = _flag(HEALTH_INPUT, input_bad)
+    if fex_state is not None:
+        if jnp.issubdtype(fex_state.filt.dtype, jnp.floating):
+            bad = _slot_any(~jnp.isfinite(fex_state.filt)
+                            | (jnp.abs(fex_state.filt) > _FEX_MAG_BOUND))
+            bad |= _slot_any(~jnp.isfinite(fex_state.env))
+        else:
+            f32 = fex_state.filt.astype(jnp.int32)
+            e32 = fex_state.env.astype(jnp.int32)
+            bad = _slot_any(jnp.abs(f32) >= _INT16_RAIL)
+            bad |= _slot_any(jnp.abs(e32) >= _INT16_RAIL)
+        flags |= _flag(HEALTH_FEX, bad)
+    if gru_state is not None:
+        if jnp.issubdtype(gru_state.h.dtype, jnp.floating):
+            bad = _slot_any(~jnp.isfinite(gru_state.h))
+            for leaf in (gru_state.x_hat, gru_state.h_hat,
+                         gru_state.m_x, gru_state.m_h):
+                bad |= _slot_any(~jnp.isfinite(leaf))
+            flags |= _flag(HEALTH_GRU, bad)
+        else:
+            x32 = gru_state.x_hat.astype(jnp.int32)
+            flags |= _flag(HEALTH_GRU,
+                           _slot_any(jnp.abs(x32) > _FEAT_CODE_BOUND))
+            sat = _slot_any(jnp.abs(gru_state.m_x) >= _ACC_RAIL)
+            sat |= _slot_any(jnp.abs(gru_state.m_h) >= _ACC_RAIL)
+            flags |= _flag(HEALTH_SAT, sat)
+    if vad_state is not None:
+        flags |= _flag(HEALTH_VAD, vad_state_flags(vad_state))
+    if det_state is not None:
+        flags |= _flag(HEALTH_DET, detector_state_flags(det_state))
+    return flags
+
+
+# ------------------------------------------------------ exact telemetry --
+# jax's default config has no int64 on device, and float32 partial sums
+# silently stop incrementing at 2^24 — a real soak bug: MAC counts wedge
+# after ~20 minutes of a busy 64-slot session.  Each counter is carried
+# as a SPLIT PAIR of int32 lanes (lo < 2^30, hi = carries of 2^30):
+# exact to 2^61 (decades of always-on fleet audio), with the hi lane
+# saturating — not wrapping — at _HI_SAT, surfaced as
+# ``StreamSummary.overflowed``.
+_COUNT_SHIFT = 30
+_COUNT_MASK = (1 << _COUNT_SHIFT) - 1
+_HI_SAT = (1 << 31) - 8            # saturation rail (room for carries)
+
+
+class _Count(NamedTuple):
+    """One exact counter: value = hi·2^30 + lo, both (n_shards,) int32."""
+
+    hi: Array
+    lo: Array
+
+
+def _count_zero(n_shards: int) -> _Count:
+    return _Count(hi=jnp.zeros((n_shards,), jnp.int32),
+                  lo=jnp.zeros((n_shards,), jnp.int32))
+
+
+def _count_add(c: _Count, d) -> _Count:
+    """Add a per-chunk delta (int32, < 2^31) with carry propagation.
+    Saturates the hi lane instead of wrapping."""
+    d = jnp.asarray(d, jnp.int32)
+    lo = c.lo + (d & _COUNT_MASK)
+    hi = jnp.minimum(c.hi + (d >> _COUNT_SHIFT) + (lo >> _COUNT_SHIFT),
+                     _HI_SAT)
+    return _Count(hi=hi, lo=lo & _COUNT_MASK)
+
+
+def _count_value(c: _Count) -> tuple[int, bool]:
+    """Host-side reduction of a fetched counter: (exact value across
+    shards as a python int, saturated?)."""
+    hi = np.asarray(c.hi, np.int64)
+    lo = np.asarray(c.lo, np.int64)
+    return (int(hi.sum()) << _COUNT_SHIFT) + int(lo.sum()), \
+        bool(np.any(hi >= _HI_SAT))
+
+
 class _Accum(NamedTuple):
     """Device-resident telemetry accumulated across chunks.
 
@@ -117,20 +295,19 @@ class _Accum(NamedTuple):
     streams of the batch (matching ``macs``, which is batch-summed), so
     per-decision quantities stay correct for multi-stream sessions.
 
-    Every field is a ``(n_shards,)`` vector of PER-SHARD partial sums
-    (``(1,)`` unsharded).  Keeping the partials sharded instead of
-    psum-reducing them keeps the hot path free of collectives — the one
-    host-side ``summary()`` fetch does the final reduction.
+    Every field is a ``_Count`` of ``(n_shards,)`` PER-SHARD partial
+    sums (``(1,)`` unsharded) — exact int32 split pairs, see above.
+    Keeping the partials sharded instead of psum-reducing them keeps the
+    hot path free of collectives — the one host-side ``summary()`` fetch
+    does the final reduction.
     """
 
-    macs: Array         # (n_shards,) f32 — ΔGRU MACs actually executed
-    macs_dense: Array   # (n_shards,) f32 — dense-equivalent MACs
-    frames: Array       # (n_shards,) i32
-    fex_samples: Array  # (n_shards,) f32 — raw audio samples through the
-                        #         FEx (f32 like macs: an always-on stream
-                        #          overflows int32 within ~3 days)
-    vad_open: Array     # (n_shards,) f32 — frame-slots the VAD gate was
-                        #         open (== frames when no VAD is gating)
+    macs: _Count         # ΔGRU MACs actually executed
+    macs_dense: _Count   # dense-equivalent MACs
+    frames: _Count       # decisions made
+    fex_samples: _Count  # raw audio samples through the FEx
+    vad_open: _Count     # frame-slots the VAD gate was open
+                         #   (== frames when no VAD is gating)
 
 
 @dataclasses.dataclass
@@ -145,14 +322,14 @@ class StreamSummary:
     fex_energy_nj_per_decision: float = 0.0
     vad_duty: float = 1.0                  # gate-open fraction of frames
     vad_energy_nj_per_decision: float = 0.0
+    overflowed: bool = False               # any telemetry counter saturated
+    recoveries: int = 0                    # slots auto-reset by supervisor
+    recovery_reasons: dict = dataclasses.field(default_factory=dict)
+    sat_events: int = 0                    # HEALTH_SAT slot-checks observed
 
 
 def _zero_accum(n_shards: int = 1) -> _Accum:
-    return _Accum(macs=jnp.zeros((n_shards,), jnp.float32),
-                  macs_dense=jnp.zeros((n_shards,), jnp.float32),
-                  frames=jnp.zeros((n_shards,), jnp.int32),
-                  fex_samples=jnp.zeros((n_shards,), jnp.float32),
-                  vad_open=jnp.zeros((n_shards,), jnp.float32))
+    return _Accum(*[_count_zero(n_shards) for _ in _Accum._fields])
 
 
 def _classify(w_fc, b_fc, hs, stats):
@@ -166,28 +343,44 @@ def _bump(acc: _Accum, stats, n_frames: int, n_samples: int,
           vad_open=None) -> _Accum:
     """Accumulate one chunk's telemetry.  ``vad_open`` is the device-side
     count of gate-open frame-slots (detect mode); ungated paths count
-    every frame as open so ``vad_duty`` reads 1.0."""
+    every frame as open so ``vad_duty`` reads 1.0.
+
+    Per-chunk deltas are summed as int32 — the per-frame MAC counts are
+    exact small floats, and casting BEFORE the reduction keeps a big
+    chunk's sum exact where a float32 reduction would round (a serve
+    chunk is bounded well under 2^31 MACs; the carried total uses the
+    2^61 split counters above).
+    """
     return _Accum(
-        macs=acc.macs + jnp.sum(stats.macs).astype(jnp.float32),
-        macs_dense=acc.macs_dense + jnp.sum(stats.macs_dense
-                                            ).astype(jnp.float32),
-        frames=acc.frames + jnp.asarray(n_frames, jnp.int32),
-        fex_samples=acc.fex_samples + jnp.asarray(n_samples, jnp.float32),
-        vad_open=acc.vad_open + (jnp.asarray(n_frames, jnp.float32)
-                                 if vad_open is None
-                                 else vad_open.astype(jnp.float32)),
+        macs=_count_add(acc.macs,
+                        jnp.sum(stats.macs.astype(jnp.int32))),
+        macs_dense=_count_add(acc.macs_dense,
+                              jnp.sum(stats.macs_dense.astype(jnp.int32))),
+        frames=_count_add(acc.frames, n_frames),
+        fex_samples=_count_add(acc.fex_samples, n_samples),
+        vad_open=_count_add(acc.vad_open,
+                            n_frames if vad_open is None else vad_open),
     )
+
+
+def _feats_bad(feats) -> Array:
+    """(F, B, C) frame-major features → per-slot (B,) non-finite flag."""
+    return jnp.any(~jnp.isfinite(feats), axis=(0, 2))
 
 
 def _process_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, state: dg.DeltaState,
                    acc: _Accum, feats, *, threshold: float, backend: str,
                    interpret: bool | None):
-    """Pure chunk step: (state, acc, feats (F,B,C)) -> (state', acc', out)."""
+    """Pure chunk step:
+    (state, acc, feats (F,B,C)) -> (state', acc', out, health)."""
+    in_bad = _feats_bad(feats)
     hs, state, stats = dg.delta_gru_scan(
         gru, feats, threshold=threshold, state=state,
         backend=backend, interpret=interpret)
     out = _classify(w_fc, b_fc, hs, stats)
-    return state, _bump(acc, stats, feats.shape[0] * feats.shape[1], 0), out
+    health = slot_health(in_bad, None, state, None, None)
+    return (state, _bump(acc, stats, feats.shape[0] * feats.shape[1], 0),
+            out, health)
 
 
 def _classify_int(w_fc, b_fc, hs_codes, stats, logit_frac: int):
@@ -207,6 +400,7 @@ def _process_chunk_int(gru: fp.IntGruWeights, w_fc, b_fc,
     """Integer mirror of ``_process_chunk``: feats (F, B, C) floats on the
     12-bit grid → code domain → int ΔGRU → int FC.  ``state`` carries
     integer codes (int16/int32 ``DeltaState``)."""
+    in_bad = _feats_bad(feats)
     xs = fp.to_code(feats, gfmt.feat_frac, 16, jnp.int16)
     hs, state, nz_dx, nz_dh = fp.int_gru_scan(
         gru, gfmt, xs, threshold, state=state, backend=backend,
@@ -214,7 +408,9 @@ def _process_chunk_int(gru: fp.IntGruWeights, w_fc, b_fc,
     stats = dg._stats_from_counts(nz_dx, nz_dh, xs.shape[-1],
                                   gru.w_h.shape[0])
     out = _classify_int(w_fc, b_fc, hs, stats, gfmt.logit_frac)
-    return state, _bump(acc, stats, feats.shape[0] * feats.shape[1], 0), out
+    health = slot_health(in_bad, None, state, None, None)
+    return (state, _bump(acc, stats, feats.shape[0] * feats.shape[1], 0),
+            out, health)
 
 
 def _process_audio_chunk_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
@@ -227,6 +423,7 @@ def _process_audio_chunk_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
     → int FC in one jitted graph — the deployed datapath, bit-true
     against the golden fixed-point model.  ``fex_state`` holds int16
     register codes, ``state`` int16/int32 ΔGRU codes."""
+    in_bad = jnp.any(~jnp.isfinite(audio), axis=1)    # pre-quantizer
     audio = quantize_audio_12b(audio.astype(jnp.float32))
     audio_codes = fp.to_code(audio, ffmt.feat_frac, 16, jnp.int16)
     feats, fex_buf = fp.int_fex_scan(
@@ -241,7 +438,9 @@ def _process_audio_chunk_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
     out = _classify_int(w_fc, b_fc, hs, stats, gfmt.logit_frac)
     decisions = xs.shape[0] * xs.shape[1]             # frames × streams
     acc = _bump(acc, stats, decisions, decisions * frame_shift)
-    return _unpack_state(fex_buf), state, acc, out
+    fex_state = _unpack_state(fex_buf)
+    health = slot_health(in_bad, fex_state, state, None, None)
+    return fex_state, state, acc, out, health
 
 
 def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
@@ -256,6 +455,7 @@ def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
     here leaves the device — only final logits/votes/counters do, when
     the caller fetches them.
     """
+    in_bad = jnp.any(~jnp.isfinite(audio), axis=1)   # pre-quantizer
     audio = quantize_audio_12b(audio.astype(jnp.float32))
     feats, fex_state = fex_scan(
         audio, coef, fex_state, frame_shift=frame_shift,
@@ -268,7 +468,8 @@ def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
     out = _classify(w_fc, b_fc, hs, stats)
     decisions = xs.shape[0] * xs.shape[1]            # frames × streams
     acc = _bump(acc, stats, decisions, decisions * frame_shift)
-    return fex_state, state, acc, out
+    health = slot_health(in_bad, fex_state, state, None, None)
+    return fex_state, state, acc, out, health
 
 
 def _detect_tail(w_fc, b_fc, hs, stats, gate, *, logit_frac=None,
@@ -301,6 +502,7 @@ def _process_audio_chunk_detect(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
     (filters, hold/hangover, x̂/ĥ/M, smoothed posteriors) slot-resident
     on device.  The VAD clamps the delta path by sample-and-holding the
     features during silence — Δx = 0 exactly, no kernel change."""
+    in_bad = jnp.any(~jnp.isfinite(audio), axis=1)   # pre-quantizer
     audio = quantize_audio_12b(audio.astype(jnp.float32))
     energy = frame_energy(audio, frame_shift)        # (F, B)
     feats, fex_state = fex_scan(
@@ -317,7 +519,8 @@ def _process_audio_chunk_detect(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
     decisions = xs.shape[0] * xs.shape[1]
     acc = _bump(acc, stats, decisions, decisions * frame_shift,
                 vad_open=jnp.sum(gate))
-    return fex_state, state, vad_state, det_state, acc, out
+    health = slot_health(in_bad, fex_state, state, vad_state, det_state)
+    return fex_state, state, vad_state, det_state, acc, out, health
 
 
 def _process_audio_chunk_detect_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
@@ -336,6 +539,7 @@ def _process_audio_chunk_detect_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
     int16 FEATURE CODES (a held code stream is a zero integer delta,
     bit-true), the detector smooths posteriors from the dequantized int32
     logit codes (grid-exact floats, deterministic)."""
+    in_bad = jnp.any(~jnp.isfinite(audio), axis=1)   # pre-quantizer
     audio = quantize_audio_12b(audio.astype(jnp.float32))
     energy = frame_energy(audio, frame_shift)        # float — pre-codes
     audio_codes = fp.to_code(audio, ffmt.feat_frac, 16, jnp.int16)
@@ -355,7 +559,9 @@ def _process_audio_chunk_detect_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
     decisions = xs.shape[0] * xs.shape[1]
     acc = _bump(acc, stats, decisions, decisions * frame_shift,
                 vad_open=jnp.sum(gate))
-    return _unpack_state(fex_buf), state, vad_state, det_state, acc, out
+    fex_state = _unpack_state(fex_buf)
+    health = slot_health(in_bad, fex_state, state, vad_state, det_state)
+    return fex_state, state, vad_state, det_state, acc, out, health
 
 
 @jax.jit
@@ -461,6 +667,22 @@ class StreamingKwsSession:
         the ΔGRU delta path during silence (detect mode only; default
         ``VADConfig()``; pass ``vad=VAD_OFF`` to disable gating while
         keeping the detection head).
+      supervisor: a ``SupervisorConfig`` enabling the self-healing
+        supervisor (DESIGN.md §11): the per-slot health mask the fused
+        step emits is fetched every ``check_every`` chunks, and slots
+        whose quarantine-mask bits stay set for ``quarantine_after``
+        consecutive checks are auto-reset to fresh-stream state (the
+        same mask-batched ``reset_streams`` continuous batching uses);
+        recoveries and their reasons surface in ``StreamSummary``.
+        ``None`` (default) disables healing — flags are still computed
+        (the datapath is identical) but nobody reads them.
+      input_policy: what ``process_audio`` does with hostile samples —
+        "reject" (default) raises ``StreamInputError`` on non-finite
+        samples, "sanitize" squashes NaN to silence and clamps ±Inf to
+        the 12-bit rails, "trust" forwards them to the device untouched
+        (the soak harness uses this to exercise device-side healing).
+        Un-decodable dtypes and out-of-range integer codes always
+        reject, under every policy.
 
     State contract: between ``process_audio`` calls, ALL stream state —
     FEx registers, carried sample remainder length aside, ΔGRU x̂/ĥ/M,
@@ -478,9 +700,14 @@ class StreamingKwsSession:
                  numerics: str = "float32",
                  bundle: fp.IntKwsBundle | None = None,
                  detector: DetectorConfig | None = None,
-                 vad: VADConfig | None = None):
+                 vad: VADConfig | None = None,
+                 supervisor: SupervisorConfig | None = None,
+                 input_policy: str = "reject"):
         if numerics not in ("float32", "int8"):
             raise ValueError(f"unknown numerics: {numerics!r}")
+        if input_policy not in ("reject", "sanitize", "trust"):
+            raise ValueError(f"unknown input_policy: {input_policy!r} "
+                             f"(choose reject / sanitize / trust)")
         if vad is not None and detector is None:
             raise ValueError("vad gating is part of detection mode: pass "
                              "a DetectorConfig alongside the VADConfig")
@@ -527,41 +754,115 @@ class StreamingKwsSession:
         if fex_backend is None:
             fex_backend = "xla" if resolve_interpret(interpret) else "pallas"
         self._fex_backend = fex_backend
-        # _process_chunk(gru, w_fc, b_fc, state, acc, feats): state/acc are
-        # slot-major, feats is time-major with slots on axis 1.  The int8
-        # step has the same argument geometry, so the shard wrapper is
-        # numerics-agnostic.
-        det_kw = ({"vad_cfg": self._vad, "det_cfg": self._detector}
-                  if detector is not None else {})
-        if numerics == "int8":
-            if backend not in ("pallas", "xla"):
-                raise ValueError(f"unknown ΔGRU backend: {backend!r}")
-            step_fn = functools.partial(
-                _process_chunk_int, threshold=self.threshold,
-                gfmt=self._bundle.gfmt, backend=backend,
-                interpret=interpret)
-            audio_fn = (_process_audio_chunk_detect_int
-                        if detector is not None else _process_audio_chunk_int)
-            self._audio_step_fn = functools.partial(
-                audio_fn, threshold=self.threshold,
-                backend=backend, fex_backend=fex_backend,
-                interpret=interpret, gfmt=self._bundle.gfmt, **det_kw)
-        else:
-            step_fn = functools.partial(
-                _process_chunk, threshold=self.threshold,
-                backend=backend, interpret=interpret)
-            audio_fn = (_process_audio_chunk_detect
-                        if detector is not None else _process_audio_chunk)
-            self._audio_step_fn = functools.partial(
-                audio_fn, threshold=self.threshold,
-                backend=backend, fex_backend=fex_backend,
-                interpret=interpret, **det_kw)
-        self._step = jax.jit(self._shard(
-            step_fn, n_args=6, slot_major=(3, 4), time_major=(5,),
-            n_state_out=2))
-        self._audio_step = None                     # built when FEx is known
+        self._backend = backend
+        self._interpret = interpret
+        self.supervisor = supervisor
+        self.input_policy = input_policy
+        self._last_health: Array | None = None
+        self._strikes = np.zeros((batch,), np.int64)
+        self._recoveries = 0
+        self._recovery_reasons: dict[str, int] = {}
+        self._sat_events = 0
+        # Compiled steps are cached PER Δ_TH: ``set_threshold`` (the
+        # degradation lever) re-points at a cached jit instead of paying
+        # a retrace every time the controller steps up and back down.
+        self._step_cache: dict[float, list] = {}
+        self._fex_kw: dict | None = None            # set by _require_fex
+        self._step = None
+        self._audio_step_fn = None
+        self._audio_step = None
+        self._use_threshold(self.threshold)
         if input_dim is not None:
             self._init_state(input_dim)
+
+    def _make_step_fns(self, threshold: float):
+        """Build (jitted feature step, audio-step partial) for one Δ_TH.
+
+        _process_chunk(gru, w_fc, b_fc, state, acc, feats): state/acc are
+        slot-major, feats is time-major with slots on axis 1.  The int8
+        step has the same argument geometry, so the shard wrapper is
+        numerics-agnostic.
+        """
+        det_kw = ({"vad_cfg": self._vad, "det_cfg": self._detector}
+                  if self._detector is not None else {})
+        if self.numerics == "int8":
+            if self._backend not in ("pallas", "xla"):
+                raise ValueError(f"unknown ΔGRU backend: {self._backend!r}")
+            step_fn = functools.partial(
+                _process_chunk_int, threshold=threshold,
+                gfmt=self._bundle.gfmt, backend=self._backend,
+                interpret=self._interpret)
+            audio_fn = (_process_audio_chunk_detect_int
+                        if self._detector is not None
+                        else _process_audio_chunk_int)
+            audio_step_fn = functools.partial(
+                audio_fn, threshold=threshold,
+                backend=self._backend, fex_backend=self._fex_backend,
+                interpret=self._interpret, gfmt=self._bundle.gfmt, **det_kw)
+        else:
+            step_fn = functools.partial(
+                _process_chunk, threshold=threshold,
+                backend=self._backend, interpret=self._interpret)
+            audio_fn = (_process_audio_chunk_detect
+                        if self._detector is not None
+                        else _process_audio_chunk)
+            audio_step_fn = functools.partial(
+                audio_fn, threshold=threshold,
+                backend=self._backend, fex_backend=self._fex_backend,
+                interpret=self._interpret, **det_kw)
+        step = jax.jit(self._shard(
+            step_fn, n_args=6, slot_major=(3, 4), time_major=(5,),
+            n_state_out=2))
+        return step, audio_step_fn
+
+    def _build_audio_step(self, audio_step_fn):
+        """Jit + shard the fused audio step once the FEx kwargs are known."""
+        fn = functools.partial(audio_step_fn, **self._fex_kw)
+        if self._detector is not None:
+            # _process_audio_chunk_detect[_int](gru, w_fc, b_fc, coef,
+            # fex_state, state, vad_state, det_state, acc, audio):
+            # the four state trees + acc + audio are slot-major.
+            return jax.jit(self._shard(
+                fn, n_args=10, slot_major=(4, 5, 6, 7, 8, 9),
+                time_major=(), n_state_out=5))
+        # _process_audio_chunk[_int](gru, w_fc, b_fc, coef, fex_state,
+        # state, acc, audio): fex_state/state/acc/audio are slot-major.
+        return jax.jit(self._shard(
+            fn, n_args=8, slot_major=(4, 5, 6, 7), time_major=(),
+            n_state_out=3))
+
+    def _use_threshold(self, threshold: float):
+        """Point the session's compiled steps at one Δ_TH (cached)."""
+        cached = self._step_cache.get(threshold)
+        if cached is None:
+            step, audio_step_fn = self._make_step_fns(threshold)
+            cached = [step, audio_step_fn, None]
+            self._step_cache[threshold] = cached
+        if cached[2] is None and self._fex_kw is not None:
+            cached[2] = self._build_audio_step(cached[1])
+        self.threshold = threshold
+        self._step, self._audio_step_fn, self._audio_step = cached
+
+    def set_threshold(self, threshold: float):
+        """Re-point the serving step at a different Δ_TH operating point
+        mid-stream — the graceful-degradation lever (DESIGN.md §11).
+
+        Carried stream state (FEx/ΔGRU/VAD/detector) is untouched: the
+        next chunk simply runs with the new delta deadband, trading
+        accuracy for compute along the measured nJ/decision curve
+        (``BENCH_detect.json``).  Compiled steps are cached per distinct
+        threshold, so a controller stepping up under overload and back
+        down on release pays one compile per operating POINT, not per
+        switch.  Raises ``ValueError`` for non-finite or negative
+        thresholds.  No-op when the threshold is already current.
+        """
+        threshold = float(threshold)
+        if not np.isfinite(threshold) or threshold < 0.0:
+            raise ValueError(f"delta threshold must be finite and >= 0, "
+                             f"got {threshold}")
+        if threshold == self.threshold:
+            return
+        self._use_threshold(threshold)
 
     def _shard(self, fn, *, n_args: int, slot_major: tuple[int, ...],
                time_major: tuple[int, ...], n_state_out: int):
@@ -571,10 +872,11 @@ class StreamingKwsSession:
         FIRST (state trees, telemetry, raw audio) → prefix P("data");
         ``time_major``: frame-major inputs with slots on axis 1 →
         P(None, "data"); every other arg (weights, coefficients) is
-        replicated.  Outputs follow the fixed (state…, acc, ChunkResult)
-        convention: ``n_state_out`` slot-major trees then the time-major
-        ChunkResult.  No-op without a mesh — the unsharded session is
-        byte-for-byte the pre-sharding code path.
+        replicated.  Outputs follow the fixed (state…, acc, ChunkResult,
+        health) convention: ``n_state_out`` slot-major trees, the
+        time-major ChunkResult, then the slot-major (B,) health mask.
+        No-op without a mesh — the unsharded session is byte-for-byte
+        the pre-sharding code path.
         """
         if self.mesh is None:
             return fn
@@ -584,7 +886,7 @@ class StreamingKwsSession:
         for i in time_major:
             specs[i] = P(None, shp.SLOT_AXIS)
         out_specs = tuple([P(shp.SLOT_AXIS)] * n_state_out
-                          + [P(None, shp.SLOT_AXIS)])
+                          + [P(None, shp.SLOT_AXIS), P(shp.SLOT_AXIS)])
         return shard_map_kernels(fn, self.mesh, in_specs=tuple(specs),
                                  out_specs=out_specs)
 
@@ -622,14 +924,13 @@ class StreamingKwsSession:
                 self._bundle = fp.fold_fex(self._bundle, self._fex)
                 self._coef = shp.put_replicated(self._bundle.coef,
                                                 self.mesh)
-                audio_step_fn = functools.partial(
-                    self._audio_step_fn, frame_shift=fcfg.frame_shift,
-                    ffmt=self._bundle.ffmt)
+                self._fex_kw = {"frame_shift": fcfg.frame_shift,
+                                "ffmt": self._bundle.ffmt}
             else:
                 self._coef = shp.put_replicated(self._fex.coef, self.mesh)
-                audio_step_fn = functools.partial(
-                    self._audio_step_fn, frame_shift=fcfg.frame_shift,
-                    env_alpha=fcfg.env_alpha, log_eps=fcfg.log_eps)
+                self._fex_kw = {"frame_shift": fcfg.frame_shift,
+                                "env_alpha": fcfg.env_alpha,
+                                "log_eps": fcfg.log_eps}
             self._fex_state = shp.put_slot_sharded(
                 self._fresh_fex_state(fcfg.n_active), self.mesh)
             self._audio_rem = np.zeros((self.batch, 0), np.float32)
@@ -644,30 +945,58 @@ class StreamingKwsSession:
                 self._det_state = shp.put_slot_sharded(
                     init_detector_state(self.batch, kws.N_CLASSES),
                     self.mesh)
-                # _process_audio_chunk_detect[_int](gru, w_fc, b_fc, coef,
-                # fex_state, state, vad_state, det_state, acc, audio):
-                # the four state trees + acc + audio are slot-major.
-                self._audio_step = jax.jit(self._shard(
-                    audio_step_fn,
-                    n_args=10, slot_major=(4, 5, 6, 7, 8, 9),
-                    time_major=(), n_state_out=5))
-            else:
-                # _process_audio_chunk[_int](gru, w_fc, b_fc, coef,
-                # fex_state, state, acc, audio): fex_state/state/acc/audio
-                # are slot-major.
-                self._audio_step = jax.jit(self._shard(
-                    audio_step_fn,
-                    n_args=8, slot_major=(4, 5, 6, 7), time_major=(),
-                    n_state_out=3))
+            # Re-enter the cache now that the FEx kwargs are known —
+            # this builds (and caches) the fused audio step.
+            self._use_threshold(self.threshold)
         return self._fex
+
+    def _coerce_audio(self, audio) -> np.ndarray:
+        """Decode + police one raw-audio chunk per ``input_policy``.
+
+        Integer arrays are treated as ADC codes: range-checked against
+        int16 and decoded to float (a wrong-range code is a framing bug,
+        not audio — always rejected).  Float arrays are policed for
+        non-finite samples according to the policy; anything else (text,
+        objects, complex, bools) cannot be audio and raises
+        ``StreamInputError`` outright.
+        """
+        arr = np.asarray(audio)
+        if arr.dtype.kind in "iu":
+            if arr.size and (int(arr.min()) < -32768
+                             or int(arr.max()) > 32767):
+                raise StreamInputError(
+                    f"integer audio must be int16-range ADC codes in "
+                    f"[-32768, 32767]; got values in "
+                    f"[{int(arr.min())}, {int(arr.max())}]")
+            return arr.astype(np.float32) / 32768.0
+        if arr.dtype.kind != "f":
+            raise StreamInputError(
+                f"audio dtype {arr.dtype} is not decodable: pass float "
+                f"samples in [-1, 1) or int16-range integer codes")
+        arr = arr.astype(np.float32)
+        if self.input_policy == "trust":
+            return arr
+        n_bad = int(np.count_nonzero(~np.isfinite(arr)))
+        if n_bad:
+            if self.input_policy == "reject":
+                raise StreamInputError(
+                    f"{n_bad} non-finite samples in audio chunk "
+                    f"(input_policy='reject'; use 'sanitize' to squash "
+                    f"them instead)")
+            arr = np.nan_to_num(arr, nan=0.0, posinf=1.0 - 2.0 ** -11,
+                                neginf=-1.0)
+        return arr
 
     def process_audio(self, audio) -> ChunkResult:
         """Run a chunk of RAW audio through the fused FEx→ΔGRU→FC step.
 
         ``audio``: (samples,) for a single stream, or (batch, samples)
-        float in [-1, 1).  One jitted device step per chunk — zero host
-        syncs inside the chunk.  Samples past the last whole 16 ms frame
-        are buffered host-side and prepended to the next chunk, so chunk
+        float in [-1, 1) — or int16-range integer ADC codes, which are
+        decoded.  Hostile inputs are policed per the session's
+        ``input_policy`` (``StreamInputError`` under the default
+        "reject").  One jitted device step per chunk — zero host syncs
+        inside the chunk.  Samples past the last whole 16 ms frame are
+        buffered host-side and prepended to the next chunk, so chunk
         boundaries (frame-aligned or not) are bit-invisible.
 
         Returns DEVICE arrays with one row per COMPLETED frame (possibly
@@ -676,7 +1005,7 @@ class StreamingKwsSession:
         chunk length.
         """
         fex = self._require_fex()
-        audio = np.asarray(audio, np.float32)
+        audio = self._coerce_audio(audio)
         if audio.ndim == 1:
             audio = audio[None]
         if audio.shape[0] != self.batch:
@@ -696,15 +1025,18 @@ class StreamingKwsSession:
         block = jnp.asarray(audio[:, :n_frames * shift])
         if self._detector is not None:
             (self._fex_state, self._state, self._vad_state, self._det_state,
-             self._acc, out) = self._audio_step(
+             self._acc, out, health) = self._audio_step(
                 self._gru, self._w_fc, self._b_fc, self._coef,
                 self._fex_state, self._state, self._vad_state,
                 self._det_state, self._acc, block)
         else:
-            self._fex_state, self._state, self._acc, out = self._audio_step(
+            (self._fex_state, self._state, self._acc, out,
+             health) = self._audio_step(
                 self._gru, self._w_fc, self._b_fc, self._coef,
                 self._fex_state, self._state, self._acc, block)
+        self._last_health = health
         self._chunks += 1
+        self._maybe_heal()
         return out
 
     def process_chunk(self, feats) -> ChunkResult:
@@ -737,9 +1069,11 @@ class StreamingKwsSession:
         elif feats.shape[-1] != self._input_dim:
             raise ValueError(f"chunk has {feats.shape[-1]} feature channels,"
                              f" session state is {self._input_dim}-wide")
-        self._state, self._acc, out = self._step(
+        self._state, self._acc, out, health = self._step(
             self._gru, self._w_fc, self._b_fc, self._state, self._acc, feats)
+        self._last_health = health
         self._chunks += 1
+        self._maybe_heal()
         return out
 
     @property
@@ -768,6 +1102,11 @@ class StreamingKwsSession:
         self._acc = shp.put_slot_sharded(_zero_accum(self.n_shards),
                                          self.mesh)
         self._chunks = 0
+        self._last_health = None
+        self._strikes = np.zeros((self.batch,), np.int64)
+        self._recoveries = 0
+        self._recovery_reasons = {}
+        self._sat_events = 0
 
     def reset_stream(self, i: int):
         """Reset ONE stream slot to a fresh-stream state (continuous
@@ -811,6 +1150,75 @@ class StreamingKwsSession:
             self._det_state = _reset_det_slots(self._det_state, mask)
         if self._audio_rem is not None and self._audio_rem.shape[1]:
             self._audio_rem[slots] = 0.0
+        self._strikes[slots] = 0          # a reset slot restarts clean
+
+    # ------------------------------------------------ self-healing --
+
+    def _quarantine(self, flags: np.ndarray, mask: int) -> list[int]:
+        """Reset every slot whose strike count cleared the bar; returns
+        the slots reset.  ``flags`` is the fetched (batch,) health mask,
+        ``mask`` the quarantine bit set."""
+        bad = (flags & mask) != 0
+        self._strikes = np.where(bad, self._strikes + 1, 0)
+        after = (self.supervisor.quarantine_after
+                 if self.supervisor is not None else 1)
+        victims = np.flatnonzero(self._strikes >= after)
+        if victims.size == 0:
+            return []
+        for s in victims:
+            for bit, reason in HEALTH_REASONS.items():
+                if flags[s] & bit & mask:
+                    self._recovery_reasons[reason] = \
+                        self._recovery_reasons.get(reason, 0) + 1
+        self._recoveries += int(victims.size)
+        out = [int(s) for s in victims]
+        self.reset_streams(out)
+        return out
+
+    def _maybe_heal(self):
+        """One supervisor tick (called after every processed chunk)."""
+        sup = self.supervisor
+        if sup is None or self._last_health is None:
+            return
+        if self._chunks % sup.check_every:
+            return
+        flags = np.asarray(jax.device_get(self._last_health))
+        self._sat_events += int(np.count_nonzero(flags & HEALTH_SAT))
+        self._quarantine(flags, sup.quarantine_mask)
+
+    def heal(self, mask: int | None = None) -> list[int]:
+        """Force one supervisor pass NOW, ignoring ``check_every`` and
+        the strike bar: every slot currently flagged by ``mask``
+        (default: the supervisor's quarantine mask, or
+        ``QUARANTINE_DEFAULT`` without one) is reset immediately.
+        Returns the slots reset.  Safe without a supervisor — this is
+        the manual lever the serve loop can pull between steps.
+        """
+        if self._last_health is None:
+            return []
+        if mask is None:
+            mask = (self.supervisor.quarantine_mask
+                    if self.supervisor is not None else QUARANTINE_DEFAULT)
+        flags = np.asarray(jax.device_get(self._last_health))
+        victims = [int(s) for s in np.flatnonzero((flags & mask) != 0)]
+        if victims:
+            for s in victims:
+                for bit, reason in HEALTH_REASONS.items():
+                    if flags[s] & bit & mask:
+                        self._recovery_reasons[reason] = \
+                            self._recovery_reasons.get(reason, 0) + 1
+            self._recoveries += len(victims)
+            self.reset_streams(victims)
+        return victims
+
+    def unhealthy_slots(self) -> dict[int, int]:
+        """Slots flagged by the LAST processed chunk: {slot: HEALTH_*
+        bitmask}, empty when everything is healthy (or nothing ran yet).
+        One host fetch of a (batch,) int32 — cheap enough to poll."""
+        if self._last_health is None:
+            return {}
+        flags = np.asarray(jax.device_get(self._last_health))
+        return {int(i): int(flags[i]) for i in np.flatnonzero(flags)}
 
     def shard_of_slot(self, i: int) -> int:
         """Which mesh shard owns global slot ``i`` (block partitioning)."""
@@ -823,16 +1231,24 @@ class StreamingKwsSession:
         per-shard partial sums come back as ``(n_shards,)`` vectors and
         are summed here, on the host.
         """
-        acc = _Accum(*[a.sum() for a in jax.device_get(self._acc)])
-        if int(acc.frames) == 0:
+        acc = jax.device_get(self._acc)
+        totals: dict[str, int] = {}
+        overflow = False
+        for name, cnt in zip(_Accum._fields, acc):
+            totals[name], sat = _count_value(cnt)
+            overflow = overflow or sat
+        robust = dict(overflowed=overflow, recoveries=self._recoveries,
+                      recovery_reasons=dict(self._recovery_reasons),
+                      sat_events=self._sat_events)
+        if totals["frames"] == 0:
             # Nothing processed yet: report an identifiable empty state,
             # not a spurious 100%-sparsity / 0-energy datapoint.
             return StreamSummary(frames=0, chunks=0, sparsity=0.0,
                                  energy_nj_per_decision=0.0, latency_ms=0.0,
-                                 dense_energy_nj=0.0)
-        frames = max(int(acc.frames), 1)
-        macs_pf = float(acc.macs) / frames
-        dense_pf = float(acc.macs_dense) / frames
+                                 dense_energy_nj=0.0, **robust)
+        frames = max(totals["frames"], 1)
+        macs_pf = totals["macs"] / frames
+        dense_pf = totals["macs_dense"] / frames
         # Active FEx channels: known only when a FEx is attached (audio
         # mode); feature-mode sessions keep the paper's 10-channel model
         # default — the GRU input width is NOT a channel count.
@@ -841,23 +1257,24 @@ class StreamingKwsSession:
         # The energy detector is only powered when the gate is actually
         # configured (detect mode, non-negative threshold — VAD_OFF is
         # an unpowered comparator); its cost joins the headline total.
-        vad_nj = (vad_energy_nj(float(acc.fex_samples)) / frames
+        vad_nj = (vad_energy_nj(float(totals["fex_samples"])) / frames
                   if self._vad is not None
                   and self._vad.energy_threshold >= 0 else 0.0)
         return StreamSummary(
-            frames=int(acc.frames), chunks=self._chunks,
-            sparsity=1.0 - float(acc.macs) / max(float(acc.macs_dense), 1.0),
+            frames=totals["frames"], chunks=self._chunks,
+            sparsity=1.0 - totals["macs"] / max(totals["macs_dense"], 1),
             energy_nj_per_decision=c.energy_nj_per_decision + vad_nj,
             latency_ms=c.latency_ms,
             dense_energy_nj=frame_cost(dense_pf,
                                        n_channels=n_ch).energy_nj_per_decision,
-            fex_samples=int(acc.fex_samples),
+            fex_samples=totals["fex_samples"],
             # Priced from COUNTED samples (audio-in mode); agrees with the
             # model's per-frame FEx share when every frame saw 128 samples.
             fex_energy_nj_per_decision=fex_energy_nj(
-                float(acc.fex_samples), n_ch) / frames,
-            vad_duty=float(acc.vad_open) / frames,
+                float(totals["fex_samples"]), n_ch) / frames,
+            vad_duty=totals["vad_open"] / frames,
             vad_energy_nj_per_decision=vad_nj,
+            **robust,
         )
 
 

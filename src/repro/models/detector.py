@@ -156,6 +156,22 @@ def detector_scan(cfg: DetectorConfig, state: DetectorState, posts: Array
     return state, events
 
 
+def detector_state_flags(state: DetectorState) -> Array:
+    """Per-slot health predicate over the decision head's carried state
+    (DESIGN.md §11): (B,) bool, True where the slot's EMA is poisoned.
+
+    The smoothed posteriors are a convex combination of softmax outputs,
+    so a healthy slot's ``smooth`` lies in [0, 1] and is finite; anything
+    else (a NaN that leaked through the logits, an out-of-range value
+    from corrupted memory) means the latch can never fire/release sanely
+    again and the slot needs a reset.  Elementwise in B — runs inside
+    the fused serving step, sharding-safe, and pure (reads state only).
+    """
+    s = state.smooth
+    bad = ~jnp.isfinite(s) | (s < -1e-6) | (s > 1.0 + 1e-6)
+    return jnp.any(bad, axis=-1)
+
+
 # ---------------------------------------------------------------- metrics --
 
 @dataclasses.dataclass(frozen=True)

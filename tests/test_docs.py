@@ -76,7 +76,7 @@ def test_serve_commands_parse_against_the_cli():
     parser = serve.build_parser()
     for cmd in (commands.SERVE_CMD, commands.SERVE_SHARDED_CMD,
                 commands.SERVE_INT8_CMD, commands.SERVE_BUNDLE_CMD,
-                commands.SERVE_DETECT_CMD):
+                commands.SERVE_DETECT_CMD, commands.SERVE_FAULTS_CMD):
         words = _split_env(cmd)
         flags = words[words.index("repro.launch.serve") + 1:]
         args = parser.parse_args(flags)

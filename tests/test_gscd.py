@@ -60,3 +60,66 @@ def test_load_dataset_none_falls_back_to_synth():
     audio, labels = load_dataset(None, n_per_class=2)
     assert audio.shape == (2 * len(CLASSES), T)
     assert labels.min() >= 0 and labels.max() < len(CLASSES)
+
+
+# ------------------------------------------------- corrupt-input hardening
+def _write_wav(path, fs=8000, width=2, data=b"\x00\x01" * 256):
+    import wave
+    with wave.open(str(path), "wb") as w:
+        w.setnchannels(1)
+        w.setsampwidth(width)
+        w.setframerate(fs)
+        w.writeframes(data)
+
+
+def test_load_wav_garbage_container_names_the_file(tmp_path):
+    import pytest
+    bad = tmp_path / "garbage.wav"
+    bad.write_bytes(b"not a RIFF header at all")
+    with pytest.raises(ValueError, match="garbage.wav"):
+        load_wav_8k(bad)
+
+
+def test_load_wav_truncated_payload_names_the_file(tmp_path):
+    import pytest
+    good = tmp_path / "good.wav"
+    _write_wav(good)
+    raw = good.read_bytes()
+    trunc = tmp_path / "truncated.wav"
+    trunc.write_bytes(raw[: len(raw) - 200])  # header intact, data cut
+    with pytest.raises(ValueError, match="truncated.wav"):
+        load_wav_8k(trunc)
+
+
+def test_load_wav_rejects_empty_payload(tmp_path):
+    import pytest
+    empty = tmp_path / "empty.wav"
+    _write_wav(empty, data=b"")
+    with pytest.raises(ValueError, match="no samples"):
+        load_wav_8k(empty)
+
+
+def test_load_wav_rejects_non_16bit(tmp_path):
+    import pytest
+    eight = tmp_path / "eight.wav"
+    _write_wav(eight, width=1, data=b"\x80" * 256)
+    with pytest.raises(ValueError, match="16-bit"):
+        load_wav_8k(eight)
+
+
+def test_load_wav_rejects_undecimatable_rate(tmp_path):
+    import pytest
+    odd = tmp_path / "odd_rate.wav"
+    _write_wav(odd, fs=11025)
+    with pytest.raises(ValueError, match="11025"):
+        load_wav_8k(odd)
+
+
+def test_load_dataset_rejects_missing_and_empty_paths(tmp_path):
+    import pytest
+    with pytest.raises(ValueError, match="not a directory"):
+        load_dataset(str(tmp_path / "nope"))
+    with pytest.raises(ValueError, match="no .*\\.wav"):
+        load_dataset(str(tmp_path))          # exists, holds nothing
+    with pytest.raises(ValueError, match="n_per_class"):
+        load_dataset(None, n_per_class=0)
