@@ -57,6 +57,11 @@ SOAK_CMD = ("PYTHONPATH=src:. python benchmarks/serve_bench.py --soak "
 SERVE_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/serve_bench.py"
 KERNEL_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/kernel_bench.py"
 
+# Kernel autotuning (DESIGN.md §12) -----------------------------------------
+KERNEL_TUNE_CMD = "PYTHONPATH=src:. python benchmarks/kernel_bench.py --tune"
+KERNEL_TUNE_QUICK_CMD = ("PYTHONPATH=src:. python benchmarks/kernel_bench.py "
+                         "--tune --quick")
+
 ALL_COMMANDS = {
     "install": INSTALL_CMD,
     "tier1": TIER1_CMD,
@@ -75,4 +80,6 @@ ALL_COMMANDS = {
     "soak": SOAK_CMD,
     "serve_bench": SERVE_BENCH_CMD,
     "kernel_bench": KERNEL_BENCH_CMD,
+    "kernel_tune": KERNEL_TUNE_CMD,
+    "kernel_tune_quick": KERNEL_TUNE_QUICK_CMD,
 }

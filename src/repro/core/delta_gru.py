@@ -231,7 +231,8 @@ def _delta_gru_scan_blocked(params: DeltaGRUParams, xs: Array,
 def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
                    state: DeltaState | None = None, *,
                    backend: str = "xla", interpret: bool | None = None,
-                   block_b: int | None = None, block_i: int | None = None,
+                   block_b: int | None = None, block_t: int | None = None,
+                   block_i: int | None = None,
                    block_o: int | None = None, h_qformat=None,
                    vmem_budget_bytes: int = _SEQ_KERNEL_VMEM_BUDGET_BYTES,
                    ) -> tuple[Array, DeltaState, DeltaStats]:
@@ -261,8 +262,12 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
           state and I/O live on integer grids.
       interpret: force the Pallas interpreter on/off (None = platform
         default).
-      block_b / block_i / block_o: Pallas tile-size overrides (batch,
-        input-block, output-block; None = auto divisors).
+      block_b / block_t / block_i / block_o: Pallas tile-size overrides
+        (batch tile, time tile, input-block, output-block).  ``None``
+        consults the ``kernels.autotune`` cache for this (kernel, shape,
+        dtype, threshold-bucket, platform) and otherwise keeps the static
+        defaults — behavior is unchanged until a cache is tuned.  All are
+        numerics-invariant.
       h_qformat: QAT hidden-state quantization grid (XLA backend only —
         see ``DeltaGRUCell``).
       vmem_budget_bytes: weight budget above which "pallas" takes the
@@ -289,14 +294,21 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
                          f"'xla' backend, got {backend!r}")
 
     if backend == "pallas-int":
+        from repro.kernels import autotune
         from repro.kernels.delta_gru_seq import delta_gru_seq_int
+        if block_b is None or block_t is None:
+            tuned = autotune.resolve("delta_gru_seq_int", (B, I, H),
+                                     "float32", threshold,
+                                     interpret=interpret, B=B, T=T)
+            block_b = block_b if block_b is not None else tuned.get("block_b")
+            block_t = block_t if block_t is not None else tuned.get("block_t")
         f32 = lambda a: a.astype(jnp.float32)
         th = jnp.full((1, 2), threshold, jnp.float32)
         hs, final, nz_dx, nz_dh = delta_gru_seq_int(
             f32(xs), f32(state.h), f32(state.x_hat), f32(state.h_hat),
             f32(state.m_x), f32(state.m_h), f32(params.w_x),
             f32(params.w_h), th, fmt=None, block_b=block_b,
-            interpret=interpret)
+            block_t=block_t, interpret=interpret)
         return hs, final, _stats_from_counts(nz_dx, nz_dh, I, H)
 
     if backend == "pallas":
@@ -304,11 +316,18 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
         if weight_bytes > vmem_budget_bytes:
             return _delta_gru_scan_blocked(params, xs, threshold, state,
                                            block_i, block_o, interpret)
+        from repro.kernels import autotune
         from repro.kernels.delta_gru_seq import delta_gru_seq
+        if block_b is None or block_t is None:
+            tuned = autotune.resolve("delta_gru_seq", (B, I, H), "float32",
+                                     threshold, interpret=interpret,
+                                     B=B, T=T)
+            block_b = block_b if block_b is not None else tuned.get("block_b")
+            block_t = block_t if block_t is not None else tuned.get("block_t")
         hs, final, nz_dx, nz_dh = delta_gru_seq(
             xs, state.h, state.x_hat, state.h_hat, state.m_x, state.m_h,
             params.w_x, params.w_h, threshold,
-            block_b=block_b, interpret=interpret)
+            block_b=block_b, block_t=block_t, interpret=interpret)
         return hs, DeltaState(*final), _stats_from_counts(nz_dx, nz_dh, I, H)
     if backend != "xla":
         raise ValueError(f"unknown ΔGRU backend: {backend!r}")

@@ -74,6 +74,26 @@ def align(x, shift: int):
     return rshift_round(x, -shift)
 
 
+def align_pair(p, shift_x: int, shift_h: int):
+    """``align`` across a fused ``[x-half | h-half]`` block whose halves
+    sit on different grids: the shift amounts become per-COLUMN constant
+    vectors (baked at trace time), so the whole block moves in one
+    add+shift pass instead of two per-half passes.  Bit-identical to
+    ``align`` applied per half."""
+    if shift_x == shift_h:
+        return align(p, shift_x)
+    n = p.shape[-1] // 2
+    if shift_x < 0 and shift_h < 0:
+        s = np.concatenate([np.full(n, -shift_x), np.full(n, -shift_h)])
+        bias = jnp.asarray((1 << (s - 1)).astype(np.int32))
+        return (p + bias) >> jnp.asarray(s.astype(np.int32))
+    if shift_x >= 0 and shift_h >= 0:
+        s = np.concatenate([np.full(n, shift_x), np.full(n, shift_h)])
+        return p << jnp.asarray(s.astype(np.int32))
+    return jnp.concatenate([align(p[:, :n], shift_x),
+                            align(p[:, n:], shift_h)], axis=-1)
+
+
 def sat(x, bits: int):
     """Two's-complement saturation to a ``bits``-wide word."""
     lim = 1 << (bits - 1)
@@ -192,9 +212,10 @@ def int_delta_branch(v, v_hat, th_code):
     return delta, new_v_hat, mask
 
 
-def int_gru_gates(m_x, m_h, h, fmt: GruFormats):
+def int_gru_gates(m, h, fmt: GruFormats):
     """Type-2 GRU nonlinearity in code domain (ideal-LUT σ/tanh).
 
+    ``m`` is the FUSED ``[m_x | m_h]`` accumulator block, (B, 6H) int32.
     The accumulator saturation bounds |pre| ≤ 2^(acc_bits-1-acc_frac+1),
     so every dequantized intermediate is f32-exact and the float σ/tanh
     see identical inputs in the golden scan and the kernel body.
@@ -202,54 +223,144 @@ def int_gru_gates(m_x, m_h, h, fmt: GruFormats):
     H = h.shape[-1]
     one = 1 << fmt.hid_frac
     step = float(2.0 ** -fmt.acc_frac)
-    r_f = jax.nn.sigmoid((m_x[:, :H] + m_h[:, :H]
-                          ).astype(jnp.float32) * step)
-    r = jnp.round(r_f * one).astype(jnp.int32)
-    u_f = jax.nn.sigmoid((m_x[:, H:2 * H] + m_h[:, H:2 * H]
-                          ).astype(jnp.float32) * step)
-    u = jnp.round(u_f * one).astype(jnp.int32)
+    # r and u share the dequant→σ→requant chain, so the two gates run as
+    # ONE elementwise pass over the [r|u] accumulator block and split
+    # after — value-identical (σ/round are elementwise), but half the op
+    # count, which is what the interpret-mode per-frame cost is made of.
+    ru_f = jax.nn.sigmoid((m[:, :2 * H] + m[:, 3 * H:5 * H]
+                           ).astype(jnp.float32) * step)
+    ru = jnp.round(ru_f * one).astype(jnp.int32)
+    r, u = ru[:, :H], ru[:, H:]
     # candidate: the reset gate (on the Q0.hid grid) scales the hidden
     # pre-activation; the product is formed in f32 (int32 would overflow
-    # r·m_hc) — exact inputs, IEEE-deterministic mul/add.
-    c_pre = (m_x[:, 2 * H:].astype(jnp.float32) * step
-             + (r.astype(jnp.float32) / one)
-             * (m_h[:, 2 * H:].astype(jnp.float32) * step))
+    # r·m_hc) — exact inputs, IEEE-deterministic arithmetic.  The grid
+    # factors 2^-hid and 2^-acc are powers of two, so they commute with
+    # IEEE round-to-nearest and can be folded to the edges: the ONE
+    # rounding in r·m_hc lands identically whether the operands carry
+    # their scale factors or not — bit-identical to the unfolded form,
+    # one fewer multiply per frame.
+    c_pre = (m[:, 2 * H:3 * H].astype(jnp.float32)
+             + r.astype(jnp.float32) * m[:, 5 * H:].astype(jnp.float32)
+             * float(1.0 / one)) * step
     c = jnp.round(jnp.tanh(c_pre) * one).astype(jnp.int32)
     h_new = rshift_round(u * h + (one - u) * c, fmt.hid_frac)
     return sat(h_new, 16)
 
 
-def gru_frame_step(fmt: GruFormats | None, x, h, x_hat, h_hat, m_x, m_h,
-                   w_x, w_h, th_x, th_h):
+# Byte-plane packed dot: exact for contraction dims up to 2^9 (see
+# ``packed_int8_dot``); beyond it the kernels fall back to the int32 dot.
+PACKED_DOT_MAX_K = 512
+
+
+def packed_int8_dot(d, w_f32):
+    """Exact Δ·W as ONE f32 matmul via byte-plane packing of the deltas.
+
+    The int kernel's hot op is ``int32 (B, K) @ int8 (K, N)``.  XLA's
+    integer matmul is far off the f32 MXU/SIMD path, so we run it AS a
+    float matmul — exactly.  Split each delta code into its unsigned low
+    byte and arithmetic high byte, ``d = (d >> 8)·2^8 + (d & 0xFF)``,
+    stack the two planes along the row axis, and contract both against
+    the SAME f32-valued int8 weight image in one dot:
+
+      * deltas are differences of saturated int16 codes, so
+        ``|d| ≤ 2^16``, giving ``d >> 8 ∈ [−2^8, 2^8)`` and
+        ``d & 0xFF ∈ [0, 2^8)``;
+      * every partial product is then ≤ 2^8 · 2^7 = 2^15 in magnitude,
+        and a K-term accumulation is ≤ K · 2^15 ≤ 2^24 for K ≤ 2^9 —
+        inside float32's exact-integer range, so BOTH plane dots are
+        exact integers (``PACKED_DOT_MAX_K`` gates this statically);
+      * the recombination ``(hi_dot << 8) + lo_dot`` is exact int32.
+
+    Args:
+      d: (B, K) int32 delta codes, |d| ≤ 2^16.
+      w_f32: (K, N) float32 holding EXACT int8 weight code values (the
+        kernel converts the int8 image once into VMEM scratch).
+
+    Returns the exact (B, N) int32 product — bit-identical to
+    ``jnp.dot(d, w.astype(int32))``.
+    """
+    rows = d.shape[0]
+    planes = jnp.concatenate([d & 0xFF, d >> 8],
+                             axis=0).astype(jnp.float32)
+    prod = jnp.dot(planes, w_f32,
+                   preferred_element_type=jnp.float32).astype(jnp.int32)
+    return (prod[rows:] << 8) + prod[:rows]
+
+
+def packed_int8_dot_pair(dx, dh, wx_f32, wh_f32):
+    """Both ΔGRU contractions through the packed path with ONE shared
+    recombination.
+
+    Each operand keeps its own plane split and f32 dot (the exactness
+    argument of ``packed_int8_dot`` applies per contraction), but the
+    two plane products concatenate on the OUTPUT axis so a single
+    astype/shift/add recombines ``[Δx·Wx | Δh·Wh]`` at once — the fused
+    (B, 6H) product block the frame step accumulates into.  Bit-
+    identical to two ``packed_int8_dot`` calls side by side; roughly
+    half the recombination ops, which is what interpret mode charges
+    per frame.
+    """
+    rows = dx.shape[0]
+    px = jnp.dot(jnp.concatenate([dx & 0xFF, dx >> 8],
+                                 axis=0).astype(jnp.float32),
+                 wx_f32, preferred_element_type=jnp.float32)
+    ph = jnp.dot(jnp.concatenate([dh & 0xFF, dh >> 8],
+                                 axis=0).astype(jnp.float32),
+                 wh_f32, preferred_element_type=jnp.float32)
+    prod = jnp.concatenate([px, ph], axis=-1).astype(jnp.int32)
+    return (prod[rows:] << 8) + prod[:rows]
+
+
+def gru_frame_step(fmt: GruFormats | None, x, h, x_hat, h_hat, m,
+                   w_x, w_h, th_x, th_h, dot=None):
     """ONE ΔGRU frame — the single source for golden scan AND kernel body.
+
+    ``m`` is the FUSED ``[m_x | m_h]`` accumulator block, (B, 6H): both
+    halves move through align/saturate/gates as ONE array, so the per-
+    frame elementwise chain runs once over the block instead of twice
+    over the halves.  Values are unchanged — every fused op is element-
+    wise (or per-column-constant), so it equals the per-half form bit
+    for bit; callers concatenate/split only at scan boundaries.
 
     ``fmt=None`` is the identity-quant mode: float operands, the exact
     op order of the float sequence kernel (``delta_branch``/``gru_gates``
     + f32 dots) — used by ``backend="pallas-int"`` conformance runs.
     With a ``GruFormats``, everything is integer-code arithmetic.
 
-    Returns ``(h', x̂', ĥ', m_x', m_h', mask_x, mask_h)``.
+    ``dot`` swaps the Δ·W contraction implementation (int mode only):
+    ``None`` is the plain int32 ``jnp.dot`` pair; the packed kernel
+    passes ``packed_int8_dot_pair`` with f32-valued weight images —
+    exact, so the frame step stays the single source of the math either
+    way.  Signature: ``dot(dx, dh, w_x, w_h) -> (B, 6H)``.
+
+    Returns ``(h', x̂', ĥ', m', mask_x, mask_h)``.
     """
     if fmt is None:
+        n = m.shape[-1] // 2
         dx, x_hat, mask_x = delta_branch(x, x_hat, th_x)
         dh, h_hat, mask_h = delta_branch(h, h_hat, th_h)
-        m_x = m_x + jnp.dot(dx, w_x, preferred_element_type=jnp.float32)
-        m_h = m_h + jnp.dot(dh, w_h, preferred_element_type=jnp.float32)
-        h = gru_gates(m_x, m_h, h, h.shape[-1])
-        return h, x_hat, h_hat, m_x, m_h, mask_x, mask_h
+        m = m + jnp.concatenate(
+            [jnp.dot(dx, w_x, preferred_element_type=jnp.float32),
+             jnp.dot(dh, w_h, preferred_element_type=jnp.float32)],
+            axis=-1)
+        h = gru_gates(m[:, :n], m[:, n:], h, h.shape[-1])
+        return h, x_hat, h_hat, m, mask_x, mask_h
 
     x = x.astype(jnp.int32)
     h32 = h.astype(jnp.int32)
     dx, x_hat, mask_x = int_delta_branch(x, x_hat.astype(jnp.int32), th_x)
     dh, h_hat, mask_h = int_delta_branch(h32, h_hat.astype(jnp.int32), th_h)
-    px = jnp.dot(dx, w_x.astype(jnp.int32),
-                 preferred_element_type=jnp.int32)
-    ph = jnp.dot(dh, w_h.astype(jnp.int32),
-                 preferred_element_type=jnp.int32)
-    m_x = sat(m_x + align(px, fmt.shift_x), fmt.acc_bits)
-    m_h = sat(m_h + align(ph, fmt.shift_h), fmt.acc_bits)
-    h_new = int_gru_gates(m_x, m_h, h32, fmt)
-    return h_new, x_hat, h_hat, m_x, m_h, mask_x, mask_h
+    if dot is None:
+        p = jnp.concatenate(
+            [jnp.dot(dx, w_x.astype(jnp.int32),
+                     preferred_element_type=jnp.int32),
+             jnp.dot(dh, w_h.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)], axis=-1)
+    else:
+        p = dot(dx, dh, w_x, w_h)
+    m = sat(m + align_pair(p, fmt.shift_x, fmt.shift_h), fmt.acc_bits)
+    h_new = int_gru_gates(m, h32, fmt)
+    return h_new, x_hat, h_hat, m, mask_x, mask_h
 
 
 # VMEM budget for the sequence-resident int kernel (weights must stay
@@ -260,13 +371,21 @@ _INT_SEQ_KERNEL_VMEM_BUDGET_BYTES = 8 * 2 ** 20
 
 def int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
                  threshold: float, state=None, *, backend: str = "xla",
-                 block_b: int | None = None, interpret: bool | None = None,
+                 block_b: int | None = None, block_t: int | None = None,
+                 packed: bool | None = None, interpret: bool | None = None,
                  vmem_budget_bytes: int = _INT_SEQ_KERNEL_VMEM_BUDGET_BYTES):
     """Run the integer ΔGRU over codes ``xs_codes`` (T, B, I) int16.
 
     ``backend="xla"`` is the golden ``lax.scan``; ``"pallas"`` the fused
     sequence-resident kernel — bit-identical by single-source math.
     Returns ``(hs_codes (T,B,H) int16, final state, nz_dx, nz_dh)``.
+
+    ``block_b``/``block_t``/``packed`` forward to the kernel's tiling /
+    packed-dot knobs (numerics-invariant); left ``None``, the dispatch
+    consults the ``kernels.autotune`` cache for this (shape, dtype,
+    threshold-bucket, platform) and falls back to the static defaults on
+    a cold cache.  ``interpret`` forwards to the Pallas platform
+    resolution; ``vmem_budget_bytes`` is the resident-weight ceiling.
 
     Unlike the float ``delta_gru_scan``, there is no block-sparse
     fallback for weights exceeding the VMEM budget (no int image of
@@ -287,28 +406,41 @@ def int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
                 f"kernel's VMEM budget ({vmem_budget_bytes} B) and the "
                 "blocked int fallback does not exist — use backend='xla' "
                 "or the float path's block-sparse composition")
+        from repro.kernels import autotune
         from repro.kernels.delta_gru_seq import delta_gru_seq_int
+        if block_b is None or block_t is None:
+            tuned = autotune.resolve("delta_gru_seq_int", (B, I, H), "int8",
+                                     threshold, interpret=interpret,
+                                     B=B, T=T)
+            block_b = block_b if block_b is not None else tuned.get("block_b")
+            block_t = block_t if block_t is not None else tuned.get("block_t")
         th = jnp.asarray([[th_x, th_h]], jnp.int32)
         return delta_gru_seq_int(xs_codes, state.h, state.x_hat,
                                  state.h_hat, state.m_x, state.m_h,
                                  w.w_x, w.w_h, th, fmt=fmt,
-                                 block_b=block_b, interpret=interpret)
+                                 block_b=block_b, block_t=block_t,
+                                 packed=packed, interpret=interpret)
     if backend != "xla":
         raise ValueError(f"unknown int ΔGRU backend: {backend!r}")
 
     from repro.core.delta_gru import DeltaState
 
+    # The frame step carries the fused [m_x | m_h] block; the DeltaState
+    # halves concatenate once before the scan and split once after.
     def body(carry, x):
-        h, xh, hh, mx, mh, mask_x, mask_h = gru_frame_step(
-            fmt, x, carry.h, carry.x_hat, carry.h_hat, carry.m_x,
-            carry.m_h, w.w_x, w.w_h, th_x, th_h)
-        new = DeltaState(h=h.astype(jnp.int16),
-                         x_hat=xh.astype(jnp.int16),
-                         h_hat=hh.astype(jnp.int16), m_x=mx, m_h=mh)
-        return new, (new.h, jnp.sum(mask_x, -1).astype(jnp.int32),
-                     jnp.sum(mask_h, -1).astype(jnp.int32))
+        h, xh, hh, m = carry
+        h, xh, hh, m, mask_x, mask_h = gru_frame_step(
+            fmt, x, h, xh, hh, m, w.w_x, w.w_h, th_x, th_h)
+        h16 = h.astype(jnp.int16)
+        return ((h16, xh.astype(jnp.int16), hh.astype(jnp.int16), m),
+                (h16, jnp.sum(mask_x, -1).astype(jnp.int32),
+                 jnp.sum(mask_h, -1).astype(jnp.int32)))
 
-    final, (hs, nz_dx, nz_dh) = jax.lax.scan(body, state, xs_codes)
+    m0 = jnp.concatenate([state.m_x, state.m_h], axis=-1)
+    (h, xh, hh, m), (hs, nz_dx, nz_dh) = jax.lax.scan(
+        body, (state.h, state.x_hat, state.h_hat, m0), xs_codes)
+    final = DeltaState(h=h, x_hat=xh, h_hat=hh,
+                       m_x=m[:, :3 * H], m_h=m[:, 3 * H:])
     return hs, final, nz_dx, nz_dh
 
 
@@ -436,18 +568,33 @@ def fex_state_from_codes(codes, fmt: FexFormats):
 
 def int_fex_scan(audio_codes, coef_codes, state_codes, fmt: FexFormats, *,
                  frame_shift: int = 128, backend: str = "xla",
-                 block_b: int | None = None, interpret: bool | None = None):
+                 block_b: int | None = None, unroll: int | None = None,
+                 interpret: bool | None = None):
     """Integer FEx over a chunk of audio codes (B, T) int16 Q0.11.
 
     Golden ``backend="xla"`` nested scan vs ``"pallas"`` sequence-resident
     kernel — bit-identical (single-source per-sample math).  Returns
     (feature codes (B, F, C) int16, new state codes (B, 5, C) int16).
+    ``block_b``/``unroll`` are the kernel's numerics-invariant tiling
+    knobs; left ``None``, the dispatch consults the ``kernels.autotune``
+    cache (static defaults on a cold cache).
     """
     if backend == "pallas":
+        from repro.kernels import autotune
         from repro.kernels.iir_fex import batched_iir_fex_int
+        if block_b is None or unroll is None:
+            B = audio_codes.shape[0]
+            C = coef_codes.shape[1]
+            tuned = autotune.resolve("batched_iir_fex_int",
+                                     (B, C, frame_shift), "int16", 0.0,
+                                     interpret=interpret, B=B,
+                                     frame_shift=frame_shift)
+            block_b = block_b if block_b is not None else tuned.get("block_b")
+            unroll = unroll if unroll is not None else tuned.get("unroll")
         return batched_iir_fex_int(audio_codes, coef_codes, state_codes,
                                    fmt=fmt, frame_shift=frame_shift,
-                                   block_b=block_b, interpret=interpret)
+                                   block_b=block_b, unroll=unroll,
+                                   interpret=interpret)
     if backend != "xla":
         raise ValueError(f"unknown int FEx backend: {backend!r}")
     return _int_fex_scan_xla(audio_codes, coef_codes, state_codes, fmt,

@@ -139,6 +139,7 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
              frame_shift: int = FRAME_SHIFT, env_alpha: float = 0.0606,
              log_eps: float = 2.0 ** -11, compress: bool = True,
              backend: str = "xla", block_b: int | None = None,
+             unroll: int | None = None,
              interpret: bool | None = None, b_bits: int = 12,
              a_bits: int = 8, coef_formats=None) -> tuple[Array, FExState]:
     """Run the FEx over a chunk of audio, carrying explicit state.
@@ -162,6 +163,10 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
         coefficient codes; returns grid-exact floats, bit-true against
         ``core.fixed_point.int_fex_scan``).
       block_b: batch-tile override for the Pallas kernels.
+      unroll: per-sample-loop unroll override for the Pallas kernels
+        (must divide ``frame_shift``; bit-exact at any legal value).
+        Like ``block_b``, ``None`` consults the ``kernels.autotune``
+        cache and otherwise keeps the static default.
       interpret: force the Pallas interpreter on/off (None = platform
         default).
       b_bits / a_bits: coefficient word widths for the "pallas-int"
@@ -185,10 +190,17 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
         state = init_fex_state(B, C)
     buf = _pack_state(state)
     if backend == "pallas":
+        if block_b is None or unroll is None:
+            from repro.kernels import autotune
+            tuned = autotune.resolve(
+                "batched_iir_fex", (B, C, frame_shift), "float32", 0.0,
+                interpret=interpret, B=B, frame_shift=frame_shift)
+            block_b = block_b if block_b is not None else tuned.get("block_b")
+            unroll = unroll if unroll is not None else tuned.get("unroll")
         feats, buf = batched_iir_fex(
             audio, coef, buf, frame_shift=frame_shift, env_alpha=env_alpha,
             log_eps=log_eps, compress=compress, block_b=block_b,
-            interpret=interpret)
+            unroll=unroll, interpret=interpret)
     elif backend == "pallas-int":
         # The integer-code datapath (DESIGN.md §9): quantize the (concrete)
         # coefficient bank onto its mixed-precision grids, run the int
@@ -221,7 +233,7 @@ def fex_scan(audio: Array, coef: Array, state: FExState | None = None, *,
         feats_c, codes = fp.int_fex_scan(
             audio_codes, coef_codes, fp.fex_state_to_codes(buf, ffmt),
             ffmt, frame_shift=frame_shift, backend="pallas",
-            block_b=block_b, interpret=interpret)
+            block_b=block_b, unroll=unroll, interpret=interpret)
         feats = fp.from_code(feats_c, ffmt.feat_frac)
         buf = fp.fex_state_from_codes(codes, ffmt)
     elif backend == "xla":

@@ -7,15 +7,18 @@ so a skipped delta skips the MAC **and** the weight read, and nothing
 round-trips off-chip between frames.  This kernel is the TPU image of that
 state-resident loop (DESIGN.md §3):
 
-  * grid = (n_batch_tiles, T) — the time axis is the innermost grid
-    dimension, executed sequentially on one core;
+  * grid = (n_batch_tiles, T / block_t) — the time axis is the innermost
+    grid dimension, executed sequentially on one core; each grid step
+    advances ``block_t`` frames through an in-kernel ``fori_loop`` (the
+    recurrence order is unchanged — the tile only amortizes per-step grid
+    overhead and batches the x/h HBM transfers, an autotunable knob);
   * the five state buffers (h, x̂, ĥ, M_x, M_h) are *output* refs whose
     index map is constant along t, so Pallas keeps them revisited in VMEM
-    across all T grid steps (the accumulator pattern) and flushes them to
+    across all grid steps (the accumulator pattern) and flushes them to
     HBM exactly once, as the final state;
   * the weights' index map is constant along the whole grid, so W_x/W_h
     are DMA'd HBM→VMEM once and stay resident — the SRAM image;
-  * only the per-frame hidden vector and the per-frame non-zero-delta
+  * only the per-frame hidden vectors and the per-frame non-zero-delta
     counts stream back to HBM (block index advancing with t).
 
 One kernel launch per sequence instead of T launches, zero HBM traffic
@@ -23,6 +26,15 @@ for state, and the op-count statistics the energy model needs are
 accumulated on-device.  Weights that do NOT fit VMEM take the
 block-sparse path instead (``core.delta_gru`` composes ``delta_matvec``'s
 scalar-prefetch block mask per step — see DESIGN.md §2/§3).
+
+The int variant additionally supports the PACKED datapath (DESIGN.md
+§12): the int8 weight image is converted ONCE (at grid step 0) into an
+f32-valued copy held in persistent VMEM scratch, and every Δ·W
+contraction runs as ``fixed_point.packed_int8_dot_pair`` — f32 matmuls
+over byte-plane-split deltas, exact by construction for contraction dims
+≤ ``fixed_point.PACKED_DOT_MAX_K``.  That keeps the 4×-denser int8
+operands on the float matmul path instead of XLA's slow integer dot,
+which is what made the int kernel 0.53× the float kernel's speed.
 """
 from __future__ import annotations
 
@@ -31,7 +43,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import validate_block_b, validate_divisor
 from repro.kernels.gru_math import delta_branch, gru_gates
 from repro.kernels.platform import resolve_interpret
 
@@ -39,7 +53,8 @@ from repro.kernels.platform import resolve_interpret
 def _kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
             wx_ref, wh_ref, th_ref,
             hs_ref, nzx_ref, nzh_ref,
-            h_ref, xh_ref, hh_ref, mx_ref, mh_ref, *, hidden: int):
+            h_ref, xh_ref, hh_ref, mx_ref, mh_ref, *, hidden: int,
+            block_t: int):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -53,32 +68,38 @@ def _kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
         mh_ref[...] = mh0_ref[...]
 
     th = th_ref[0, 0]
-    x = x_ref[0]
-    h = h_ref[...]
 
-    dx, new_xh, mx_mask = delta_branch(x, xh_ref[...], th)
-    xh_ref[...] = new_xh
-    dh, new_hh, mh_mask = delta_branch(h, hh_ref[...], th)
-    hh_ref[...] = new_hh
+    def step(k, carry):
+        x = x_ref[k]
+        h = h_ref[...]
 
-    m_x = mx_ref[...] + jnp.dot(dx, wx_ref[...],
-                                preferred_element_type=jnp.float32)
-    m_h = mh_ref[...] + jnp.dot(dh, wh_ref[...],
-                                preferred_element_type=jnp.float32)
-    mx_ref[...] = m_x
-    mh_ref[...] = m_h
+        dx, new_xh, mx_mask = delta_branch(x, xh_ref[...], th)
+        xh_ref[...] = new_xh
+        dh, new_hh, mh_mask = delta_branch(h, hh_ref[...], th)
+        hh_ref[...] = new_hh
 
-    h_new = gru_gates(m_x, m_h, h, hidden)
+        m_x = mx_ref[...] + jnp.dot(dx, wx_ref[...],
+                                    preferred_element_type=jnp.float32)
+        m_h = mh_ref[...] + jnp.dot(dh, wh_ref[...],
+                                    preferred_element_type=jnp.float32)
+        mx_ref[...] = m_x
+        mh_ref[...] = m_h
 
-    h_ref[...] = h_new
-    hs_ref[0] = h_new
-    nzx_ref[0, :] = jnp.sum(mx_mask, axis=-1).astype(jnp.int32)
-    nzh_ref[0, :] = jnp.sum(mh_mask, axis=-1).astype(jnp.int32)
+        h_new = gru_gates(m_x, m_h, h, hidden)
+
+        h_ref[...] = h_new
+        hs_ref[k] = h_new
+        nzx_ref[k, :] = jnp.sum(mx_mask, axis=-1).astype(jnp.int32)
+        nzh_ref[k, :] = jnp.sum(mh_mask, axis=-1).astype(jnp.int32)
+        return carry
+
+    jax.lax.fori_loop(0, block_t, step, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "block_t",
+                                             "interpret"))
 def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
-                  *, block_b: int | None = None,
+                  *, block_b: int | None = None, block_t: int | None = None,
                   interpret: bool | None = None):
     """Run a ΔGRU over a whole sequence in ONE kernel invocation.
 
@@ -88,6 +109,9 @@ def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
         ``core.delta_gru.DeltaState``; m_x0 carries the bias).
       w_x: (I, 3H); w_h: (H, 3H); threshold: scalar Δ_TH.
       block_b: batch-tile size (must divide B; default B, one tile).
+      block_t: frames per grid step (must divide T; default 1).  The
+        frames still execute strictly sequentially inside the tile —
+        bit-identical output, fewer grid steps.
 
     Returns ``(hs, (h, x_hat, h_hat, m_x, m_h), nz_dx, nz_dh)`` with
     hs (T, B, H) and nz_* (T, B) int32 per-frame transmit counts.
@@ -102,18 +126,18 @@ def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
     assert m_x0.shape == m_h0.shape == (B, 3 * H), (m_x0.shape, m_h0.shape)
     assert w_x.shape == (I, 3 * H), (w_x.shape, (I, 3 * H))
     assert w_h.shape == (H, 3 * H), (w_h.shape, (H, 3 * H))
-    bb = B if block_b is None else block_b
-    assert B % bb == 0, (B, bb)
+    bb = validate_block_b("delta_gru_seq", B, block_b)
+    bt = validate_divisor("delta_gru_seq", "block_t", block_t, "T", T)
     n_b = B // bb
 
     f32 = lambda a: a.astype(jnp.float32)
     th = jnp.full((1, 1), threshold, jnp.float32)
-    kernel = functools.partial(_kernel, hidden=H)
+    kernel = functools.partial(_kernel, hidden=H, block_t=bt)
 
     state_spec = lambda d: pl.BlockSpec((bb, d), lambda b, t: (b, 0))
     fixed_spec = lambda s: pl.BlockSpec(s, lambda b, t: tuple(
         0 for _ in s))
-    seq_spec = lambda d: pl.BlockSpec((1, bb, d), lambda b, t: (t, b, 0))
+    seq_spec = lambda d: pl.BlockSpec((bt, bb, d), lambda b, t: (t, b, 0))
 
     out_shapes = (
         jax.ShapeDtypeStruct((T, B, H), jnp.float32),   # hs
@@ -127,14 +151,14 @@ def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
     )
     out_specs = (
         seq_spec(H),
-        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
-        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
+        pl.BlockSpec((bt, bb), lambda b, t: (t, b)),
+        pl.BlockSpec((bt, bb), lambda b, t: (t, b)),
         state_spec(H), state_spec(I), state_spec(H),
         state_spec(3 * H), state_spec(3 * H),
     )
     hs, nz_dx, nz_dh, h, x_hat, h_hat, m_x, m_h = pl.pallas_call(
         kernel,
-        grid=(n_b, T),
+        grid=(n_b, T // bt),
         in_specs=[
             seq_spec(I),
             state_spec(H), state_spec(I), state_spec(H),
@@ -154,8 +178,11 @@ def delta_gru_seq(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, threshold,
 def _int_kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
                 wx_ref, wh_ref, th_ref,
                 hs_ref, nzx_ref, nzh_ref,
-                h_ref, xh_ref, hh_ref, mx_ref, mh_ref, *, fmt):
-    from repro.core.fixed_point import gru_frame_step
+                h_ref, xh_ref, hh_ref, mx_ref, mh_ref,
+                wxf_ref=None, whf_ref=None, *, fmt, block_t: int,
+                packed: bool):
+    from repro.core.fixed_point import (gru_frame_step,
+                                        packed_int8_dot_pair)
 
     t = pl.program_id(1)
 
@@ -166,31 +193,65 @@ def _int_kernel(x_ref, h0_ref, xh0_ref, hh0_ref, mx0_ref, mh0_ref,
         hh_ref[...] = hh0_ref[...]
         mx_ref[...] = mx0_ref[...]
         mh_ref[...] = mh0_ref[...]
+        if packed:
+            # One-time weight conversion: the int8 image becomes an
+            # f32-valued copy in persistent VMEM scratch, so every grid
+            # step's packed dot reads float operands (no per-frame cast).
+            wxf_ref[...] = wx_ref[...].astype(jnp.float32)
+            whf_ref[...] = wh_ref[...].astype(jnp.float32)
 
-    h, xh, hh, mx, mh, mask_x, mask_h = gru_frame_step(
-        fmt, x_ref[0], h_ref[...], xh_ref[...], hh_ref[...],
-        mx_ref[...], mh_ref[...], wx_ref[...], wh_ref[...],
-        th_ref[0, 0], th_ref[0, 1])
+    if packed:
+        dot, w_x, w_h = packed_int8_dot_pair, wxf_ref[...], whf_ref[...]
+    else:
+        dot, w_x, w_h = None, wx_ref[...], wh_ref[...]
+    th_x, th_h = th_ref[0, 0], th_ref[0, 1]
 
+    # State rides the fori_loop CARRY, not the refs: the refs are read
+    # once per grid step and written back once after the inner loop.
+    # Interpret mode charges every ref read/write as a real op, so at
+    # block_t=4 this removes ~12 ops per frame versus the read-compute-
+    # write-per-frame form — numerics untouched (same values, same
+    # order; the int-mode casts in gru_frame_step become no-ops because
+    # the carry already holds int32).  The two accumulator halves ride
+    # the carry FUSED as [m_x | m_h] — concatenated once here, split
+    # once at writeback — matching the frame step's fused block.
+    wide = (jnp.float32 if fmt is None else jnp.int32)
+    half = mx_ref.shape[-1]
+
+    def step(k, carry):
+        h, xh, hh, m = carry
+        h, xh, hh, m, mask_x, mask_h = gru_frame_step(
+            fmt, x_ref[k], h, xh, hh, m, w_x, w_h,
+            th_x, th_h, dot=dot)
+        hs_ref[k] = h.astype(hs_ref.dtype)
+        nzx_ref[k, :] = jnp.sum(mask_x, axis=-1).astype(jnp.int32)
+        nzh_ref[k, :] = jnp.sum(mask_h, axis=-1).astype(jnp.int32)
+        return h, xh, hh, m
+
+    h, xh, hh, m = jax.lax.fori_loop(
+        0, block_t, step,
+        (h_ref[...].astype(wide), xh_ref[...].astype(wide),
+         hh_ref[...].astype(wide),
+         jnp.concatenate([mx_ref[...], mh_ref[...]], axis=-1)))
     h_ref[...] = h.astype(h_ref.dtype)
     xh_ref[...] = xh.astype(xh_ref.dtype)
     hh_ref[...] = hh.astype(hh_ref.dtype)
-    mx_ref[...] = mx.astype(mx_ref.dtype)
-    mh_ref[...] = mh.astype(mh_ref.dtype)
-    hs_ref[0] = h.astype(hs_ref.dtype)
-    nzx_ref[0, :] = jnp.sum(mask_x, axis=-1).astype(jnp.int32)
-    nzh_ref[0, :] = jnp.sum(mask_h, axis=-1).astype(jnp.int32)
+    mx_ref[...] = m[:, :half].astype(mx_ref.dtype)
+    mh_ref[...] = m[:, half:].astype(mh_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("fmt", "block_b", "block_t",
+                                             "packed", "interpret"))
 def delta_gru_seq_int(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th,
                       *, fmt=None, block_b: int | None = None,
+                      block_t: int | None = None,
+                      packed: bool | None = None,
                       interpret: bool | None = None):
     """The int8-weight/int16-state variant of the fused sequence kernel.
 
     Same sequence-resident structure as ``delta_gru_seq`` (grid =
-    (n_batch_tiles, T), state buffers VMEM-revisited, weights resident),
-    but the datapath is ``core.fixed_point.gru_frame_step``:
+    (n_batch_tiles, T / block_t), state buffers VMEM-revisited, weights
+    resident), but the datapath is ``core.fixed_point.gru_frame_step``:
 
       * ``fmt`` a ``GruFormats`` — integer-code operands: xs/h/x̂/ĥ are
         int16 codes, m_x/m_h int32 on the 24-bit saturating accumulator
@@ -203,6 +264,14 @@ def delta_gru_seq_int(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th,
         This isolates the int kernel's plumbing (dispatch, block specs,
         state carry) from quantization in the differential fuzz suite.
 
+    ``block_b``/``block_t`` tile the batch/time grid axes (numerics-
+    invariant, autotunable).  ``packed`` selects the byte-plane-packed
+    Δ·W datapath (``fixed_point.packed_int8_dot_pair`` against a one-time
+    f32 weight image in VMEM scratch — exact, so still bit-identical to
+    the golden model); ``None`` auto-enables it whenever the integer
+    format is active and both contraction dims fit the exactness bound
+    ``fixed_point.PACKED_DOT_MAX_K``.
+
     Returns ``(hs, (h, x̂, ĥ, m_x, m_h), nz_dx, nz_dh)``.
     """
     T, B, I = xs.shape
@@ -213,14 +282,32 @@ def delta_gru_seq_int(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th,
     assert w_x.shape == (I, 3 * H), (w_x.shape, (I, 3 * H))
     assert w_h.shape == (H, 3 * H), (w_h.shape, (H, 3 * H))
     assert th.shape == (1, 2), th.shape
-    bb = B if block_b is None else block_b
-    assert B % bb == 0, (B, bb)
+    bb = validate_block_b("delta_gru_seq_int", B, block_b)
+    bt = validate_divisor("delta_gru_seq_int", "block_t", block_t, "T", T)
+    from repro.core.fixed_point import PACKED_DOT_MAX_K
+    if packed is None:
+        packed = fmt is not None and max(I, H) <= PACKED_DOT_MAX_K
+    elif packed:
+        if fmt is None:
+            raise ValueError("delta_gru_seq_int: packed=True requires an "
+                             "integer GruFormats (fmt is None — the "
+                             "identity-quant mode has no int8 image)")
+        if max(I, H) > PACKED_DOT_MAX_K:
+            raise ValueError(
+                f"delta_gru_seq_int: packed=True is only exact for "
+                f"contraction dims <= {PACKED_DOT_MAX_K}, got I={I}, H={H}")
 
-    kernel = functools.partial(_int_kernel, fmt=fmt)
+    if fmt is not None:
+        # Widen the code stream once at dispatch, not once per frame:
+        # the frame step computes on int32, so feeding int32 blocks
+        # makes its per-frame x cast a no-op (values unchanged).
+        xs = xs.astype(jnp.int32)
+    kernel = functools.partial(_int_kernel, fmt=fmt, block_t=bt,
+                               packed=packed)
     state_spec = lambda d: pl.BlockSpec((bb, d), lambda b, t: (b, 0))
     fixed_spec = lambda s: pl.BlockSpec(s, lambda b, t: tuple(
         0 for _ in s))
-    seq_spec = lambda d: pl.BlockSpec((1, bb, d), lambda b, t: (t, b, 0))
+    seq_spec = lambda d: pl.BlockSpec((bt, bb, d), lambda b, t: (t, b, 0))
 
     out_shapes = (
         jax.ShapeDtypeStruct((T, B, H), h0.dtype),      # hs
@@ -234,14 +321,17 @@ def delta_gru_seq_int(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th,
     )
     out_specs = (
         seq_spec(H),
-        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
-        pl.BlockSpec((1, bb), lambda b, t: (t, b)),
+        pl.BlockSpec((bt, bb), lambda b, t: (t, b)),
+        pl.BlockSpec((bt, bb), lambda b, t: (t, b)),
         state_spec(H), state_spec(I), state_spec(H),
         state_spec(3 * H), state_spec(3 * H),
     )
+    scratch_shapes = ([pltpu.VMEM((I, 3 * H), jnp.float32),
+                       pltpu.VMEM((H, 3 * H), jnp.float32)]
+                      if packed else [])
     hs, nz_dx, nz_dh, h, x_hat, h_hat, m_x, m_h = pl.pallas_call(
         kernel,
-        grid=(B // bb, T),
+        grid=(B // bb, T // bt),
         in_specs=[
             seq_spec(I),
             state_spec(H), state_spec(I), state_spec(H),
@@ -251,6 +341,7 @@ def delta_gru_seq_int(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th,
         ],
         out_specs=out_specs,
         out_shape=out_shapes,
+        scratch_shapes=scratch_shapes,
         interpret=resolve_interpret(interpret),
     )(xs, h0, x_hat0, h_hat0, m_x0, m_h0, w_x, w_h, th)
     from repro.core.delta_gru import DeltaState

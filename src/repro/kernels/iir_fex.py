@@ -13,6 +13,11 @@ TPU-native image of that 0.084 mm² FEx block:
     along the frame axis, so Pallas keeps the revisited block VMEM-resident
     across all frame steps (the accumulator pattern) and flushes it to HBM
     exactly once, as the final state;
+  * the *initial* state lives in ``ANY`` memory and is DMA'd into a
+    two-slot VMEM scratch buffer by the kernel itself: while batch tile b
+    filters its frames, the DMA engine prefetches tile b+1's (bb, 5, C)
+    carry (double buffering, DESIGN.md §12) — the revisited-block load
+    never stalls the datapath on a tile switch;
   * explicit ``state``-in / ``state``-out operands make chunk boundaries
     bit-invisible — the same carry contract as ``delta_gru_seq``;
   * log₂ compression, normalization and 12-bit quantization run in-kernel,
@@ -25,6 +30,11 @@ State layout (B, 5, C) float32, rows = [s0_1, s0_2, s1_1, s1_2, env]
 math: the XLA ``lax.scan`` reference path in ``frontend/fex.py`` executes
 the *same* functions in the *same* order, so the two backends are
 float-exact against each other (asserted in tests/test_fex_stream.py).
+
+The per-sample loop takes an ``unroll`` factor (forwarded to
+``lax.fori_loop``): the recurrence order is untouched — identical ops,
+identical results — but the interpreter/compiler retires ``unroll``
+samples per loop iteration, an autotunable knob worth ~1.4× on CPU.
 """
 from __future__ import annotations
 
@@ -33,7 +43,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import validate_block_b, validate_divisor
 from repro.kernels.platform import resolve_interpret
 
 STATE_ROWS = 5      # [s0_1, s0_2, s1_1, s1_2, env]
@@ -79,17 +91,41 @@ def compress_env(env, log_eps):
                     -1.0, 1.0 - _FEAT_STEP)
 
 
-def _kernel(x_ref, coef_ref, s0_ref, feat_ref, state_ref, *,
-            frame_shift: int, env_alpha: float, log_eps: float,
-            compress: bool):
+def _state_pipeline(s0_hbm, state_ref, s0_buf, s0_sem, *, block_b, n_b):
+    """Double-buffered initial-state load, shared by both kernel variants.
+
+    Called once per grid step; only acts at f == 0 (a tile switch).  Tile
+    b's (bb, 5, C) carry is DMA'd from ``ANY`` memory into VMEM slot
+    b % 2; before waiting on it, the NEXT tile's copy into the other slot
+    is started, so it lands while tile b's ``frame_shift``-sample loops
+    run — compute hides the load.
+    """
+    b = pl.program_id(0)
     f = pl.program_id(1)
+
+    def tile_copy(tile, slot):
+        return pltpu.make_async_copy(
+            s0_hbm.at[pl.ds(tile * block_b, block_b)],
+            s0_buf.at[slot], s0_sem.at[slot])
+
+    @pl.when((b == 0) & (f == 0))
+    def _warmup():
+        tile_copy(0, 0).start()
 
     @pl.when(f == 0)
     def _load_state():
-        # Fresh batch tile: seed the resident state from the caller's
-        # carry (once per stream chunk, not per frame).
-        state_ref[...] = s0_ref[...]
+        @pl.when(b + 1 < n_b)
+        def _prefetch_next():
+            tile_copy(b + 1, (b + 1) % 2).start()
+        tile_copy(b, b % 2).wait()
+        state_ref[...] = s0_buf[b % 2]
 
+
+def _kernel(x_ref, coef_ref, s0_hbm, feat_ref, state_ref, s0_buf, s0_sem, *,
+            frame_shift: int, env_alpha: float, log_eps: float,
+            compress: bool, unroll: int, block_b: int, n_b: int):
+    _state_pipeline(s0_hbm, state_ref, s0_buf, s0_sem,
+                    block_b=block_b, n_b=n_b)
     coef = coef_ref[...]
 
     def step(t, carry):
@@ -97,19 +133,19 @@ def _kernel(x_ref, coef_ref, s0_ref, feat_ref, state_ref, *,
                                          coef, env_alpha)
         return carry
 
-    jax.lax.fori_loop(0, frame_shift, step, 0)
+    jax.lax.fori_loop(0, frame_shift, step, 0, unroll=unroll)
     env = state_ref[:, STATE_ROWS - 1]
     feat_ref[...] = (compress_env(env, log_eps) if compress
                      else env)[:, None, :]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "frame_shift", "env_alpha", "log_eps", "compress", "block_b",
+    "frame_shift", "env_alpha", "log_eps", "compress", "block_b", "unroll",
     "interpret"))
 def batched_iir_fex(x: jax.Array, coef: jax.Array, state: jax.Array, *,
                     frame_shift: int = 128, env_alpha: float = 0.0606,
                     log_eps: float = 2.0 ** -11, compress: bool = True,
-                    block_b: int | None = None,
+                    block_b: int | None = None, unroll: int | None = None,
                     interpret: bool | None = None):
     """Run the full FEx over a chunk of raw audio in ONE kernel invocation.
 
@@ -122,6 +158,8 @@ def batched_iir_fex(x: jax.Array, coef: jax.Array, state: jax.Array, *,
       compress: apply in-kernel log₂ + 12-bit quantization (the deployed
              datapath); False emits raw pre-log envelopes (oracle tests).
       block_b: batch-tile size (must divide B; default B — one tile).
+      unroll: per-sample loop unroll factor (must divide ``frame_shift``;
+             default 1).  Identical math in identical order — bit-exact.
 
     Returns (features (B, T // frame_shift, C), new state (B, 5, C)).
     Feeding ``[a | b]`` through two calls with the state carried equals
@@ -137,19 +175,24 @@ def batched_iir_fex(x: jax.Array, coef: jax.Array, state: jax.Array, *,
         return (jnp.zeros((B, 0, C), jnp.float32),
                 state.astype(jnp.float32))
     x = x[:, :n_frames * frame_shift].astype(jnp.float32)
-    bb = B if block_b is None else block_b
-    assert B % bb == 0, (B, bb)
+    bb = validate_block_b("batched_iir_fex", B, block_b)
+    ur = validate_divisor("batched_iir_fex", "unroll", unroll,
+                          "frame_shift", frame_shift)
+    n_b = B // bb
 
     kernel = functools.partial(_kernel, frame_shift=frame_shift,
                                env_alpha=env_alpha, log_eps=log_eps,
-                               compress=compress)
+                               compress=compress, unroll=ur,
+                               block_b=bb, n_b=n_b)
     feats, state_out = pl.pallas_call(
         kernel,
-        grid=(B // bb, n_frames),
+        grid=(n_b, n_frames),
         in_specs=[
             pl.BlockSpec((bb, frame_shift), lambda b, f: (b, f)),
             pl.BlockSpec((6, C), lambda b, f: (0, 0)),
-            pl.BlockSpec((bb, STATE_ROWS, C), lambda b, f: (b, 0, 0)),
+            # Whole initial-state array, unblocked: the kernel DMAs each
+            # tile into the double-buffer scratch itself (_state_pipeline).
+            pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=(
             pl.BlockSpec((bb, 1, C), lambda b, f: (b, f, 0)),
@@ -161,22 +204,23 @@ def batched_iir_fex(x: jax.Array, coef: jax.Array, state: jax.Array, *,
             jax.ShapeDtypeStruct((B, n_frames, C), jnp.float32),
             jax.ShapeDtypeStruct((B, STATE_ROWS, C), jnp.float32),
         ),
+        scratch_shapes=[
+            pltpu.VMEM((2, bb, STATE_ROWS, C), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
         interpret=resolve_interpret(interpret),
     )(x, coef.astype(jnp.float32), state.astype(jnp.float32))
     return feats, state_out
 
 
 # --------------------------------------------------------------- int variant
-def _int_kernel(x_ref, coef_ref, s0_ref, feat_ref, state_ref, *,
-                frame_shift: int, fmt):
+def _int_kernel(x_ref, coef_ref, s0_hbm, feat_ref, state_ref,
+                s0_buf, s0_sem, *, frame_shift: int, fmt, unroll: int,
+                block_b: int, n_b: int):
     from repro.core.fixed_point import int_compress_env, int_fex_sample_step
 
-    f = pl.program_id(1)
-
-    @pl.when(f == 0)
-    def _load_state():
-        state_ref[...] = s0_ref[...]
-
+    _state_pipeline(s0_hbm, state_ref, s0_buf, s0_sem,
+                    block_b=block_b, n_b=n_b)
     coef = coef_ref[...]
 
     def step(t, carry):
@@ -185,29 +229,33 @@ def _int_kernel(x_ref, coef_ref, s0_ref, feat_ref, state_ref, *,
             coef, fmt).astype(state_ref.dtype)
         return carry
 
-    jax.lax.fori_loop(0, frame_shift, step, 0)
+    jax.lax.fori_loop(0, frame_shift, step, 0, unroll=unroll)
     env = state_ref[:, STATE_ROWS - 1].astype(jnp.int32)
     feat_ref[...] = int_compress_env(env, fmt).astype(
         feat_ref.dtype)[:, None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "frame_shift",
-                                             "block_b", "interpret"))
+                                             "block_b", "unroll",
+                                             "interpret"))
 def batched_iir_fex_int(x: jax.Array, coef: jax.Array, state: jax.Array, *,
                         fmt, frame_shift: int = 128,
                         block_b: int | None = None,
+                        unroll: int | None = None,
                         interpret: bool | None = None):
     """The integer-code variant of the sequence-resident FEx kernel.
 
     Same structure as ``batched_iir_fex`` (grid = (batch_tiles, frames),
-    (B, 5, C) state VMEM-revisited, in-kernel compression), but the
-    per-sample math is ``core.fixed_point.int_fex_sample_step`` /
-    ``int_compress_env`` on integer codes — bit-identical to the golden
+    (B, 5, C) state VMEM-revisited with the double-buffered initial-state
+    prefetch, in-kernel compression), but the per-sample math is
+    ``core.fixed_point.int_fex_sample_step`` / ``int_compress_env`` on
+    integer codes — bit-identical to the golden
     ``fixed_point.int_fex_scan`` nested scan (single-source math).
 
     x: (B, T) int16 Q0.11 audio codes; coef: (6, C) int32 coefficient
     codes (``fixed_point.quantize_fex``); state: (B, 5, C) int16
-    register codes; ``fmt``: the static ``FexFormats``.
+    register codes; ``fmt``: the static ``FexFormats``; ``block_b`` /
+    ``unroll`` as in ``batched_iir_fex`` (both numerics-invariant).
     Returns (feature codes (B, F, C) int16, new state (B, 5, C) int16).
     """
     B, T = x.shape
@@ -217,17 +265,20 @@ def batched_iir_fex_int(x: jax.Array, coef: jax.Array, state: jax.Array, *,
     if n_frames == 0:
         return (jnp.zeros((B, 0, C), jnp.int16), state.astype(jnp.int16))
     x = x[:, :n_frames * frame_shift].astype(jnp.int16)
-    bb = B if block_b is None else block_b
-    assert B % bb == 0, (B, bb)
+    bb = validate_block_b("batched_iir_fex_int", B, block_b)
+    ur = validate_divisor("batched_iir_fex_int", "unroll", unroll,
+                          "frame_shift", frame_shift)
+    n_b = B // bb
 
-    kernel = functools.partial(_int_kernel, frame_shift=frame_shift, fmt=fmt)
+    kernel = functools.partial(_int_kernel, frame_shift=frame_shift,
+                               fmt=fmt, unroll=ur, block_b=bb, n_b=n_b)
     feats, state_out = pl.pallas_call(
         kernel,
-        grid=(B // bb, n_frames),
+        grid=(n_b, n_frames),
         in_specs=[
             pl.BlockSpec((bb, frame_shift), lambda b, f: (b, f)),
             pl.BlockSpec((6, C), lambda b, f: (0, 0)),
-            pl.BlockSpec((bb, STATE_ROWS, C), lambda b, f: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=(
             pl.BlockSpec((bb, 1, C), lambda b, f: (b, f, 0)),
@@ -237,6 +288,10 @@ def batched_iir_fex_int(x: jax.Array, coef: jax.Array, state: jax.Array, *,
             jax.ShapeDtypeStruct((B, n_frames, C), jnp.int16),
             jax.ShapeDtypeStruct((B, STATE_ROWS, C), jnp.int16),
         ),
+        scratch_shapes=[
+            pltpu.VMEM((2, bb, STATE_ROWS, C), jnp.int16),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
         interpret=resolve_interpret(interpret),
     )(x, coef.astype(jnp.int32), state.astype(jnp.int16))
     return feats, state_out

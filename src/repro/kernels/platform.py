@@ -1,10 +1,16 @@
 """Platform detection for Pallas kernel execution mode + mesh interplay.
 
-The kernels in this package TARGET TPU; every other backend (the CPU
-container, GPU hosts) runs them through the Pallas interpreter, which
-executes the kernel body with jnp ops — bit-identical math, no Mosaic.
+The kernels in this package TARGET TPU; on GPU hosts Pallas lowers the
+same kernels through Triton, so both accelerator backends run compiled
+(``interpret=False``).  Only backends with no Pallas lowering at all
+(the CPU container) run through the Pallas interpreter, which executes
+the kernel body with jnp ops — bit-identical math, no Mosaic/Triton.
 Callers pass ``interpret=None`` (the default everywhere) to get the
 platform-appropriate mode and may still force either mode per call.
+
+The resolved (platform, interpret, source) decision is logged exactly
+once per process so BENCH provenance is unambiguous — an interpret-mode
+CPU number can never masquerade as a compiled-device number.
 
 ``REPRO_PALLAS_INTERPRET=0|1`` overrides detection globally — useful to
 smoke-test the compiled path from a TPU-attached CI lane or to force
@@ -24,9 +30,12 @@ the flag (and the import-path shim across jax versions) lives here.
 """
 from __future__ import annotations
 
+import logging
 import os
 
 import jax
+
+_log = logging.getLogger(__name__)
 
 try:  # jax >= 0.6 promotes shard_map out of experimental
     from jax import shard_map as _shard_map  # type: ignore[attr-defined]
@@ -35,13 +44,41 @@ except ImportError:
 
 _ENV_VAR = "REPRO_PALLAS_INTERPRET"
 
+# Backends with a native Pallas lowering: Mosaic on TPU, Triton on GPU.
+# Everything else interprets.
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+_logged_decision: tuple | None = None
+
+
+def _log_decision_once(platform: str, interpret: bool, source: str) -> None:
+    global _logged_decision
+    decision = (platform, interpret, source)
+    if _logged_decision == decision:
+        return
+    _logged_decision = decision
+    mode = "interpret" if interpret else (
+        "compiled (Mosaic)" if platform == "tpu" else "compiled (Triton)")
+    _log.info("pallas execution mode: platform=%s mode=%s source=%s",
+              platform, mode, source)
+
 
 def default_interpret() -> bool:
-    """True unless running on TPU (or overridden via env)."""
+    """True only on backends with no Pallas lowering (or env override).
+
+    TPU lowers through Mosaic and GPU through Triton — both run compiled.
+    The CPU container interprets.  ``REPRO_PALLAS_INTERPRET`` wins over
+    detection in either direction.
+    """
+    platform = jax.default_backend()
     env = os.environ.get(_ENV_VAR)
     if env is not None and env != "":
-        return env.lower() not in ("0", "false", "no")
-    return jax.default_backend() != "tpu"
+        interpret = env.lower() not in ("0", "false", "no")
+        _log_decision_once(platform, interpret, f"env {_ENV_VAR}={env}")
+        return interpret
+    interpret = platform not in _COMPILED_BACKENDS
+    _log_decision_once(platform, interpret, "auto-detect")
+    return interpret
 
 
 def resolve_interpret(interpret: bool | None) -> bool:

@@ -831,6 +831,50 @@ class StreamingKwsSession:
             fn, n_args=8, slot_major=(4, 5, 6, 7), time_major=(),
             n_state_out=3))
 
+    def kernel_tuning_report(self) -> dict:
+        """Which autotuned kernel configs THIS session's steps resolve.
+
+        The dispatch layers consult the ``kernels.autotune`` cache at
+        trace time with the per-shard shapes the session actually runs.
+        This reports the RAW cached config under each of those keys —
+        the dispatch additionally sanitizes knobs against the concrete
+        chunk geometry (a ``block_t`` only applies when it divides the
+        chunk's frame count), so a listed knob may still fall back to
+        its default for an incompatible chunk.  An empty config means
+        cold cache → static defaults.  Never raises (a broken cache
+        reads as empty); purely observational.
+        """
+        from repro.kernels import autotune
+        enabled = autotune.autotune_enabled()
+        b_shard = self.batch // self.n_shards
+        report: dict = {"platform": autotune.platform_tag(self._interpret),
+                        "cache": str(autotune.cache_path()),
+                        "enabled": enabled,
+                        "kernels": {}}
+
+        def entry(kernel, shape, dtype, threshold):
+            cfg = (autotune.lookup(kernel, shape, dtype, threshold,
+                                   self._interpret) if enabled else None)
+            return {"shape": list(shape), "config": cfg or {}}
+
+        H = int(self._gru.w_h.shape[0])
+        gru_kernel = ("delta_gru_seq_int" if self.numerics == "int8"
+                      else "delta_gru_seq")
+        gru_dtype = "int8" if self.numerics == "int8" else "float32"
+        if self._input_dim is not None:
+            report["kernels"][gru_kernel] = entry(
+                gru_kernel, (b_shard, int(self._input_dim), H), gru_dtype,
+                self.threshold)
+        if self._fex is not None:
+            fcfg = self._fex.cfg
+            is_int = self._fex_backend == "pallas-int"
+            fex_kernel = "batched_iir_fex_int" if is_int else "batched_iir_fex"
+            report["kernels"][fex_kernel] = entry(
+                fex_kernel,
+                (b_shard, int(fcfg.n_active), int(fcfg.frame_shift)),
+                "int16" if is_int else "float32", 0.0)
+        return report
+
     def _use_threshold(self, threshold: float):
         """Point the session's compiled steps at one Δ_TH (cached)."""
         cached = self._step_cache.get(threshold)

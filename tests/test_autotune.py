@@ -1,0 +1,285 @@
+"""Autotune subsystem tests: cache robustness, dispatch pickup, knob
+validation, platform resolution — and the property that makes tuning safe
+at all: every tuned config is bit-identical to the default config, in
+both float and integer numerics (DESIGN.md §12)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delta_gru as dg
+from repro.core import fixed_point as fp
+from repro.frontend import fex as fx
+from repro.frontend.fex import FExConfig, build_sos_bank
+from repro.kernels import autotune, platform
+from repro.kernels.iir_fex import pack_coefficients
+
+
+@pytest.fixture
+def cache(tmp_path, monkeypatch):
+    """Point the autotune cache at a fresh temp file, memo cleared."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    monkeypatch.delenv(autotune.ENV_ENABLE, raising=False)
+    autotune.clear_memo()
+    yield path
+    autotune.clear_memo()
+
+
+# ------------------------------------------------------------ cache I/O
+def test_missing_cache_falls_back_to_defaults(cache):
+    assert not cache.exists()
+    assert autotune.lookup("delta_gru_seq", (8, 64, 64), "float32", 0.2) \
+        is None
+    assert autotune.resolve("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                            B=8, T=100) == {}
+
+
+def test_corrupt_cache_falls_back_without_error(cache):
+    cache.write_text("{ this is not json !!!")
+    autotune.clear_memo()
+    assert autotune.lookup("delta_gru_seq", (8, 64, 64), "float32", 0.2) \
+        is None
+    # and a well-formed file with a garbage entries type
+    cache.write_text(json.dumps({"schema": autotune.SCHEMA_VERSION,
+                                 "entries": [1, 2, 3]}))
+    autotune.clear_memo()
+    assert autotune.resolve("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                            B=8, T=100) == {}
+
+
+def test_stale_schema_falls_back(cache):
+    key = autotune.cache_key("delta_gru_seq", (8, 64, 64), "float32", 0.2)
+    cache.write_text(json.dumps({
+        "schema": autotune.SCHEMA_VERSION + 1,
+        "entries": {key: {"config": {"block_b": 2}}}}))
+    autotune.clear_memo()
+    assert autotune.lookup("delta_gru_seq", (8, 64, 64), "float32", 0.2) \
+        is None
+
+
+def test_record_then_hit_roundtrip(cache):
+    key = autotune.record("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                          {"block_b": 4, "block_t": 2},
+                          tuned_us=10.0, default_us=20.0)
+    got = autotune.lookup("delta_gru_seq", (8, 64, 64), "float32", 0.2)
+    assert got == {"block_b": 4, "block_t": 2}
+    blob = json.loads(cache.read_text())
+    assert blob["schema"] == autotune.SCHEMA_VERSION
+    assert blob["entries"][key]["speedup"] == pytest.approx(2.0)
+    # a second record for a different key must not clobber the first
+    autotune.record("batched_iir_fex", (8, 10, 128), "float32", 0.0,
+                    {"block_b": 8, "unroll": 4}, tuned_us=1.0,
+                    default_us=2.0)
+    assert autotune.lookup("delta_gru_seq", (8, 64, 64), "float32", 0.2) \
+        == {"block_b": 4, "block_t": 2}
+
+
+def test_key_separates_threshold_buckets_and_platform(cache):
+    autotune.record("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                    {"block_t": 2}, tuned_us=1.0, default_us=2.0)
+    # 0.21 rounds into the same 0.2 bucket; 0.5 does not
+    assert autotune.lookup("delta_gru_seq", (8, 64, 64), "float32",
+                           0.21) == {"block_t": 2}
+    assert autotune.lookup("delta_gru_seq", (8, 64, 64), "float32",
+                           0.5) is None
+    k_int = autotune.cache_key("delta_gru_seq", (8, 64, 64), "float32",
+                               0.2, interpret=True)
+    k_cmp = autotune.cache_key("delta_gru_seq", (8, 64, 64), "float32",
+                               0.2, interpret=False)
+    assert k_int.endswith("-interpret") and k_cmp.endswith("-compiled")
+    assert k_int != k_cmp
+
+
+def test_resolve_sanitizes_illegal_knobs(cache):
+    autotune.record("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                    {"block_b": 4, "block_t": 8}, tuned_us=1.0,
+                    default_us=2.0)
+    # block_t=8 does not divide T=30 -> dropped; block_b survives
+    assert autotune.resolve("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                            B=8, T=30) == {"block_b": 4}
+    # block_b=4 does not divide B=6 -> dropped
+    assert autotune.resolve("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                            B=6, T=32) == {"block_t": 8}
+    # float-FEx block_b=1 carve-out (1-ulp FMA wobble at B=1)
+    autotune.record("batched_iir_fex", (8, 10, 128), "float32", 0.0,
+                    {"block_b": 1, "unroll": 4}, tuned_us=1.0,
+                    default_us=2.0)
+    assert autotune.resolve("batched_iir_fex", (8, 10, 128), "float32",
+                            0.0, B=8, frame_shift=128) == {"unroll": 4}
+
+
+def test_env_disable_ignores_entries(cache, monkeypatch):
+    autotune.record("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                    {"block_t": 2}, tuned_us=1.0, default_us=2.0)
+    monkeypatch.setenv(autotune.ENV_ENABLE, "0")
+    assert autotune.resolve("delta_gru_seq", (8, 64, 64), "float32", 0.2,
+                            B=8, T=100) == {}
+
+
+def test_threshold_bucket_handles_traced_values():
+    assert autotune.threshold_bucket(0.27) == pytest.approx(0.3)
+    assert autotune.threshold_bucket(5.0) == 1.0
+
+    buckets = []
+
+    @jax.jit
+    def f(th):
+        buckets.append(autotune.threshold_bucket(th))
+        return th
+
+    f(jnp.float32(0.4))
+    assert buckets == [0.0]        # traced -> conservative 0.0 bucket
+
+
+# ------------------------------------------------- tuned == default, bitwise
+def test_tuned_config_bit_identical_float(cache):
+    p = dg.init_delta_gru(jax.random.PRNGKey(0), 12, 16)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (20, 8, 12)) * 0.5
+    base = dg.delta_gru_scan(p, xs, 0.2, backend="pallas")
+    autotune.record("delta_gru_seq", (8, 12, 16), "float32", 0.2,
+                    {"block_b": 2, "block_t": 5}, tuned_us=1.0,
+                    default_us=2.0)
+    tuned = dg.delta_gru_scan(p, xs, 0.2, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(tuned[0]))
+    for a, b in zip(base[1], tuned[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tuned_config_bit_identical_int(cache):
+    p = dg.init_delta_gru(jax.random.PRNGKey(2), 12, 16)
+    w, fmt = fp.quantize_gru(p)
+    xs = jax.random.normal(jax.random.PRNGKey(3), (20, 8, 12)) * 0.5
+    xc = fp.to_code(xs, fmt.feat_frac, 16, jnp.int16)
+    golden = fp.int_gru_scan(w, fmt, xc, 0.2, backend="xla")
+    base = fp.int_gru_scan(w, fmt, xc, 0.2, backend="pallas")
+    autotune.record("delta_gru_seq_int", (8, 12, 16), "int8", 0.2,
+                    {"block_b": 4, "block_t": 4}, tuned_us=1.0,
+                    default_us=2.0)
+    tuned = fp.int_gru_scan(w, fmt, xc, 0.2, backend="pallas")
+    for ref in (golden, base):
+        np.testing.assert_array_equal(np.asarray(ref[0]),
+                                      np.asarray(tuned[0]))
+        for a, b in zip(ref[1], tuned[1]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tuned_config_bit_identical_fex(cache):
+    coef = pack_coefficients(build_sos_bank(FExConfig()))
+    audio = jax.random.normal(jax.random.PRNGKey(4), (8, 4096)) * 0.1
+    base_f, base_s = fx.fex_scan(audio, coef, backend="pallas")
+    autotune.record("batched_iir_fex", (8, 10, 128), "float32", 0.0,
+                    {"block_b": 4, "unroll": 8}, tuned_us=1.0,
+                    default_us=2.0)
+    tuned_f, tuned_s = fx.fex_scan(audio, coef, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(base_f), np.asarray(tuned_f))
+    for a, b in zip(base_s, tuned_s):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tuned_config_bit_identical_fex_int(cache):
+    coef = pack_coefficients(build_sos_bank(FExConfig()))
+    audio = jax.random.normal(jax.random.PRNGKey(5), (8, 4096)) * 0.1
+    base_f, base_s = fx.fex_scan(audio, coef, backend="pallas-int")
+    autotune.record("batched_iir_fex_int", (8, 10, 128), "int16", 0.0,
+                    {"block_b": 2, "unroll": 16}, tuned_us=1.0,
+                    default_us=2.0)
+    tuned_f, tuned_s = fx.fex_scan(audio, coef, backend="pallas-int")
+    np.testing.assert_array_equal(np.asarray(base_f), np.asarray(tuned_f))
+    for a, b in zip(base_s, tuned_s):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ the tuner
+def test_tune_writes_winner_consulted_by_dispatch(cache):
+    report = autotune.tune_delta_gru_seq(T=10, B=4, I=8, H=8,
+                                         threshold=0.2, iters=1)
+    assert report["cache_key"] in json.loads(cache.read_text())["entries"]
+    assert report["best_us"] <= report["default_us"]
+    got = autotune.resolve("delta_gru_seq", (4, 8, 8), "float32", 0.2,
+                           B=4, T=10)
+    assert got == {k: v for k, v in report["best_config"].items()
+                   if k in got}
+    # sweep covered both axes beyond the default
+    assert len(report["sweep"]) >= 3
+
+
+def test_tune_fex_writes_winner(cache):
+    report = autotune.tune_batched_iir_fex(B=4, seconds=0.1, iters=1)
+    entries = json.loads(cache.read_text())["entries"]
+    assert report["cache_key"] in entries
+    # float FEx never records block_b=1 (excluded candidate)
+    assert report["best_config"].get("block_b") != 1
+
+
+def test_session_kernel_tuning_report(cache):
+    from repro.configs import get_config
+    from repro.launch.streaming import StreamingKwsSession
+    from repro.models import kws
+
+    cfg = get_config("deltakws")
+    fex_cfg = FExConfig()
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=fex_cfg.n_active)
+    autotune.record("delta_gru_seq", (2, fex_cfg.n_active, cfg.d_model),
+                    "float32", 0.2, {"block_t": 2}, tuned_us=1.0,
+                    default_us=2.0)
+    sess = StreamingKwsSession(params, cfg, threshold=0.2, batch=2,
+                               input_dim=fex_cfg.n_active, fex=fex_cfg)
+    report = sess.kernel_tuning_report()
+    assert report["cache"] == str(cache)
+    assert report["kernels"]["delta_gru_seq"]["config"] == {"block_t": 2}
+    assert report["kernels"]["batched_iir_fex"]["config"] == {}  # cold
+
+
+# ------------------------------------------------------- knob validation
+def test_block_b_validation_messages():
+    with pytest.raises(ValueError, match=r"delta_gru_seq.*block_b=3.*B=8"):
+        autotune.validate_block_b("delta_gru_seq", 8, 3)
+    with pytest.raises(ValueError, match="batched_iir_fex"):
+        autotune.validate_block_b("batched_iir_fex", 8, 0)
+    assert autotune.validate_block_b("k", 8, None) == 8
+    assert autotune.validate_block_b("k", 8, 4) == 4
+
+
+def test_validate_divisor_messages():
+    with pytest.raises(ValueError, match=r"unroll=7.*frame_shift=128"):
+        autotune.validate_divisor("batched_iir_fex", "unroll", 7,
+                                  "frame_shift", 128)
+    assert autotune.validate_divisor("k", "block_t", None, "T", 100) == 1
+    assert autotune.validate_divisor("k", "block_t", 25, "T", 100) == 25
+
+
+# ------------------------------------------------------------- platform
+def test_gpu_backend_selects_compiled_lowering(monkeypatch):
+    monkeypatch.delenv(platform._ENV_VAR, raising=False)
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert platform.default_interpret() is False       # Triton, not interpret
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert platform.default_interpret() is False       # Mosaic
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert platform.default_interpret() is True
+
+
+def test_env_override_beats_detection(monkeypatch):
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    monkeypatch.setenv(platform._ENV_VAR, "1")
+    assert platform.default_interpret() is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    monkeypatch.setenv(platform._ENV_VAR, "0")
+    assert platform.default_interpret() is False
+
+
+def test_resolution_logged_once(monkeypatch, caplog):
+    monkeypatch.delenv(platform._ENV_VAR, raising=False)
+    monkeypatch.setattr(platform, "_logged_decision", None)
+    with caplog.at_level("INFO", logger="repro.kernels.platform"):
+        platform.default_interpret()
+        platform.default_interpret()
+        platform.default_interpret()
+    msgs = [r for r in caplog.records
+            if "pallas execution mode" in r.message]
+    assert len(msgs) == 1
+    assert "platform=" in msgs[0].message

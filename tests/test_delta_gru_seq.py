@@ -64,6 +64,39 @@ def test_seq_matches_scan_across_thresholds_and_batch_tiles(th, block_b):
     np.testing.assert_array_equal(np.asarray(nz_dh), np.asarray(stats.nz_dh))
 
 
+@pytest.mark.parametrize("block_t", [2, 4, 10, 20])
+@pytest.mark.parametrize("block_b", [None, 2])
+def test_time_tiling_bit_identical_to_untiled(block_t, block_b):
+    """block_t advances several frames per grid step through the SAME
+    sequential fori_loop — every tiling must match block_t=1 bit for
+    bit, state and telemetry included."""
+    p, xs = _setup(T=20, B=8, I=12, H=24, seed=11)
+    ref = _run_seq(p, xs, 0.2, block_b=block_b)
+    T, B, I = xs.shape
+    s = init_delta_state(B, I, p.w_h.shape[0], p)
+    got = delta_gru_seq(xs, s.h, s.x_hat, s.h_hat, s.m_x, s.m_h,
+                        p.w_x, p.w_h, 0.2, block_b=block_b,
+                        block_t=block_t)
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+    for a, b in zip(ref[1], got[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ref[2]), np.asarray(got[2]))
+    np.testing.assert_array_equal(np.asarray(ref[3]), np.asarray(got[3]))
+
+
+def test_bad_tiles_raise_named_valueerror():
+    p, xs = _setup(T=20, B=8)
+    with pytest.raises(ValueError,
+                       match=r"delta_gru_seq: block_b=3 .*B=8"):
+        _run_seq(p, xs, 0.1, block_b=3)
+    with pytest.raises(ValueError,
+                       match=r"delta_gru_seq: block_t=7 .*T=20"):
+        delta_gru_scan(p, xs, threshold=0.1, backend="pallas", block_t=7)
+    with pytest.raises(ValueError, match=r"delta_gru_seq_int: block_b=5"):
+        delta_gru_scan(p, xs, threshold=0.1, backend="pallas-int",
+                       block_b=5)
+
+
 def test_backend_dispatch_pallas_equals_xla():
     p, xs = _setup(T=16, B=4, I=10, H=16, seed=7)
     for th in [0.0, 0.15]:

@@ -61,6 +61,38 @@ def test_pallas_float_exact_vs_xla_scan(B, T, block_b, compress):
     np.testing.assert_array_equal(np.asarray(sx.env), np.asarray(sp.env))
 
 
+@pytest.mark.parametrize("unroll", [2, 4, 8, 16, 128])
+@pytest.mark.parametrize("block_b", [None, 2])
+def test_unroll_and_tiling_bit_identical(unroll, block_b):
+    """The per-sample loop unroll and the double-buffered state prefetch
+    must be invisible: identical ops in identical order, so any legal
+    (block_b, unroll) equals the default bit for bit — features AND
+    carried state (the DMA pipeline seeds exactly the tile's carry)."""
+    audio = _audio(8, 2048, seed=21)
+    state = init_fex_state(8, CFG.n_active)
+    # non-trivial initial state so the prefetch path is actually exercised
+    f0, s0 = fex_scan(audio, COEF, state, env_alpha=CFG.env_alpha,
+                      backend="pallas")
+    f1, s1 = fex_scan(audio[:, :1024], COEF, s0, env_alpha=CFG.env_alpha,
+                      backend="pallas")
+    f2, s2 = fex_scan(audio[:, :1024], COEF, s0, env_alpha=CFG.env_alpha,
+                      backend="pallas", block_b=block_b, unroll=unroll)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(s1.filt), np.asarray(s2.filt))
+    np.testing.assert_array_equal(np.asarray(s1.env), np.asarray(s2.env))
+
+
+def test_fex_bad_tiles_raise_named_valueerror():
+    with pytest.raises(ValueError,
+                       match=r"batched_iir_fex: block_b=5 .*B=8"):
+        fex_scan(_audio(8, 512), COEF, backend="pallas", block_b=5)
+    with pytest.raises(ValueError,
+                       match=r"batched_iir_fex: unroll=7 .*frame_shift=128"):
+        fex_scan(_audio(8, 512), COEF, backend="pallas", unroll=7)
+    with pytest.raises(ValueError, match=r"batched_iir_fex_int: unroll=9"):
+        fex_scan(_audio(4, 512), COEF, backend="pallas-int", unroll=9)
+
+
 def test_fex_backend_rejects_unknown():
     with pytest.raises(ValueError):
         fex_scan(_audio(1, 256), COEF, backend="cuda")

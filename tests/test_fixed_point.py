@@ -109,6 +109,74 @@ def test_int_gru_batch_tiles_bit_identical():
                                       np.asarray(got[0]))
 
 
+def test_packed_int8_dot_exact_at_extremes():
+    """Unit proof of the byte-plane dot: exact against the int32 dot for
+    extreme deltas (±2^16, the saturated-code worst case), full-scale
+    int8 weights, and the max gated contraction dim (DESIGN.md §12)."""
+    rng = np.random.default_rng(0)
+    K = fp.PACKED_DOT_MAX_K
+    d = rng.integers(-(1 << 16), (1 << 16) + 1, (4, K)).astype(np.int32)
+    d[0, :] = 1 << 16                 # all-max positive deltas
+    d[1, :] = -(1 << 16)              # all-max negative
+    w = rng.integers(-128, 128, (K, 8)).astype(np.int8)
+    w[:, 0] = 127
+    w[:, 1] = -128
+    ref = d @ w.astype(np.int32)
+    got = fp.packed_int8_dot(jnp.asarray(d),
+                             jnp.asarray(w, jnp.float32))
+    np.testing.assert_array_equal(ref, np.asarray(got))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_int_gru_packed_and_tiled_bit_identical_to_golden(seed):
+    """The packed datapath + time tiling vs the golden scan — the
+    conformance gate for the lane-dim packing win."""
+    rng = np.random.default_rng(100 + seed)
+    w, fmt, xs, th = _rand_gru(rng)
+    T = xs.shape[0]
+    golden = fp.int_gru_scan(w, fmt, xs, th, backend="xla")
+    for kw in ({"packed": True}, {"packed": False},
+               {"packed": True, "block_t": T}, {"block_t": 1}):
+        got = fp.int_gru_scan(w, fmt, xs, th, backend="pallas", **kw)
+        np.testing.assert_array_equal(np.asarray(golden[0]),
+                                      np.asarray(got[0]))
+        for a, b in zip(golden[1], got[1]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(golden[2]),
+                                      np.asarray(got[2]))
+
+
+def test_packed_requires_int_format_and_bound():
+    from repro.kernels.delta_gru_seq import delta_gru_seq_int
+    p = dg.init_delta_gru(jax.random.PRNGKey(1), 8, 8)
+    w, fmt = fp.quantize_gru(p)
+    xs = fp.to_code(jnp.zeros((4, 2, 8), jnp.float32), fmt.feat_frac, 16,
+                    jnp.int16)
+    s = fp.init_int_delta_state(2, 8, 8, w)
+    th = jnp.zeros((1, 2), jnp.int32)
+    with pytest.raises(ValueError, match="packed=True requires"):
+        delta_gru_seq_int(xs.astype(jnp.float32), s.h.astype(jnp.float32),
+                          s.x_hat.astype(jnp.float32),
+                          s.h_hat.astype(jnp.float32),
+                          s.m_x.astype(jnp.float32),
+                          s.m_h.astype(jnp.float32),
+                          w.w_x.astype(jnp.float32),
+                          w.w_h.astype(jnp.float32),
+                          th.astype(jnp.float32), fmt=None, packed=True)
+    with pytest.raises(ValueError, match="only exact for"):
+        big_I, H = fp.PACKED_DOT_MAX_K + 1, 8
+        delta_gru_seq_int(
+            jnp.zeros((1, 1, big_I), jnp.int16),
+            jnp.zeros((1, H), jnp.int16),           # h0
+            jnp.zeros((1, big_I), jnp.int16),       # x_hat0
+            jnp.zeros((1, H), jnp.int16),           # h_hat0
+            jnp.zeros((1, 3 * H), jnp.int32),       # m_x0
+            jnp.zeros((1, 3 * H), jnp.int32),       # m_h0
+            jnp.zeros((big_I, 3 * H), jnp.int8),
+            jnp.zeros((H, 3 * H), jnp.int8), th,
+            fmt=fmt, packed=True)
+
+
 def test_int_gru_state_carry_bit_invisible():
     rng = np.random.default_rng(5)
     w, fmt, xs, th = _rand_gru(rng)
