@@ -80,6 +80,43 @@ def train_kws_frames(n_steps: int = 300, train_th: float = 0.1,
                            seed, batch)
 
 
+def train_stage0_frames(n_steps: int = 300, s0_channels: int = 4,
+                        train_th: float = 0.05, seed: int = 7,
+                        batch: int = 32):
+    """Train the always-on stage-0 wake model for the cascade benchmark:
+    a 16-unit ΔGRU over the leading ``s0_channels`` feature channels
+    with a BINARY any-keyword/background head, frame-level CE on the
+    same synthetic continuous streams as stage-1.  Returns
+    (cfg0, params0)."""
+    import dataclasses
+    from repro.data.continuous import synth_frame_batch
+
+    cfg0 = dataclasses.replace(get_config("deltakws"),
+                               vocab_size=2, d_model=16)
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(seed), cfg0,
+                             input_dim=s0_channels)
+    ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
+                           total_steps=n_steps)
+    state = opt.init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, feats, labels):
+        (loss, m), g = jax.value_and_grad(kws.frame_loss_fn, has_aux=True)(
+            params, cfg0, {"feats": feats, "frame_labels": labels},
+            train_th)
+        params, state, _ = opt.update(ocfg, g, state, params)
+        return params, state, loss
+
+    for _ in range(n_steps):
+        audio, labels = synth_frame_batch(rng, batch)
+        feats = fex(jnp.asarray(audio))[..., :s0_channels]
+        params, state, _ = step(params, state, feats,
+                                jnp.asarray((labels != 0).astype(np.int32)))
+    return cfg0, params
+
+
 def eval_at_threshold(cfg, params, feats, labels, th: float):
     from repro.core import temporal_sparsity
     logits, stats = kws.forward(params, cfg, feats, threshold=th)

@@ -36,6 +36,12 @@ SERVE_DETECT_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
                     "--train-steps 700")
 DETECT_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/detect_bench.py"
 
+# Two-stage wake cascade (DESIGN.md §13) ------------------------------------
+SERVE_CASCADE_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
+                     "--mode kws-cascade --slots 4 --stream-seconds 30 "
+                     "--train-steps 700")
+CASCADE_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/cascade_bench.py"
+
 # Train → deploy (QAT + promotion to the integer bundle) --------------------
 TRAIN_PROMOTE_CMD = ("PYTHONPATH=src python -m repro.launch.train "
                      "--arch deltakws --steps 300 "
@@ -74,6 +80,8 @@ ALL_COMMANDS = {
     "serve_int8": SERVE_INT8_CMD,
     "serve_detect": SERVE_DETECT_CMD,
     "detect_bench": DETECT_BENCH_CMD,
+    "serve_cascade": SERVE_CASCADE_CMD,
+    "cascade_bench": CASCADE_BENCH_CMD,
     "train_promote": TRAIN_PROMOTE_CMD,
     "serve_bundle": SERVE_BUNDLE_CMD,
     "serve_faults": SERVE_FAULTS_CMD,

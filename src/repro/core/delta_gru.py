@@ -234,6 +234,7 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
                    block_b: int | None = None, block_t: int | None = None,
                    block_i: int | None = None,
                    block_o: int | None = None, h_qformat=None,
+                   event_driven: bool = False,
                    vmem_budget_bytes: int = _SEQ_KERNEL_VMEM_BUDGET_BYTES,
                    ) -> tuple[Array, DeltaState, DeltaStats]:
     """Run a ΔGRU over ``xs`` of shape (T, B, I).
@@ -270,6 +271,14 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
         numerics-invariant.
       h_qformat: QAT hidden-state quantization grid (XLA backend only —
         see ``DeltaGRUCell``).
+      event_driven: active-slot compaction (``kernels.compaction``,
+        DESIGN.md §13): slots whose whole chunk sits inside the Δ dead
+        zone of their carried x̂ AND whose state is a proven bitwise
+        fixed point are skipped; the remaining slots run compacted
+        through the selected backend.  Bit-identical to the dense path
+        by construction, faster at high temporal sparsity.  Host-level
+        (dynamic shapes), so it cannot be called under ``jax.jit`` and
+        returns host numpy arrays; incompatible with ``h_qformat``.
       vmem_budget_bytes: weight budget above which "pallas" takes the
         block-sparse per-step fallback.
 
@@ -292,6 +301,27 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
     if h_qformat is not None and backend != "xla":
         raise ValueError("h_qformat (QAT) requires the differentiable "
                          f"'xla' backend, got {backend!r}")
+
+    if event_driven:
+        if h_qformat is not None:
+            raise ValueError("event_driven compaction is an inference "
+                             "mode — incompatible with QAT (h_qformat)")
+        from repro.kernels import compaction
+
+        def run(xs_c, st):
+            hs, fin, stats = delta_gru_scan(
+                params, jnp.asarray(xs_c), threshold,
+                DeltaState(*[jnp.asarray(s) for s in st]),
+                backend=backend, interpret=interpret, block_i=block_i,
+                block_o=block_o, vmem_budget_bytes=vmem_budget_bytes)
+            return hs, tuple(fin), stats.nz_dx, stats.nz_dh
+
+        held = compaction.held_slots(xs, state.x_hat, threshold)
+        hs, st, nz_dx, nz_dh, _ = compaction.event_driven_seq(
+            run, xs, tuple(state), held)
+        return (jnp.asarray(hs), DeltaState(*[jnp.asarray(s) for s in st]),
+                _stats_from_counts(jnp.asarray(nz_dx), jnp.asarray(nz_dh),
+                                   I, H))
 
     if backend == "pallas-int":
         from repro.kernels import autotune
@@ -340,6 +370,47 @@ def delta_gru_scan(params: DeltaGRUParams, xs: Array, threshold: float = 0.0,
         return new_state, (h, stats)
 
     final_state, (hs, stats) = jax.lax.scan(body, state, xs)
+    return hs, final_state, stats
+
+
+def masked_delta_gru_scan(params: DeltaGRUParams, xs: Array,
+                          threshold: float, state: DeltaState,
+                          awake: Array
+                          ) -> tuple[Array, DeltaState, DeltaStats]:
+    """Wake-gated ΔGRU scan: the stage-1 half of the cascade (DESIGN.md
+    §13).  ``awake`` is a (T, B) bool trace from the stage-0 wake gate;
+    frames where a slot is asleep leave its ENTIRE delta state (h, x̂,
+    ĥ, M) bit-frozen, emit the frozen h, and count ZERO executed MACs —
+    the IC clock-gates the big recurrence, it does not run it and throw
+    the result away.  Awake frames step through the same ``DeltaGRUCell``
+    the dense XLA backend scans, so a trace that is awake everywhere is
+    bit-identical to ``delta_gru_scan(backend="xla")`` (and through the
+    locked kernel-conformance suite, to every other backend).
+
+    Jit-compatible (static shapes): the freeze is a per-frame masked
+    select, which is how a frame-granular gate can live inside the fused
+    serving step.  ``macs_dense`` stays unmasked — the dense reference
+    the duty cycle and sparsity are measured against runs every frame.
+    """
+    H = params.w_h.shape[0]
+    cell = DeltaGRUCell(hidden_dim=H, threshold=threshold)
+
+    def body(carry: DeltaState, inp):
+        x, awk = inp
+        new_state, _, stats = cell(params, carry, x)
+        m = awk[:, None]
+        carry = DeltaState(*(jnp.where(m, n, o)
+                             for n, o in zip(new_state, carry)))
+        z = jnp.zeros((), stats.nz_dx.dtype)
+        stats = DeltaStats(
+            nz_dx=jnp.where(awk, stats.nz_dx, z),
+            nz_dh=jnp.where(awk, stats.nz_dh, z),
+            macs=jnp.where(awk, stats.macs, z),
+            macs_dense=stats.macs_dense,
+            sram_reads=jnp.where(awk, stats.sram_reads, z))
+        return carry, (carry.h, stats)
+
+    final_state, (hs, stats) = jax.lax.scan(body, state, (xs, awake))
     return hs, final_state, stats
 
 

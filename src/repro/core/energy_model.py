@@ -163,6 +163,77 @@ def cost_from_sparsity(sparsity: float, **kw) -> CostReport:
     return frame_cost(macs_exec=(1.0 - sparsity) * DENSE_GRU_MACS, **kw)
 
 
+# ------------------------------------------------- two-stage wake cascade --
+# DESIGN.md §13: a ~16-unit always-on stage-0 ΔGRU gates the 64-unit
+# stage-1 network, which only runs around candidate events.  The pricing
+# reuses the SAME calibrated per-op energies (E_MAC_NJ, E_SRAM_WORD_NJ)
+# — a stage is just a different MAC/word count, duty-weighted.
+
+def stage_energy_nj(macs_exec: float, hidden: int, n_classes: int,
+                    duty: float = 1.0, foundry_sram: bool = False) -> float:
+    """Per-frame RNN + weight-SRAM + FC energy of ONE cascade stage.
+
+    ``macs_exec`` is the average executed ΔGRU MACs per frame ACROSS ALL
+    frames (frames where the stage slept contribute zero — the caller's
+    counters already encode the duty for the recurrent part), while the
+    dense FC head runs only on awake frames, so it is ``duty``-weighted
+    here.  ``hidden``/``n_classes`` size the FC head; words = MACs/2
+    (two 8-bit weights per 16-bit SRAM word).
+    """
+    e_sram_word = E_SRAM_WORD_NJ * (NEAR_VTH_SRAM_FACTOR if foundry_sram
+                                    else 1.0)
+    fc = hidden * n_classes + n_classes
+    words = macs_exec / 2.0 + duty * fc / 2.0
+    return (macs_exec + duty * fc) * E_MAC_NJ + words * e_sram_word
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeCostReport:
+    """Energy/latency split of one two-stage decision (nJ / ms)."""
+
+    energy_nj_per_decision: float
+    latency_ms: float
+    fex_energy_nj: float
+    s0_energy_nj: float            # always-on stage-0 micro-ΔGRU + head
+    s1_energy_nj: float            # duty-gated stage-1 network + head
+    s1_duty: float
+    chip_power_uw: float
+
+
+def cascade_frame_cost(s0_macs_exec: float, s1_macs_exec: float,
+                       s1_duty: float, *,
+                       s0_hidden: int = 16, s0_classes: int = 2,
+                       s1_hidden: int = 64, s1_classes: int = 12,
+                       n_channels: int = 10,
+                       foundry_sram: bool = False) -> CascadeCostReport:
+    """Two-stage decision cost from counted per-stage MACs.
+
+    Both MAC counts are averages over ALL served frames (stage-1 MACs
+    are zero on asleep frames by construction — its state is frozen);
+    ``s1_duty`` is the awake-frame fraction, which prices stage-1's
+    dense FC head and SRAM words.  The FEx bank and the control residual
+    are shared: stage-0 taps a subset of the channels the frontend
+    already computes, so the cascade adds no frontend energy.  Latency follows
+    the same cycle model as :func:`frame_cost` with both stages' MACs
+    on the serial datapath.
+    """
+    ch_scale = _fex_channel_scale(n_channels)
+    e_fex = E_FEX_FRAME_NJ * _scale_fix * ch_scale
+    e_ctl = max(E_FC_FRAME_NJ * (_scale_fix - 1.0), 0.0)
+    e_s0 = stage_energy_nj(s0_macs_exec, s0_hidden, s0_classes,
+                           duty=1.0, foundry_sram=foundry_sram)
+    e_s1 = stage_energy_nj(s1_macs_exec, s1_hidden, s1_classes,
+                           duty=s1_duty, foundry_sram=foundry_sram)
+    energy = e_fex + e_ctl + e_s0 + e_s1
+    cycles = C_FIX + (s0_macs_exec + s1_macs_exec) * CYCLES_PER_MAC
+    latency_ms = cycles / CLK_HZ * 1e3
+    power_uw = P_STATIC_UW + energy * 1e-9 / FRAME_S * 1e6
+    return CascadeCostReport(
+        energy_nj_per_decision=energy, latency_ms=latency_ms,
+        fex_energy_nj=e_fex, s0_energy_nj=e_s0, s1_energy_nj=e_s1,
+        s1_duty=s1_duty, chip_power_uw=power_uw)
+
+
 def self_check(atol_nj: float = 1.0, atol_ms: float = 0.1) -> dict:
     """Verify the calibration reproduces the paper's anchor measurements."""
     dense = cost_from_sparsity(0.0)

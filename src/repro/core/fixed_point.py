@@ -373,6 +373,7 @@ def int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
                  threshold: float, state=None, *, backend: str = "xla",
                  block_b: int | None = None, block_t: int | None = None,
                  packed: bool | None = None, interpret: bool | None = None,
+                 event_driven: bool = False,
                  vmem_budget_bytes: int = _INT_SEQ_KERNEL_VMEM_BUDGET_BYTES):
     """Run the integer ΔGRU over codes ``xs_codes`` (T, B, I) int16.
 
@@ -387,6 +388,16 @@ def int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
     a cold cache.  ``interpret`` forwards to the Pallas platform
     resolution; ``vmem_budget_bytes`` is the resident-weight ceiling.
 
+    ``event_driven`` enables active-slot compaction on the integer
+    datapath (``kernels.compaction``, DESIGN.md §13): slots whose whole
+    chunk of codes sits inside the integer Δ dead zone (|x − x̂| ≤ th_x)
+    and whose carried state a 1-frame kernel probe proves to be a
+    bitwise fixed point are skipped; the rest run compacted through the
+    selected backend.  Bit-identical by construction; host-level, so
+    not jittable (integer state reaches its fixed point in a handful of
+    frames of held input, making this mode *more* effective than the
+    float path during VAD-clamped silence).
+
     Unlike the float ``delta_gru_scan``, there is no block-sparse
     fallback for weights exceeding the VMEM budget (no int image of
     ``delta_matvec`` yet) — the dispatch REFUSES loudly instead of
@@ -397,6 +408,24 @@ def int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
     if state is None:
         state = init_int_delta_state(B, I, H, w)
     th_x, th_h = fmt.th_codes(threshold)
+
+    if event_driven:
+        from repro.core.delta_gru import DeltaState
+        from repro.kernels import compaction
+
+        def run(xs_c, st):
+            return int_gru_scan(
+                w, fmt, jnp.asarray(xs_c), threshold,
+                DeltaState(*[jnp.asarray(s) for s in st]), backend=backend,
+                packed=packed, interpret=interpret,
+                vmem_budget_bytes=vmem_budget_bytes)
+
+        held = compaction.held_slots(xs_codes, state.x_hat, th_x)
+        hs, st, nz_dx, nz_dh, _ = compaction.event_driven_seq(
+            run, xs_codes, tuple(state), held)
+        return (jnp.asarray(hs),
+                DeltaState(*[jnp.asarray(s) for s in st]),
+                jnp.asarray(nz_dx), jnp.asarray(nz_dh))
 
     if backend == "pallas":
         weight_bytes = (I + H) * 3 * H          # int8: one byte per weight
@@ -439,6 +468,46 @@ def int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
     m0 = jnp.concatenate([state.m_x, state.m_h], axis=-1)
     (h, xh, hh, m), (hs, nz_dx, nz_dh) = jax.lax.scan(
         body, (state.h, state.x_hat, state.h_hat, m0), xs_codes)
+    final = DeltaState(h=h, x_hat=xh, h_hat=hh,
+                       m_x=m[:, :3 * H], m_h=m[:, 3 * H:])
+    return hs, final, nz_dx, nz_dh
+
+
+def masked_int_gru_scan(w: IntGruWeights, fmt: GruFormats, xs_codes,
+                        threshold: float, state, awake):
+    """Wake-gated golden integer scan — stage-1 of the cascade on the
+    deployed datapath (DESIGN.md §13).  ``awake`` is a (T, B) bool trace
+    from the stage-0 gate; frames where a slot sleeps leave its entire
+    integer state (h, x̂, ĥ, fused M) bit-frozen, emit the frozen h
+    codes, and count zero transmitted deltas.  Awake frames run
+    ``gru_frame_step`` — the same single-source math as ``int_gru_scan``
+    — so an everywhere-awake trace is bit-identical to the golden scan
+    (and through the kernel-conformance suite, to the Pallas kernel).
+    Jit-compatible; returns ``(hs, final state, nz_dx, nz_dh)``.
+    """
+    from repro.core.delta_gru import DeltaState
+
+    H = w.w_h.shape[0]
+    th_x, th_h = fmt.th_codes(threshold)
+
+    def body(carry, inp):
+        x, awk = inp
+        h, xh, hh, m = carry
+        nh, nxh, nhh, nm, mask_x, mask_h = gru_frame_step(
+            fmt, x, h, xh, hh, m, w.w_x, w.w_h, th_x, th_h)
+        mcol = awk[:, None]
+        h = jnp.where(mcol, nh.astype(jnp.int16), h)
+        xh = jnp.where(mcol, nxh.astype(jnp.int16), xh)
+        hh = jnp.where(mcol, nhh.astype(jnp.int16), hh)
+        m = jnp.where(mcol, nm, m)
+        z = jnp.int32(0)
+        return ((h, xh, hh, m),
+                (h, jnp.where(awk, jnp.sum(mask_x, -1).astype(jnp.int32), z),
+                 jnp.where(awk, jnp.sum(mask_h, -1).astype(jnp.int32), z)))
+
+    m0 = jnp.concatenate([state.m_x, state.m_h], axis=-1)
+    (h, xh, hh, m), (hs, nz_dx, nz_dh) = jax.lax.scan(
+        body, (state.h, state.x_hat, state.h_hat, m0), (xs_codes, awake))
     final = DeltaState(h=h, x_hat=xh, h_hat=hh,
                        m_x=m[:, :3 * H], m_h=m[:, 3 * H:])
     return hs, final, nz_dx, nz_dh

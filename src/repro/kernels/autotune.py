@@ -203,10 +203,17 @@ def record(kernel: str, shape: tuple[int, ...], dtype: str, threshold,
         "speedup": float(default_us / tuned_us) if tuned_us else None,
         "recorded_unix": time.time(),
     }
-    tmp = path.with_suffix(".tmp")
-    tmp.write_text(json.dumps({"schema": SCHEMA_VERSION,
-                               "entries": entries}, indent=2) + "\n")
-    tmp.replace(path)
+    # Writer-unique tmp name: concurrent tuners (separate processes
+    # sharing one cache file) must never interleave writes into the
+    # same tmp file — each stages its own complete blob and the atomic
+    # rename makes last-writer-wins the worst case, never corruption.
+    tmp = path.with_suffix(f".{os.getpid()}.tmp")
+    try:
+        tmp.write_text(json.dumps({"schema": SCHEMA_VERSION,
+                                   "entries": entries}, indent=2) + "\n")
+        tmp.replace(path)
+    finally:
+        tmp.unlink(missing_ok=True)
     clear_memo()
     return key
 

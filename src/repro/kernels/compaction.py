@@ -1,0 +1,214 @@
+"""Event-driven active-slot compaction for the sequence-resident ΔGRU.
+
+The IC's headline claim is that temporal sparsity removes *work*, not
+just MACs: a silent stream should not even enter the recurrence.  Our
+kernels still visit every frame of every stream — a VAD-clamped slot
+(sample-and-hold features → Δx = 0 exactly) spends full kernel time
+producing an unchanged hidden state.  This module adds the missing
+execution mode: per chunk, slots that provably do nothing are SKIPPED,
+the remaining active slots are gathered into a dense compacted batch,
+the existing kernel runs on that batch only, and the results are
+scattered back — **bit-identical to the dense path by construction**.
+
+Why this is exact and not an approximation (DESIGN.md §13): a frame
+with a zero input delta still evolves h through the gates (M is held,
+but h ← u⊙h + (1−u)⊙c keeps contracting toward the fixed point c), so
+"Δx = 0" alone licenses nothing.  Two conditions together do:
+
+  1. **Held input** — every frame of the chunk lies inside the Δ-encoder
+     dead zone of the slot's CARRIED x̂:  max_t |x_t − x̂₀| ≤ Δ_TH.
+     Then x̂ never advances (induction: frame 0 transmits nothing, so
+     x̂₁ = x̂₀, so frame 1 compares against the same memory, …) and the
+     whole chunk's computation depends only on the carried state.
+  2. **Probe fixed point** — running the REAL kernel for exactly one
+     frame from the carried state returns the state bit-unchanged
+     (h, x̂, ĥ, M_x, M_h compared bit-for-bit, NaN-exact via integer
+     views).  Because the step is then a function of state alone (by
+     condition 1), a bitwise fixed point at frame 0 is a bitwise fixed
+     point at every subsequent frame — the slot's outputs are
+     hs[t] = h₀, nz = 0, state unchanged, with no further computation.
+
+Slots failing either condition run through the kernel untouched, so a
+stream whose h is still converging is merely not accelerated — never
+wrong.  The compacted batch is padded up to a power of two (bounding
+jit recompiles to log₂B shapes per geometry); batch-row gather/scatter
+is exact because every kernel row is computed independently of its
+batch neighbors — the same invariance the tuned-vs-default block-size
+conformance tests already lock.
+
+Entry point: ``delta_gru_scan(..., event_driven=True)`` (float) and
+``int_gru_scan(..., event_driven=True)`` (integer codes) — both route
+through :func:`event_driven_seq` with a backend-specific ``run``
+closure.  Host-level by necessity (dynamic shapes cannot live under
+jit), so this is the OFFLINE/bench execution mode; the serving step's
+in-jit analogue is the stage-0 wake cascade (``launch.streaming``).
+
+Telemetry: module-level counters (``reset_counters``/``counters``)
+record frames entering the kernel vs frames served — the
+frames-entered-kernel axis of ``BENCH_cascade.json``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import numpy as np
+
+_UINT_VIEW = {2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+class CompactionReport(NamedTuple):
+    """What one event-driven chunk actually executed."""
+
+    n_slots: int          # batch rows served
+    n_skipped: int        # rows proven quiescent and skipped
+    frames_total: int     # frames × slots the caller asked for
+    frames_entered: int   # frames × rows that entered the kernel
+    probe_frames: int     # 1-frame probe rows spent proving skips
+
+
+_COUNTERS = {"chunks": 0, "slots_total": 0, "slots_skipped": 0,
+             "frames_total": 0, "frames_entered": 0, "probe_frames": 0}
+
+
+def reset_counters() -> None:
+    """Zero the cumulative event-driven telemetry counters."""
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
+
+
+def counters() -> dict:
+    """Cumulative telemetry since the last ``reset_counters()``:
+    chunks, slots_total/slots_skipped, frames_total/frames_entered and
+    probe_frames (probe rows are charged to frames_entered too)."""
+    return dict(_COUNTERS)
+
+
+def _bits(a: np.ndarray) -> np.ndarray:
+    """Bit-pattern view: floats reinterpreted as uints so ±0.0 and NaN
+    payloads compare EXACTLY (np equality would launder -0.0 == +0.0)."""
+    if a.dtype.kind == "f":
+        return a.view(_UINT_VIEW[a.dtype.itemsize])
+    return a
+
+
+def _rows_equal(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """(B, ...) × (B, ...) → (B,) bool, bitwise per-row equality."""
+    eq = _bits(np.ascontiguousarray(a)) == _bits(np.ascontiguousarray(b))
+    return eq.reshape(eq.shape[0], -1).all(axis=1)
+
+
+def held_slots(xs: np.ndarray, x_hat: np.ndarray, threshold) -> np.ndarray:
+    """Condition 1: per-slot dead-zone check, (T, B, I) × (B, I) → (B,).
+
+    True where EVERY frame of every channel sits inside the Δ-encoder
+    dead zone of the carried memory: |x_t − x̂₀| ≤ Δ_TH for all t.  The
+    comparison mirrors the kernel's transmit predicate (transmit iff
+    |diff| > th) in the kernel's arithmetic: float32 IEEE ops for the
+    float path, exact integer differences for code operands — a NaN
+    input compares un-held (NaN ≤ th is False), i.e. never skipped.
+    """
+    xs = np.asarray(xs)
+    x_hat = np.asarray(x_hat)
+    if xs.dtype.kind == "f":
+        diff = np.abs(xs.astype(np.float32) - x_hat.astype(np.float32)[None])
+        inside = diff <= np.float32(threshold)
+    else:
+        diff = np.abs(xs.astype(np.int64) - x_hat.astype(np.int64)[None])
+        inside = diff <= int(threshold)
+    return inside.reshape(xs.shape[0], xs.shape[1], -1).all(axis=(0, 2))
+
+
+def _pad_count(k: int, cap: int) -> int:
+    """Pad a compacted batch up to the next power of two (≤ cap) so the
+    jit sees at most log₂cap distinct batch shapes per geometry."""
+    n = 1
+    while n < k:
+        n *= 2
+    return min(n, cap)
+
+
+def _gather(arrs: Sequence[np.ndarray], idx: np.ndarray, pad_to: int):
+    """Batch-gather rows ``idx`` from each array, padding by repeating
+    the first gathered row (pad results are computed and discarded)."""
+    if len(idx) < pad_to:
+        idx = np.concatenate([idx, np.repeat(idx[:1], pad_to - len(idx))])
+    return [np.ascontiguousarray(a[idx]) for a in arrs]
+
+
+def event_driven_seq(run: Callable, xs, state: Sequence, held: np.ndarray):
+    """Run one chunk event-driven: skip proven-quiescent slots, compact
+    the rest, and scatter — bit-identical to ``run`` on the full batch.
+
+    Args:
+      run: the dense executor, ``run(xs (T, k, I), state 5-tuple of
+        (k, ...) arrays) -> (hs (T, k, H), state', nz_dx (T, k),
+        nz_dh (T, k))`` — a closure over weights/threshold/backend that
+        accepts any batch size k and any T ≥ 1 (the 1-frame probe and
+        the compacted main run reuse it unchanged).
+      xs: (T, B, I) chunk inputs (float values or integer codes).
+      state: 5-sequence of carried per-slot state arrays, each with
+        leading batch axis B — (h, x̂, ĥ, m_x, m_h).
+      held: (B,) bool from :func:`held_slots` — slots whose whole chunk
+        sits inside the Δ dead zone (candidates; the probe decides).
+
+    Returns ``(hs, state', nz_dx, nz_dh, CompactionReport)`` as numpy
+    arrays, bit-identical to the dense run (skipped slots: hs[t] = h₀,
+    nz = 0, state unchanged — exactly what the dense path would have
+    produced, per the module-level proof).  Module counters accumulate
+    the report.
+    """
+    xs = np.asarray(xs)
+    state = [np.asarray(s) for s in state]
+    T, B = xs.shape[0], xs.shape[1]
+    held = np.asarray(held, bool)
+    report_probe = 0
+
+    skip = np.zeros((B,), bool)
+    cand = np.flatnonzero(held)
+    if T > 0 and cand.size:
+        pad = _pad_count(cand.size, B)
+        probe_in = _gather([xs[0]], cand, pad)[0][None]      # (1, pad, I)
+        probe_state = _gather(state, cand, pad)
+        p_hs, p_state, _, _ = run(probe_in, probe_state)
+        del p_hs
+        fixed = np.ones((pad,), bool)
+        for before, after in zip(probe_state, p_state):
+            fixed &= _rows_equal(np.asarray(after), before)
+        skip[cand] = fixed[:cand.size]
+        report_probe = pad
+
+    active = np.flatnonzero(~skip)
+    hs_dtype = state[0].dtype
+    H = state[0].shape[1]
+    hs = np.broadcast_to(state[0][None], (T, B, H)).copy().astype(hs_dtype)
+    nz_dx = np.zeros((T, B), np.int32)
+    nz_dh = np.zeros((T, B), np.int32)
+    out_state = [s.copy() for s in state]
+
+    if T > 0 and active.size:
+        pad = _pad_count(active.size, B)
+        xs_rows = _gather([xs.swapaxes(0, 1)], active, pad)[0]  # (pad, T, I)
+        a_state = _gather(state, active, pad)
+        a_hs, a_state_out, a_nzx, a_nzh = run(
+            np.ascontiguousarray(xs_rows.swapaxes(0, 1)), a_state)
+        k = active.size
+        hs[:, active] = np.asarray(a_hs)[:, :k]
+        nz_dx[:, active] = np.asarray(a_nzx)[:, :k]
+        nz_dh[:, active] = np.asarray(a_nzh)[:, :k]
+        for dst, src in zip(out_state, a_state_out):
+            dst[active] = np.asarray(src)[:k]
+        frames_entered = T * pad
+    else:
+        frames_entered = 0
+
+    rep = CompactionReport(
+        n_slots=B, n_skipped=int(skip.sum()), frames_total=T * B,
+        frames_entered=frames_entered + report_probe,
+        probe_frames=report_probe)
+    _COUNTERS["chunks"] += 1
+    _COUNTERS["slots_total"] += B
+    _COUNTERS["slots_skipped"] += rep.n_skipped
+    _COUNTERS["frames_total"] += rep.frames_total
+    _COUNTERS["frames_entered"] += rep.frames_entered
+    _COUNTERS["probe_frames"] += rep.probe_frames
+    return hs, out_state, nz_dx, nz_dh, rep

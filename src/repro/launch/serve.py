@@ -37,6 +37,16 @@ rate and false alarms per hour at the configured operating point
 (Δ_TH × fire/release thresholds), next to the measured VAD duty cycle,
 temporal sparsity and modeled energy per decision.
 
+KWS-CASCADE mode stacks the two-stage wake cascade on top of detect
+(DESIGN.md §13): a micro stage-0 ΔGRU (16 units, ``--s0-channels``
+features, binary keyword-ish/background head) runs always-on inside the
+same fused step and WAKES the 64-unit stage-1 network only around
+candidate events (``--wake-threshold`` / ``--sleep-threshold``
+hysteresis plus ``--hangover-frames``); asleep frames hold stage-1
+state bit-exactly and cost nothing in the energy model.  The run
+reports the stage-1 duty cycle and the per-stage energy split next to
+the detect metrics.
+
 With ``--devices N`` (and, on a CPU host,
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported before
 launch) the SAME loop drives the sharded engine: the slot pool is
@@ -254,6 +264,51 @@ def _prep_kws_model(args, frame_level: bool = False):
     return cfg, fex, params, bundle
 
 
+def _train_stage0(args, fex):
+    """Quick-train the always-on stage-0 micro model for kws-cascade:
+    a 16-unit ΔGRU over the first ``--s0-channels`` feature channels
+    with a BINARY head (any-keyword vs background), trained on the same
+    synthetic continuous streams as stage-1 but with collapsed labels.
+    Returns (cfg0, params0)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.data.continuous import synth_frame_batch
+    from repro.models import kws
+    from repro.train import optimizer as opt
+
+    cfg0 = dataclasses.replace(get_config("deltakws"),
+                               vocab_size=2, d_model=16)
+    params0, _ = kws.init_kws(jax.random.PRNGKey(7), cfg0,
+                              input_dim=args.s0_channels)
+    if not args.train_steps:
+        return cfg0, params0
+    rng = np.random.default_rng(7)
+    int8 = args.numerics == "int8"
+    ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
+                           total_steps=args.train_steps)
+    state = opt.init(params0)
+
+    @jax.jit
+    def step(params, state, feats, labels):
+        (_, m), g = jax.value_and_grad(kws.frame_loss_fn, has_aux=True)(
+            params, cfg0, {"feats": feats, "frame_labels": labels}, 0.1,
+            qat=int8)
+        params, state, _ = opt.update(ocfg, g, state, params)
+        return params, state
+
+    print(f"training stage-0 wake model for {args.train_steps} steps "
+          f"(16 units, {args.s0_channels} channels, binary head"
+          f"{', QAT' if int8 else ''}) ...")
+    for _ in range(args.train_steps):
+        audio, labels = synth_frame_batch(rng, 32)
+        feats = fex(jnp.asarray(audio))[..., :args.s0_channels]
+        params0, state = step(params0, state, feats,
+                              jnp.asarray((labels != 0).astype(np.int32)))
+    return cfg0, params0
+
+
 def _session_extras(args):
     """Shared fault-tolerance wiring for the KWS mains: (supervisor,
     input_policy, injector) from the CLI flags."""
@@ -282,7 +337,6 @@ def _kws_audio_main(args) -> int:
     from repro.data.gscd import synth_batch
     from repro.launch.mesh import make_slot_mesh
     from repro.launch.streaming import SlotScheduler, StreamingKwsSession
-    from repro.models import kws
 
     cfg, fex, params, bundle = _prep_kws_model(args)
 
@@ -308,7 +362,9 @@ def _kws_audio_main(args) -> int:
     real_frames = UTT_SAMPLES // fex.cfg.frame_shift   # frames of real audio
     # slot -> [chunks consumed, real frames left to vote on]
     progress: dict[int, list] = {}
-    votes = np.zeros((args.slots, kws.N_CLASSES), np.int64)
+    # The head's class count rides the session (derived from the FC
+    # weight shape) so an 11/35-class model serves unchanged.
+    votes = np.zeros((args.slots, sess.n_classes), np.int64)
     done: list[tuple[int, int]] = []            # (request, predicted class)
 
     def admit():
@@ -352,7 +408,7 @@ def _kws_audio_main(args) -> int:
             # (short final chunk) would bias toward the silence response.
             n_real = min(n_f, st[1])
             votes[slot] += np.bincount(v[:n_real, slot],
-                                       minlength=kws.N_CLASSES)
+                                       minlength=sess.n_classes)
             st[1] -= n_real
             frames_served += n_real
             pad_frames += n_f - n_real
@@ -495,11 +551,119 @@ def _kws_detect_main(args) -> int:
     return 0
 
 
+def _kws_cascade_main(args) -> int:
+    """Two-stage wake-cascade serving (DESIGN.md §13): the detect loop
+    with an always-on stage-0 micro-ΔGRU waking the stage-1 network only
+    around candidate events.  Scores the same deployment metrics as
+    kws-detect and additionally reports the stage-1 duty cycle and the
+    per-stage energy split."""
+    import numpy as np
+    from repro.data.continuous import make_streams
+    from repro.data.gscd import FS
+    from repro.frontend.vad import VADConfig, VAD_OFF
+    from repro.launch.mesh import make_slot_mesh
+    from repro.launch.streaming import CascadeConfig, StreamingKwsSession
+    from repro.models.detector import (DetectorConfig, det_point,
+                                       fires_from_events, pool_points)
+
+    cfg, fex, params, bundle = _prep_kws_model(args, frame_level=True)
+    if bundle is not None:
+        print("WARNING: serving a promoted bundle through the cascade "
+              "head — stage-0 is still quick-trained here (bundles carry "
+              "no wake model)")
+    _, params0 = _train_stage0(args, fex)
+    shift = fex.cfg.frame_shift
+
+    streams = make_streams(args.seed, args.slots,
+                           duration_s=args.stream_seconds,
+                           snr_db=args.snr_db,
+                           events_per_min=args.events_per_min)
+    n_samples = min(len(s.audio) for s in streams)
+    n_samples -= n_samples % shift
+
+    det = DetectorConfig(fire_threshold=args.fire_threshold,
+                         release_threshold=args.release_threshold)
+    vad = (VAD_OFF if args.no_vad
+           else VADConfig(energy_threshold=args.vad_threshold))
+    cas = CascadeConfig(wake_threshold=args.wake_threshold,
+                        sleep_threshold=args.sleep_threshold,
+                        hangover_frames=args.hangover_frames,
+                        s0_threshold=args.s0_threshold,
+                        s0_channels=args.s0_channels)
+    supervisor, input_policy, injector = _session_extras(args)
+    mesh = make_slot_mesh(args.devices) if args.devices != 1 else None
+    sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
+                               batch=args.slots, fex=fex, mesh=mesh,
+                               numerics=args.numerics, bundle=bundle,
+                               detector=det, vad=vad,
+                               cascade=cas, stage0_params=params0,
+                               supervisor=supervisor,
+                               input_policy=input_policy)
+
+    chunk = args.chunk_samples - args.chunk_samples % shift or shift
+    fires = [[] for _ in range(args.slots)]
+    frame_base = 0
+    t0 = time.time()
+    for off in range(0, n_samples, chunk):
+        block = np.stack([s.audio[off:off + chunk] for s in streams])
+        pieces, actions = ([block], []) if injector is None \
+            else injector.inject(block)
+        for act in actions:
+            if act.kind == "stall":
+                time.sleep(act.detail)
+            elif act.kind == "churn_storm":
+                sess.reset_streams(list(act.slots))
+        for piece in pieces:
+            out = sess.process_audio(piece)
+            ev = np.asarray(out.events)         # ONE fetch per chunk
+            for slot in range(args.slots):
+                fires[slot] += fires_from_events(ev[:, slot], frame_base)
+            frame_base += ev.shape[0]
+    dt = time.time() - t0
+
+    tol = int(round(args.tol_s * FS / shift))
+    point = pool_points([
+        det_point(fires[slot], streams[slot].truth_frames(shift),
+                  frame_base, tol_frames=tol, frame_s=shift / FS)
+        for slot in range(args.slots)])
+    summ = sess.summary()
+    audio_s = args.slots * n_samples / FS
+    print(f"cascade: {args.slots} stream(s) x {n_samples / FS:.0f} s "
+          f"({point.hours:.3f} h audio) in {dt:.1f} s on "
+          f"{sess.n_shards} device(s) [{args.numerics}] — "
+          f"{audio_s / dt:.1f}x realtime")
+    print(f"operating point Δ_TH={sess.threshold} "
+          f"wake={cas.wake_threshold} sleep={cas.sleep_threshold} "
+          f"hang={cas.hangover_frames} "
+          f"fire={det.fire_threshold} release={det.release_threshold}: "
+          f"{point.n_events} events, {point.hits} hits, "
+          f"{point.misses} misses (miss rate {point.miss_rate:.2f}), "
+          f"{point.false_alarms} false alarms "
+          f"({point.fa_per_hour:.1f} FA/hr)")
+    print(f"stage-1 duty {summ.stage1_duty:.3f} "
+          f"({summ.frames_entered_stage1}/{summ.frames} frames awake), "
+          f"vad duty {summ.vad_duty:.3f}, "
+          f"stream sparsity {summ.sparsity:.3f}")
+    print(f"{summ.energy_nj_per_decision:.1f} nJ/decision "
+          f"(stage-0 {summ.s0_energy_nj_per_decision:.2f} nJ, "
+          f"FEx {summ.fex_energy_nj_per_decision:.1f} nJ, "
+          f"VAD {summ.vad_energy_nj_per_decision:.2f} nJ), "
+          f"modeled latency {summ.latency_ms:.2f} ms")
+    if summ.recoveries or injector is not None:
+        print(f"robustness: {summ.recoveries} slot recoveries "
+              f"{summ.recovery_reasons or '{}'}, "
+              f"{len(sess.unhealthy_slots())} unhealthy"
+              + (", counters overflowed" if summ.overflowed else ""))
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     """The serve CLI (separate from ``main`` so the README docs-sanity
     test can parse every documented command line against it)."""
     ap = argparse.ArgumentParser(prog="repro.launch.serve")
-    ap.add_argument("--mode", choices=["lm", "kws-audio", "kws-detect"],
+    ap.add_argument("--mode",
+                    choices=["lm", "kws-audio", "kws-detect",
+                             "kws-cascade"],
                     default="lm")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--slots", type=int, default=4,
@@ -549,6 +713,21 @@ def build_parser() -> argparse.ArgumentParser:
                          "isolates the detector from the energy knob)")
     ap.add_argument("--tol-s", type=float, default=0.5,
                     help="fire-to-event matching tolerance in seconds")
+    # kws-cascade options (DESIGN.md §13)
+    ap.add_argument("--wake-threshold", type=float, default=0.5,
+                    help="stage-0 posterior that WAKES stage-1")
+    ap.add_argument("--sleep-threshold", type=float, default=0.25,
+                    help="stage-0 posterior below which an awake stage-1 "
+                         "starts its hangover countdown (hysteresis)")
+    ap.add_argument("--hangover-frames", type=int, default=15,
+                    help="frames stage-1 stays awake after stage-0 drops "
+                         "below the sleep threshold")
+    ap.add_argument("--s0-channels", type=int, default=4,
+                    help="leading FEx channels fed to the stage-0 micro "
+                         "model (its whole input width)")
+    ap.add_argument("--s0-threshold", type=float, default=0.05,
+                    help="stage-0 delta threshold — fixed; the "
+                         "degradation ladder moves stage-1 only")
     ap.add_argument("--seed", type=int, default=100,
                     help="stream-synthesis seed (one stream per slot)")
     # fault tolerance / overload (DESIGN.md §11)
@@ -604,7 +783,7 @@ def validate_args(args):
     if args.slots % args.devices:
         raise ValueError(f"--slots ({args.slots}) must divide by "
                          f"--devices ({args.devices})")
-    if args.mode == "kws-detect":
+    if args.mode in ("kws-detect", "kws-cascade"):
         if args.fire_threshold <= args.release_threshold:
             raise ValueError(
                 f"--fire-threshold ({args.fire_threshold}) must exceed "
@@ -620,6 +799,21 @@ def validate_args(args):
             raise ValueError(f"--snr-db must be finite, got {args.snr_db}")
         if args.tol_s < 0:
             raise ValueError(f"--tol-s must be >= 0, got {args.tol_s}")
+    if args.mode == "kws-cascade":
+        if args.sleep_threshold > args.wake_threshold:
+            raise ValueError(
+                f"--sleep-threshold ({args.sleep_threshold}) must not "
+                f"exceed --wake-threshold ({args.wake_threshold}): an "
+                f"inverted wake hysteresis band never sleeps")
+        if args.hangover_frames < 0:
+            raise ValueError(f"--hangover-frames must be >= 0, "
+                             f"got {args.hangover_frames}")
+        if args.s0_channels < 1:
+            raise ValueError(f"--s0-channels must be >= 1, "
+                             f"got {args.s0_channels}")
+        if not math.isfinite(args.s0_threshold) or args.s0_threshold < 0:
+            raise ValueError(f"--s0-threshold must be finite and >= 0, "
+                             f"got {args.s0_threshold}")
     if args.watchdog_ms < 0:
         raise ValueError(f"--watchdog-ms must be >= 0, got {args.watchdog_ms}")
     if args.faults:
@@ -642,6 +836,8 @@ def main(argv=None):
         return _kws_audio_main(args)
     if args.mode == "kws-detect":
         return _kws_detect_main(args)
+    if args.mode == "kws-cascade":
+        return _kws_cascade_main(args)
 
     import jax
     import jax.numpy as jnp

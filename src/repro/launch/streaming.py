@@ -91,7 +91,8 @@ import numpy as np
 
 from repro.core import delta_gru as dg
 from repro.core import fixed_point as fp
-from repro.core.energy_model import fex_energy_nj, frame_cost, vad_energy_nj
+from repro.core.energy_model import (cascade_frame_cost, fex_energy_nj,
+                                     frame_cost, vad_energy_nj)
 from repro.core.quantize import quantize_audio_12b
 from repro.frontend.fex import (FeatureExtractor, FExConfig, FExState,
                                 _pack_state, _unpack_state, fex_scan,
@@ -129,6 +130,8 @@ class DetectResult(NamedTuple):
     nz: Array       # (frames, batch) transmitted deltas per frame
     events: Array   # (frames, batch) int32 — fired class id, -1 = none
     gate: Array     # (frames, batch) bool — VAD gate (True = open)
+    awake: Any = None  # (frames, batch) bool stage-1 wake trace
+                       #   (cascade sessions only; None otherwise)
 
 
 class StreamInputError(ValueError):
@@ -136,6 +139,86 @@ class StreamInputError(ValueError):
     non-finite samples, un-decodable dtypes, or out-of-range integer
     codes.  Raised BEFORE anything reaches the device, so a hostile
     chunk cannot poison carried stream state."""
+
+
+# ------------------------------------------------- two-stage wake cascade --
+class CascadeConfig(NamedTuple):
+    """Policy of the stage-0 → stage-1 wake cascade (DESIGN.md §13).
+
+    A ~16-unit always-on micro-ΔGRU (stage 0) watches a reduced channel
+    set and scores every frame for "an event might be here"; the big
+    stage-1 network only runs while that score says so.  Hysteresis +
+    hangover keep stage 1 powered across the body of a candidate event
+    so the detection head sees a contiguous posterior trace.
+
+    wake_threshold: stage-0 event posterior at/above which an asleep
+      slot WAKES stage 1 (this frame already runs awake).
+    sleep_threshold: posterior at/above which an awake slot stays awake
+      with its hangover refreshed; must be <= wake_threshold (the
+      hysteresis band that stops flapping mid-keyword).
+    hangover_frames: frames stage 1 stays powered after the score drops
+      below sleep_threshold — covers keyword tails and brief dips.
+    s0_threshold: stage-0's own Δ_TH (fixed — the ``set_threshold``
+      degradation lever moves only the stage-1 operating point).
+    s0_channels: leading FEx channels stage 0 taps (the paper's
+      reduced-channel always-on configuration; must match the stage-0
+      model's input width).
+    """
+
+    wake_threshold: float = 0.5
+    sleep_threshold: float = 0.25
+    hangover_frames: int = 15
+    s0_threshold: float = 0.0
+    s0_channels: int = 4
+
+
+class CascadeState(NamedTuple):
+    """Per-slot cascade state, device-resident like every other stream
+    state: the wake latch + hangover countdown, and the stage-0
+    micro-ΔGRU's own delta state (float or integer codes)."""
+
+    awake: Array        # (B,) bool — stage 1 powered
+    hang: Array         # (B,) int32 hangover countdown
+    s0: dg.DeltaState   # stage-0 carried delta state
+
+
+def init_cascade_state(batch: int, s0_gru, *, int8: bool) -> CascadeState:
+    """Fresh cascade state: everyone asleep, stage-0 state zeroed (M
+    seeded at the stage-0 bias, like any fresh ΔGRU stream)."""
+    I = s0_gru.w_x.shape[0]
+    H = s0_gru.w_h.shape[0]
+    s0 = (fp.init_int_delta_state(batch, I, H, s0_gru) if int8
+          else dg.init_delta_state(batch, I, H, s0_gru))
+    return CascadeState(awake=jnp.zeros((batch,), bool),
+                        hang=jnp.zeros((batch,), jnp.int32), s0=s0)
+
+
+def cascade_wake_scan(cfg: CascadeConfig, awake: Array, hang: Array,
+                      score: Array):
+    """The wake/sleep state machine over one chunk of stage-0 scores.
+
+    score: (F, B) stage-0 event posteriors.  Per frame: a score at/above
+    ``wake_threshold`` wakes the slot; an awake slot holds while the
+    score stays at/above ``sleep_threshold`` (hangover refreshed) and
+    for ``hangover_frames`` more frames after it drops; otherwise it
+    sleeps.  Causal — frame t's wake decision uses frame t's score, so
+    the stage-1 mask for the chunk is available before stage 1 runs.
+
+    Returns ``(awake_trace (F, B) bool, awake', hang')`` — the per-frame
+    stage-1 power mask plus the carried latch/countdown.
+    """
+
+    def body(carry, s):
+        awake, hang = carry
+        wake = s >= cfg.wake_threshold
+        hold = awake & (s >= cfg.sleep_threshold)
+        new_awake = wake | hold | (awake & (hang > 0))
+        hang = jnp.where(wake | hold, jnp.int32(cfg.hangover_frames),
+                         jnp.maximum(hang - 1, 0))
+        return (new_awake, hang), new_awake
+
+    (awake, hang), trace = jax.lax.scan(body, (awake, hang), score)
+    return trace, awake, hang
 
 
 # --------------------------------------------------------- health bitmask --
@@ -302,12 +385,15 @@ class _Accum(NamedTuple):
     does the final reduction.
     """
 
-    macs: _Count         # ΔGRU MACs actually executed
+    macs: _Count         # (stage-1) ΔGRU MACs actually executed
     macs_dense: _Count   # dense-equivalent MACs
     frames: _Count       # decisions made
     fex_samples: _Count  # raw audio samples through the FEx
     vad_open: _Count     # frame-slots the VAD gate was open
                          #   (== frames when no VAD is gating)
+    s0_macs: _Count      # stage-0 micro-ΔGRU MACs (0 without a cascade)
+    awake: _Count        # frame-slots stage 1 was powered
+                         #   (== frames when no cascade is gating)
 
 
 @dataclasses.dataclass
@@ -322,6 +408,9 @@ class StreamSummary:
     fex_energy_nj_per_decision: float = 0.0
     vad_duty: float = 1.0                  # gate-open fraction of frames
     vad_energy_nj_per_decision: float = 0.0
+    stage1_duty: float = 1.0               # stage-1 awake fraction (cascade)
+    s0_energy_nj_per_decision: float = 0.0  # always-on stage-0 cost
+    frames_entered_stage1: int = 0         # frame-slots stage 1 executed
     overflowed: bool = False               # any telemetry counter saturated
     recoveries: int = 0                    # slots auto-reset by supervisor
     recovery_reasons: dict = dataclasses.field(default_factory=dict)
@@ -340,10 +429,13 @@ def _classify(w_fc, b_fc, hs, stats):
 
 
 def _bump(acc: _Accum, stats, n_frames: int, n_samples: int,
-          vad_open=None) -> _Accum:
+          vad_open=None, awake=None, s0_macs=0) -> _Accum:
     """Accumulate one chunk's telemetry.  ``vad_open`` is the device-side
     count of gate-open frame-slots (detect mode); ungated paths count
-    every frame as open so ``vad_duty`` reads 1.0.
+    every frame as open so ``vad_duty`` reads 1.0.  ``awake``/``s0_macs``
+    are the cascade's stage-1 power count and stage-0 MAC count —
+    cascade-free paths default to every frame awake (duty 1.0) and zero
+    stage-0 work, so their telemetry is unchanged.
 
     Per-chunk deltas are summed as int32 — the per-frame MAC counts are
     exact small floats, and casting BEFORE the reduction keeps a big
@@ -360,6 +452,8 @@ def _bump(acc: _Accum, stats, n_frames: int, n_samples: int,
         fex_samples=_count_add(acc.fex_samples, n_samples),
         vad_open=_count_add(acc.vad_open,
                             n_frames if vad_open is None else vad_open),
+        s0_macs=_count_add(acc.s0_macs, s0_macs),
+        awake=_count_add(acc.awake, n_frames if awake is None else awake),
     )
 
 
@@ -473,18 +567,24 @@ def _process_audio_chunk(gru: dg.DeltaGRUParams, w_fc, b_fc, coef,
 
 
 def _detect_tail(w_fc, b_fc, hs, stats, gate, *, logit_frac=None,
-                 det_cfg: DetectorConfig, det_state: DetectorState):
+                 det_cfg: DetectorConfig, det_state: DetectorState,
+                 awake=None):
     """Shared back half of the detect steps: FC → posterior smoothing →
     hysteresis events.  ``logit_frac`` set = integer FC on hidden CODES
-    (the decision head consumes the dequantized — grid-exact — logits)."""
+    (the decision head consumes the dequantized — grid-exact — logits).
+    ``awake`` (cascade sessions) masks fires on asleep frames: a frozen
+    stage-1 h keeps emitting its held logits, and a keyword event may
+    not fire while stage 0 says nothing is happening."""
     if logit_frac is None:
         cls = _classify(w_fc, b_fc, hs, stats)
     else:
         cls = _classify_int(w_fc, b_fc, hs, stats, logit_frac)
     post = jax.nn.softmax(cls.logits, axis=-1)       # (F, B, K)
     det_state, events = detector_scan(det_cfg, det_state, post)
+    if awake is not None:
+        events = jnp.where(awake, events, jnp.int32(-1))
     out = DetectResult(logits=cls.logits, votes=cls.votes, nz=cls.nz,
-                       events=events, gate=gate)
+                       events=events, gate=gate, awake=awake)
     return det_state, out
 
 
@@ -564,6 +664,122 @@ def _process_audio_chunk_detect_int(gru: fp.IntGruWeights, w_fc, b_fc, coef,
     return fex_state, state, vad_state, det_state, acc, out, health
 
 
+def _process_audio_chunk_cascade(gru: dg.DeltaGRUParams, w_fc, b_fc,
+                                 gru0: dg.DeltaGRUParams, w_fc0, b_fc0,
+                                 coef, fex_state: FExState,
+                                 state: dg.DeltaState,
+                                 cas_state: CascadeState,
+                                 vad_state: VADState,
+                                 det_state: DetectorState, acc: _Accum,
+                                 audio, *, threshold: float, backend: str,
+                                 fex_backend: str, interpret: bool | None,
+                                 frame_shift: int, env_alpha: float,
+                                 log_eps: float, vad_cfg: VADConfig,
+                                 det_cfg: DetectorConfig,
+                                 cas_cfg: CascadeConfig):
+    """Fused TWO-STAGE cascade step (DESIGN.md §13): audio → FEx → VAD →
+    always-on stage-0 micro-ΔGRU → wake state machine → wake-gated
+    stage-1 ΔGRU → FC → detection head, one jitted graph.  Stage 0 runs
+    every frame on its reduced channel set; stage 1 executes only on
+    awake frames — asleep slots keep their entire delta state bit-frozen
+    and execute zero stage-1 MACs (``masked_delta_gru_scan``)."""
+    in_bad = jnp.any(~jnp.isfinite(audio), axis=1)   # pre-quantizer
+    audio = quantize_audio_12b(audio.astype(jnp.float32))
+    energy = frame_energy(audio, frame_shift)        # (F, B)
+    feats, fex_state = fex_scan(
+        audio, coef, fex_state, frame_shift=frame_shift,
+        env_alpha=env_alpha, log_eps=log_eps, compress=True,
+        backend=fex_backend, interpret=interpret)
+    xs = jnp.moveaxis(feats, 1, 0)                   # (F, B, C)
+    xs, gate, vad_state = vad_gate(xs, energy, vad_state, vad_cfg)
+    # Stage 0: always on, leading-channel subset, its own Δ_TH.
+    xs0 = xs[..., :cas_cfg.s0_channels]
+    hs0, s0_state, stats0 = dg.delta_gru_scan(
+        gru0, xs0, threshold=cas_cfg.s0_threshold, state=cas_state.s0,
+        backend=backend, interpret=interpret)
+    score = jax.nn.softmax(hs0 @ w_fc0 + b_fc0, axis=-1)[..., 1]
+    awake_t, awake, hang = cascade_wake_scan(cas_cfg, cas_state.awake,
+                                             cas_state.hang, score)
+    hs, state, stats = dg.masked_delta_gru_scan(gru, xs, threshold, state,
+                                                awake_t)
+    det_state, out = _detect_tail(w_fc, b_fc, hs, stats, gate,
+                                  det_cfg=det_cfg, det_state=det_state,
+                                  awake=awake_t)
+    decisions = xs.shape[0] * xs.shape[1]
+    acc = _bump(acc, stats, decisions, decisions * frame_shift,
+                vad_open=jnp.sum(gate), awake=jnp.sum(awake_t),
+                s0_macs=jnp.sum(stats0.macs.astype(jnp.int32)))
+    health = slot_health(in_bad, fex_state, state, vad_state, det_state)
+    health |= slot_health(jnp.zeros_like(in_bad), None, s0_state,
+                          None, None)
+    cas_state = CascadeState(awake=awake, hang=hang, s0=s0_state)
+    return (fex_state, state, cas_state, vad_state, det_state, acc, out,
+            health)
+
+
+def _process_audio_chunk_cascade_int(gru: fp.IntGruWeights, w_fc, b_fc,
+                                     gru0: fp.IntGruWeights, w_fc0, b_fc0,
+                                     coef, fex_state: FExState,
+                                     state: dg.DeltaState,
+                                     cas_state: CascadeState,
+                                     vad_state: VADState,
+                                     det_state: DetectorState,
+                                     acc: _Accum, audio, *,
+                                     threshold: float, backend: str,
+                                     fex_backend: str,
+                                     interpret: bool | None,
+                                     frame_shift: int, gfmt: fp.GruFormats,
+                                     ffmt: fp.FexFormats,
+                                     gfmt0: fp.GruFormats,
+                                     vad_cfg: VADConfig,
+                                     det_cfg: DetectorConfig,
+                                     cas_cfg: CascadeConfig):
+    """Integer mirror of ``_process_audio_chunk_cascade``: both stages
+    run the deployed code-domain datapath (stage 0 through its OWN
+    promoted formats ``gfmt0`` — its own golden fixed-point path), the
+    wake machine scores dequantized — grid-exact — stage-0 logits, and
+    asleep slots freeze their integer stage-1 state bit-for-bit
+    (``masked_int_gru_scan``)."""
+    in_bad = jnp.any(~jnp.isfinite(audio), axis=1)   # pre-quantizer
+    audio = quantize_audio_12b(audio.astype(jnp.float32))
+    energy = frame_energy(audio, frame_shift)        # float — pre-codes
+    audio_codes = fp.to_code(audio, ffmt.feat_frac, 16, jnp.int16)
+    feats, fex_buf = fp.int_fex_scan(
+        audio_codes, coef, _pack_state(fex_state), ffmt,
+        frame_shift=frame_shift, backend=fex_backend, interpret=interpret)
+    xs = jnp.moveaxis(feats, 1, 0)                   # (F, B, C) codes
+    xs, gate, vad_state = vad_gate(xs, energy, vad_state, vad_cfg)
+    xs0 = xs[..., :cas_cfg.s0_channels]
+    hs0, s0_state, nzx0, nzh0 = fp.int_gru_scan(
+        gru0, gfmt0, xs0, cas_cfg.s0_threshold, state=cas_state.s0,
+        backend=backend, interpret=interpret)
+    logits0 = fp.from_code(fp.int_fc(hs0, w_fc0, b_fc0), gfmt0.logit_frac)
+    score = jax.nn.softmax(logits0, axis=-1)[..., 1]
+    awake_t, awake, hang = cascade_wake_scan(cas_cfg, cas_state.awake,
+                                             cas_state.hang, score)
+    hs, state, nz_dx, nz_dh = fp.masked_int_gru_scan(
+        gru, gfmt, xs, threshold, state, awake_t)
+    stats = dg._stats_from_counts(nz_dx, nz_dh, xs.shape[-1],
+                                  gru.w_h.shape[0])
+    stats0 = dg._stats_from_counts(nzx0, nzh0, xs0.shape[-1],
+                                   gru0.w_h.shape[0])
+    det_state, out = _detect_tail(w_fc, b_fc, hs, stats, gate,
+                                  logit_frac=gfmt.logit_frac,
+                                  det_cfg=det_cfg, det_state=det_state,
+                                  awake=awake_t)
+    decisions = xs.shape[0] * xs.shape[1]
+    acc = _bump(acc, stats, decisions, decisions * frame_shift,
+                vad_open=jnp.sum(gate), awake=jnp.sum(awake_t),
+                s0_macs=jnp.sum(stats0.macs.astype(jnp.int32)))
+    fex_state = _unpack_state(fex_buf)
+    health = slot_health(in_bad, fex_state, state, vad_state, det_state)
+    health |= slot_health(jnp.zeros_like(in_bad), None, s0_state,
+                          None, None)
+    cas_state = CascadeState(awake=awake, hang=hang, s0=s0_state)
+    return (fex_state, state, cas_state, vad_state, det_state, acc, out,
+            health)
+
+
 @jax.jit
 def _reset_gru_slots(state: dg.DeltaState, bias, mask) -> dg.DeltaState:
     """Fresh-stream state for every slot where ``mask`` is True.
@@ -620,6 +836,17 @@ def _reset_det_slots(state: DetectorState, mask) -> DetectorState:
         refract=jnp.where(mask, jnp.int32(0), state.refract))
 
 
+@jax.jit
+def _reset_cascade_slots(state: CascadeState, bias0, mask) -> CascadeState:
+    """Fresh cascade state for masked slots (see _reset_gru_slots):
+    asleep, no hangover, stage-0 delta state zeroed with its M seeded at
+    the stage-0 bias — bit-identical to a fresh stream's cascade."""
+    return CascadeState(
+        awake=jnp.where(mask, False, state.awake),
+        hang=jnp.where(mask, jnp.int32(0), state.hang),
+        s0=_reset_gru_slots(state.s0, bias0, mask))
+
+
 class StreamingKwsSession:
     """Carries FEx + ΔGRU state and telemetry on device across chunks.
 
@@ -667,6 +894,23 @@ class StreamingKwsSession:
         the ΔGRU delta path during silence (detect mode only; default
         ``VADConfig()``; pass ``vad=VAD_OFF`` to disable gating while
         keeping the detection head).
+      cascade: a ``CascadeConfig`` enabling the two-stage wake cascade
+        (DESIGN.md §13) on top of detection mode: an always-on stage-0
+        micro-ΔGRU (trained on ``cascade.s0_channels`` leading FEx
+        channels, binary event/no-event head) scores every frame, and
+        the big stage-1 network executes only while the wake state
+        machine says a candidate event is live — asleep slots keep
+        their entire stage-1 delta state bit-frozen and execute zero
+        stage-1 MACs.  Requires ``detector`` (the cascade gates the
+        always-on pipeline) and ``stage0_params``.  Per-stage energy is
+        priced by ``core.energy_model.cascade_frame_cost`` in
+        ``summary()``.
+      stage0_params: the stage-0 micro model's parameter tree (a
+        ``models.kws.init_kws`` tree with ``vocab_size=2`` and the
+        reduced ``d_model``/input width).  Under ``numerics="int8"`` it
+        is promoted through its own golden fixed-point path
+        (``core.fixed_point.promote_kws``) at session creation, so both
+        stages serve the deployed code-domain datapath.
       supervisor: a ``SupervisorConfig`` enabling the self-healing
         supervisor (DESIGN.md §11): the per-slot health mask the fused
         step emits is fetched every ``check_every`` chunks, and slots
@@ -701,6 +945,8 @@ class StreamingKwsSession:
                  bundle: fp.IntKwsBundle | None = None,
                  detector: DetectorConfig | None = None,
                  vad: VADConfig | None = None,
+                 cascade: CascadeConfig | None = None,
+                 stage0_params=None,
                  supervisor: SupervisorConfig | None = None,
                  input_policy: str = "reject"):
         if numerics not in ("float32", "int8"):
@@ -718,6 +964,26 @@ class StreamingKwsSession:
                 f"({detector.release_threshold}) must be <= fire_threshold "
                 f"({detector.fire_threshold}) — an inverted band degrades "
                 f"the head into a refractory-paced pulse generator")
+        if cascade is not None:
+            if detector is None:
+                raise ValueError("the wake cascade gates the always-on "
+                                 "pipeline: pass a DetectorConfig "
+                                 "alongside the CascadeConfig")
+            if stage0_params is None:
+                raise ValueError("cascade mode needs the stage-0 micro "
+                                 "model: pass stage0_params")
+            if cascade.sleep_threshold > cascade.wake_threshold:
+                raise ValueError(
+                    f"inverted wake hysteresis: sleep_threshold "
+                    f"({cascade.sleep_threshold}) must be <= "
+                    f"wake_threshold ({cascade.wake_threshold})")
+            if cascade.hangover_frames < 0:
+                raise ValueError("hangover_frames must be >= 0")
+            s0_in = int(np.asarray(stage0_params["w_x"]).shape[0])
+            if s0_in != cascade.s0_channels:
+                raise ValueError(
+                    f"stage-0 model consumes {s0_in} channels but "
+                    f"cascade.s0_channels={cascade.s0_channels}")
         self._detector = detector
         self._vad = (vad if vad is not None else VADConfig()) \
             if detector is not None else None
@@ -742,7 +1008,27 @@ class StreamingKwsSession:
         else:
             self._gru, self._w_fc, self._b_fc = kws.serving_weights(
                 params, quantize_8b, mesh)
+        # The class count rides the FC head's shape — an 11/35-class (or
+        # 2-class stage-0) head serves through the same session code.
+        self.n_classes = int(self._b_fc.shape[-1])
+        self._cascade = cascade
+        self._bundle0 = None
+        if cascade is not None:
+            if numerics == "int8":
+                # Stage 0 gets its OWN promotion: per-tensor exponents
+                # from its own trained dynamic range (gfmt0 ≠ gfmt).
+                self._bundle0 = fp.promote_kws(stage0_params,
+                                               cascade.s0_threshold)
+                self._gru0 = shp.put_replicated(self._bundle0.gru, mesh)
+                self._w_fc0, self._b_fc0 = shp.put_replicated(
+                    (self._bundle0.w_fc, self._bundle0.b_fc), mesh)
+            else:
+                self._gru0, self._w_fc0, self._b_fc0 = \
+                    kws.serving_weights(stage0_params, quantize_8b, mesh)
+            self._s0_hidden = int(self._gru0.w_h.shape[0])
+            self._s0_classes = int(self._b_fc0.shape[-1])
         self._state: dg.DeltaState | None = None
+        self._cas_state: CascadeState | None = None
         self._coef = None                           # replicated FEx coeffs
         self._fex_state: FExState | None = None
         self._vad_state: VADState | None = None
@@ -785,6 +1071,8 @@ class StreamingKwsSession:
         """
         det_kw = ({"vad_cfg": self._vad, "det_cfg": self._detector}
                   if self._detector is not None else {})
+        if self._cascade is not None:
+            det_kw["cas_cfg"] = self._cascade
         if self.numerics == "int8":
             if self._backend not in ("pallas", "xla"):
                 raise ValueError(f"unknown ΔGRU backend: {self._backend!r}")
@@ -792,9 +1080,13 @@ class StreamingKwsSession:
                 _process_chunk_int, threshold=threshold,
                 gfmt=self._bundle.gfmt, backend=self._backend,
                 interpret=self._interpret)
-            audio_fn = (_process_audio_chunk_detect_int
-                        if self._detector is not None
-                        else _process_audio_chunk_int)
+            if self._cascade is not None:
+                audio_fn = _process_audio_chunk_cascade_int
+                det_kw["gfmt0"] = self._bundle0.gfmt
+            else:
+                audio_fn = (_process_audio_chunk_detect_int
+                            if self._detector is not None
+                            else _process_audio_chunk_int)
             audio_step_fn = functools.partial(
                 audio_fn, threshold=threshold,
                 backend=self._backend, fex_backend=self._fex_backend,
@@ -803,9 +1095,12 @@ class StreamingKwsSession:
             step_fn = functools.partial(
                 _process_chunk, threshold=threshold,
                 backend=self._backend, interpret=self._interpret)
-            audio_fn = (_process_audio_chunk_detect
-                        if self._detector is not None
-                        else _process_audio_chunk)
+            if self._cascade is not None:
+                audio_fn = _process_audio_chunk_cascade
+            else:
+                audio_fn = (_process_audio_chunk_detect
+                            if self._detector is not None
+                            else _process_audio_chunk)
             audio_step_fn = functools.partial(
                 audio_fn, threshold=threshold,
                 backend=self._backend, fex_backend=self._fex_backend,
@@ -818,6 +1113,14 @@ class StreamingKwsSession:
     def _build_audio_step(self, audio_step_fn):
         """Jit + shard the fused audio step once the FEx kwargs are known."""
         fn = functools.partial(audio_step_fn, **self._fex_kw)
+        if self._cascade is not None:
+            # _process_audio_chunk_cascade[_int](gru, w_fc, b_fc, gru0,
+            # w_fc0, b_fc0, coef, fex_state, state, cas_state, vad_state,
+            # det_state, acc, audio): five state trees + acc + audio are
+            # slot-major; both stages' weights are replicated.
+            return jax.jit(self._shard(
+                fn, n_args=14, slot_major=(7, 8, 9, 10, 11, 12, 13),
+                time_major=(), n_state_out=6))
         if self._detector is not None:
             # _process_audio_chunk_detect[_int](gru, w_fc, b_fc, coef,
             # fex_state, state, vad_state, det_state, acc, audio):
@@ -987,7 +1290,14 @@ class StreamingKwsSession:
                     init_vad_state(self.batch, fcfg.n_active, hold_dtype),
                     self.mesh)
                 self._det_state = shp.put_slot_sharded(
-                    init_detector_state(self.batch, kws.N_CLASSES),
+                    init_detector_state(self.batch, self.n_classes),
+                    self.mesh)
+            if self._cascade is not None:
+                s0_gru = (self._bundle0.gru if self.numerics == "int8"
+                          else self._gru0)
+                self._cas_state = shp.put_slot_sharded(
+                    init_cascade_state(self.batch, s0_gru,
+                                       int8=self.numerics == "int8"),
                     self.mesh)
             # Re-enter the cache now that the FEx kwargs are known —
             # this builds (and caches) the fused audio step.
@@ -1061,13 +1371,24 @@ class StreamingKwsSession:
         self._audio_rem = audio[:, n_frames * shift:]
         if n_frames == 0:
             z = jnp.zeros((0, self.batch), jnp.int32)
-            logits = jnp.zeros((0, self.batch, kws.N_CLASSES))
+            logits = jnp.zeros((0, self.batch, self.n_classes))
+            if self._cascade is not None:
+                return DetectResult(logits=logits, votes=z, nz=z, events=z,
+                                    gate=jnp.zeros((0, self.batch), bool),
+                                    awake=jnp.zeros((0, self.batch), bool))
             if self._detector is not None:
                 return DetectResult(logits=logits, votes=z, nz=z, events=z,
                                     gate=jnp.zeros((0, self.batch), bool))
             return ChunkResult(logits=logits, votes=z, nz=z)
         block = jnp.asarray(audio[:, :n_frames * shift])
-        if self._detector is not None:
+        if self._cascade is not None:
+            (self._fex_state, self._state, self._cas_state, self._vad_state,
+             self._det_state, self._acc, out, health) = self._audio_step(
+                self._gru, self._w_fc, self._b_fc,
+                self._gru0, self._w_fc0, self._b_fc0, self._coef,
+                self._fex_state, self._state, self._cas_state,
+                self._vad_state, self._det_state, self._acc, block)
+        elif self._detector is not None:
             (self._fex_state, self._state, self._vad_state, self._det_state,
              self._acc, out, health) = self._audio_step(
                 self._gru, self._w_fc, self._b_fc, self._coef,
@@ -1142,7 +1463,13 @@ class StreamingKwsSession:
                                self._vad_state.hold.dtype), self.mesh)
         if self._det_state is not None:
             self._det_state = shp.put_slot_sharded(
-                init_detector_state(self.batch, kws.N_CLASSES), self.mesh)
+                init_detector_state(self.batch, self.n_classes), self.mesh)
+        if self._cas_state is not None:
+            s0_gru = (self._bundle0.gru if self.numerics == "int8"
+                      else self._gru0)
+            self._cas_state = shp.put_slot_sharded(
+                init_cascade_state(self.batch, s0_gru,
+                                   int8=self.numerics == "int8"), self.mesh)
         self._acc = shp.put_slot_sharded(_zero_accum(self.n_shards),
                                          self.mesh)
         self._chunks = 0
@@ -1192,6 +1519,9 @@ class StreamingKwsSession:
             self._vad_state = _reset_vad_slots(self._vad_state, mask)
         if self._det_state is not None:
             self._det_state = _reset_det_slots(self._det_state, mask)
+        if self._cas_state is not None:
+            self._cas_state = _reset_cascade_slots(self._cas_state,
+                                                   self._gru0.b, mask)
         if self._audio_rem is not None and self._audio_rem.shape[1]:
             self._audio_rem[slots] = 0.0
         self._strikes[slots] = 0          # a reset slot restarts clean
@@ -1304,11 +1634,28 @@ class StreamingKwsSession:
         vad_nj = (vad_energy_nj(float(totals["fex_samples"])) / frames
                   if self._vad is not None
                   and self._vad.energy_threshold >= 0 else 0.0)
+        cascade_kw: dict = {}
+        energy_nj, latency_ms = c.energy_nj_per_decision, c.latency_ms
+        if self._cascade is not None:
+            # Two-stage pricing: stage-0 always on, stage-1 FC/SRAM
+            # duty-weighted by the awake fraction.  ``macs`` already
+            # counts only awake stage-1 frames (the masked scan zeroes
+            # asleep stats), so macs_pf is the executed average.
+            duty = totals["awake"] / frames
+            cc = cascade_frame_cost(
+                totals["s0_macs"] / frames, macs_pf, duty,
+                s0_hidden=self._s0_hidden, s0_classes=self._s0_classes,
+                s1_hidden=int(self._gru.w_h.shape[0]),
+                s1_classes=self.n_classes, n_channels=n_ch)
+            energy_nj, latency_ms = cc.energy_nj_per_decision, cc.latency_ms
+            cascade_kw = dict(stage1_duty=duty,
+                              s0_energy_nj_per_decision=cc.s0_energy_nj,
+                              frames_entered_stage1=totals["awake"])
         return StreamSummary(
             frames=totals["frames"], chunks=self._chunks,
             sparsity=1.0 - totals["macs"] / max(totals["macs_dense"], 1),
-            energy_nj_per_decision=c.energy_nj_per_decision + vad_nj,
-            latency_ms=c.latency_ms,
+            energy_nj_per_decision=energy_nj + vad_nj,
+            latency_ms=latency_ms,
             dense_energy_nj=frame_cost(dense_pf,
                                        n_channels=n_ch).energy_nj_per_decision,
             fex_samples=totals["fex_samples"],
@@ -1318,6 +1665,7 @@ class StreamingKwsSession:
                 float(totals["fex_samples"]), n_ch) / frames,
             vad_duty=totals["vad_open"] / frames,
             vad_energy_nj_per_decision=vad_nj,
+            **cascade_kw,
             **robust,
         )
 

@@ -29,16 +29,21 @@ CLASSES = ["silence", "unknown", "down", "go", "left", "no",
 
 
 def init_kws(key, cfg, input_dim: int = 10):
-    """cfg.d_model = GRU hidden size (64 in the paper)."""
+    """cfg.d_model = GRU hidden size (64 in the paper); cfg.vocab_size =
+    FC head width (12 for the paper's GSCD head — but the head is fully
+    parameterized: an 11-class head, a 35-class GSCD-v2 head or the
+    2-class stage-0 wake gate all train/promote/serve through the same
+    code, the class count riding the weight shapes end to end)."""
     k1, k2 = jax.random.split(key)
+    n_classes = getattr(cfg, "vocab_size", N_CLASSES)
     gru = dg.init_delta_gru(k1, input_dim, cfg.d_model)
     t = AxTree()
     t.add("w_x", gru.w_x, (None, None))
     t.add("w_h", gru.w_h, (None, None))
     t.add("b", gru.b, (None,))
-    t.add("w_fc", jax.random.normal(k2, (cfg.d_model, N_CLASSES)) /
+    t.add("w_fc", jax.random.normal(k2, (cfg.d_model, n_classes)) /
           np.sqrt(cfg.d_model), (None, None))
-    t.add("b_fc", jnp.zeros((N_CLASSES,)), (None,))
+    t.add("b_fc", jnp.zeros((n_classes,)), (None,))
     return t.build()
 
 

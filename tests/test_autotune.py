@@ -3,6 +3,7 @@ validation, platform resolution — and the property that makes tuning safe
 at all: every tuned config is bit-identical to the default config, in
 both float and integer numerics (DESIGN.md §12)."""
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -283,3 +284,52 @@ def test_resolution_logged_once(monkeypatch, caplog):
             if "pallas execution mode" in r.message]
     assert len(msgs) == 1
     assert "platform=" in msgs[0].message
+
+
+# ------------------------------------------------- concurrent writers
+_RACER = r"""
+import os, sys
+sys.path.insert(0, {src!r})
+from repro.kernels import autotune
+tag = int(sys.argv[1])
+for i in range(30):
+    autotune.record("delta_gru_seq", (8, 64, 64), "float32", 0.1 * tag,
+                    {{"block_b": 8, "block_h": 16}},
+                    tuned_us=10.0 + i, default_us=20.0)
+print("done", tag)
+"""
+
+
+def test_concurrent_writers_never_corrupt_cache(cache, tmp_path):
+    """Two PROCESSES hammering ``record`` against one cache file: the
+    per-writer tmp + atomic-rename protocol means the worst case is a
+    lost update (last writer wins), NEVER a torn/corrupt file — the
+    final cache parses, and lookups succeed without raising."""
+    import pathlib
+    import subprocess
+    import sys
+
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    script = tmp_path / "racer.py"
+    script.write_text(_RACER.format(src=src))
+    env = dict(os.environ, REPRO_AUTOTUNE_CACHE=str(cache))
+    procs = [subprocess.Popen([sys.executable, str(script), str(tag)],
+                              env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE)
+             for tag in (1, 2)]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+        assert b"done" in out
+
+    # The file is a complete, schema-correct blob from ONE writer.
+    blob = json.loads(cache.read_text())
+    assert blob["schema"] == autotune.SCHEMA_VERSION
+    assert isinstance(blob["entries"], dict) and blob["entries"]
+    # No leftover staging files.
+    assert not list(cache.parent.glob("*.tmp"))
+    # Lookup never raises, and the surviving writer's entry is served.
+    autotune.clear_memo()
+    hits = [autotune.lookup("delta_gru_seq", (8, 64, 64), "float32",
+                            0.1 * tag) for tag in (1, 2)]
+    assert any(h == {"block_b": 8, "block_h": 16} for h in hits)

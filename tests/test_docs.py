@@ -76,11 +76,13 @@ def test_serve_commands_parse_against_the_cli():
     parser = serve.build_parser()
     for cmd in (commands.SERVE_CMD, commands.SERVE_SHARDED_CMD,
                 commands.SERVE_INT8_CMD, commands.SERVE_BUNDLE_CMD,
-                commands.SERVE_DETECT_CMD, commands.SERVE_FAULTS_CMD):
+                commands.SERVE_DETECT_CMD, commands.SERVE_FAULTS_CMD,
+                commands.SERVE_CASCADE_CMD):
         words = _split_env(cmd)
         flags = words[words.index("repro.launch.serve") + 1:]
         args = parser.parse_args(flags)
         expect_mode = ("kws-detect" if cmd is commands.SERVE_DETECT_CMD
+                       else "kws-cascade" if cmd is commands.SERVE_CASCADE_CMD
                        else "kws-audio")
         assert args.mode == expect_mode, \
             f"documented command serves the wrong mode: {cmd}"
@@ -91,6 +93,9 @@ def test_serve_commands_parse_against_the_cli():
         if cmd is commands.SERVE_DETECT_CMD:
             assert args.fire_threshold > args.release_threshold, \
                 "hysteresis band must be open at the documented defaults"
+        if cmd is commands.SERVE_CASCADE_CMD:
+            assert args.wake_threshold >= args.sleep_threshold, \
+                "wake band must be non-inverted at the documented defaults"
 
 
 def test_train_promote_command_parses_and_feeds_serve_bundle():

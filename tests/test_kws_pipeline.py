@@ -98,3 +98,56 @@ def test_11_class_metric(trained):
     logits, _ = kws.forward(params, cfg, feats)
     acc11 = float(kws.accuracy_11class(logits, labels))
     assert 0.0 <= acc11 <= 1.0
+
+
+@pytest.mark.parametrize("n_classes", [11, 35])
+def test_head_width_parameterized_train_promote_serve(n_classes):
+    """The FC head width rides cfg.vocab_size end to end: an 11-class
+    or 35-class (GSCD-v2) head trains, promotes to int8 and serves
+    through the SAME code paths as the paper's 12-class head."""
+    import dataclasses
+    from repro.core import fixed_point as fp
+    from repro.launch.streaming import StreamingKwsSession
+
+    cfg = dataclasses.replace(get_config("deltakws"),
+                              vocab_size=n_classes)
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(KEY, cfg, input_dim=fex.cfg.n_active)
+    assert params["w_fc"].shape[-1] == n_classes
+
+    # Train: a few steps prove grads flow through the resized head.
+    ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=2,
+                           total_steps=5)
+    state = opt.init(params)
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def step(params, state, feats, labels):
+        (loss, m), g = jax.value_and_grad(kws.loss_fn, has_aux=True)(
+            params, cfg, {"feats": feats, "labels": labels}, TRAIN_TH)
+        params, state, _ = opt.update(ocfg, g, state, params)
+        return params, state, loss
+
+    loss = None
+    for _ in range(5):
+        audio, labels = synth_batch(rng, 16)
+        params, state, loss = step(params, state, fex(jnp.asarray(audio)),
+                                   jnp.asarray(labels) % n_classes)
+    assert np.isfinite(float(loss))
+
+    # Promote: the bundle inherits the head width from the weights.
+    bundle = fp.promote_kws(params, 0.1)
+    assert bundle.w_fc.shape[-1] == n_classes
+    assert bundle.b_fc.shape[-1] == n_classes
+
+    # Serve: both numerics, logits/votes sized by the session's head.
+    audio, _ = synth_batch(rng, 1)
+    for numerics in ("float32", "int8"):
+        sess = StreamingKwsSession(params, cfg, threshold=0.1, batch=1,
+                                   fex=fex, numerics=numerics)
+        assert sess.n_classes == n_classes
+        out = sess.process_audio(audio)
+        assert np.asarray(out.logits).shape[-1] == n_classes
+        votes = np.bincount(np.asarray(out.votes)[:, 0],
+                            minlength=sess.n_classes)
+        assert votes.shape == (n_classes,)
