@@ -58,20 +58,27 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 FRAME_SHIFT = 128
 
 
-def _make_engine(params, cfg, fex, mesh, slots, args):
-    """A serving engine + load generator; returns a one-step closure.
+def _make_engine(params, cfg, fex, mesh, slots, args, depth=1):
+    """A serving engine + load generator; returns (step closure, engine).
 
-    Each call performs one full serve step — build the chunk block, run
-    the fused device step, fetch votes (the response path), evict
-    finished utterances, admit from the queue — and returns (response
-    seconds, total seconds, frames emitted).
+    Each step call performs one full serve step through the async
+    ``PipelinedEngine`` (``launch.engine``, DESIGN.md §14) — build the
+    chunk block, dispatch the fused device step, drain whatever fell
+    out of the ``depth``-deep pipeline window, evict finished
+    utterances, admit from the queue — and returns (total seconds,
+    frames dispatched).  ``depth=1`` is the synchronous loop (dispatch
+    then fetch, same code path); the engine carries the latency /
+    host-blocked-phase telemetry for ``_stats``.
     """
     import numpy as np
+    from repro.launch.engine import PipelinedEngine
     from repro.launch.streaming import SlotScheduler, StreamingKwsSession
 
     sess = StreamingKwsSession(params, cfg, threshold=args.threshold,
                                batch=slots, fex=fex, mesh=mesh)
     sched = SlotScheduler(sess)
+    eng = PipelinedEngine(sess, depth=depth, field="votes",
+                          scheduler=sched)
     chunk = args.chunk_samples
     chunks_per_utt = args.chunks_per_utt
     rng = np.random.default_rng(0)
@@ -96,40 +103,49 @@ def _make_engine(params, cfg, fex, mesh, slots, args):
 
     def step():
         t0 = time.perf_counter()
+        eng.begin()
         block = np.zeros((slots, chunk), np.float32)
         for slot in sched.live:
             block[slot] = pool[slot, progress[slot]]
-        out = sess.process_audio(block)
-        votes = np.asarray(out.votes)        # response path: ONE fetch
-        t1 = time.perf_counter()
+        piece_frames, _drained = eng.submit([block])
         for slot in list(sched.live):
             progress[slot] += 1
             if progress[slot] >= chunks_per_utt:
                 sched.evict(slot)            # stream churn mid-measurement
         admit()
+        eng.end()
         assert len(sched.live) == slots      # steady state, every step
-        return t1 - t0, time.perf_counter() - t0, votes.shape[0] * slots
+        return time.perf_counter() - t0, sum(piece_frames) * slots
 
-    return step
+    return step, eng
 
 
-def _stats(samples, slots):
+def _stats(samples, slots, eng):
+    """Per-engine stats row: throughput from the timed step samples,
+    latency percentiles (p50/p99/p99.9 end-to-end decision latency:
+    assemble start → votes host-visible) plus per-phase host-blocked
+    time and shard imbalance from the engine's SLO report."""
     import numpy as np
-    resp_ms = np.array([s[0] for s in samples]) * 1e3
-    tot_s = np.array([s[1] for s in samples])
-    decisions = np.array([s[2] for s in samples])  # engine-reported frames
+    tot_s = np.array([s[0] for s in samples])
+    decisions = np.array([s[1] for s in samples])  # engine-reported frames
     # Steady-state throughput from the MEDIAN full step (incl. churn and
     # admission): on a shared container single GC/scheduler pauses put
     # ±30% on any individual step; the median is the reproducible
     # quantity and — because baseline and sharded steps are interleaved
     # below — noise phases hit both engines equally.
     dec_per_s = float(np.median(decisions)) / float(np.percentile(tot_s, 50))
+    slo = eng.report()
     return {
         "streams": slots,
+        "pipeline_depth": eng.depth,
         "decisions_per_s": dec_per_s,
         "audio_realtime_x": dec_per_s * FRAME_SHIFT / 8000.0,
-        "decision_latency_ms_p50": float(np.percentile(resp_ms, 50)),
-        "decision_latency_ms_p99": float(np.percentile(resp_ms, 99)),
+        "decision_latency_ms_p50": slo["e2e_ms"]["p50"],
+        "decision_latency_ms_p99": slo["e2e_ms"]["p99"],
+        "decision_latency_ms_p999": slo["e2e_ms"]["p999"],
+        "step_latency_ms_p999": slo["step_ms"]["p999"],
+        "host_blocked_ms_per_step": slo["host_blocked_ms_per_step"],
+        "shard_imbalance": slo["shard_imbalance"],
     }
 
 
@@ -160,22 +176,34 @@ def child_main(args) -> None:
     params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
                              input_dim=fex.cfg.n_active)
 
-    base_step = _make_engine(params, cfg, fex, None,
-                             args.slots_per_device, args)
-    engines = [("baseline_1dev", args.slots_per_device, base_step)]
+    # The SCALING rows run at depth=1 (synchronous): interleaving two
+    # ASYNC engines would let engine A's deferred device work execute
+    # inside engine B's blocking fetch, crediting A with time B paid —
+    # the paired-median methodology needs every step to contain its own
+    # device work.  The async engine is measured in its OWN sequential
+    # phase below (1-device child), never interleaved with anything.
+    base_step, base_eng = _make_engine(params, cfg, fex, None,
+                                       args.slots_per_device, args, depth=1)
+    engines = [("baseline_1dev", args.slots_per_device, base_step, base_eng)]
     if n_dev > 1:
-        shard_step = _make_engine(params, cfg, fex, make_slot_mesh(n_dev),
-                                  args.slots_per_device * n_dev, args)
+        shard_step, shard_eng = _make_engine(params, cfg, fex,
+                                             make_slot_mesh(n_dev),
+                                             args.slots_per_device * n_dev,
+                                             args, depth=1)
         engines.append(("sharded", args.slots_per_device * n_dev,
-                        shard_step))
+                        shard_step, shard_eng))
 
     for _ in range(args.warmup_steps):       # compile + admission resets
-        for _name, _slots, step in engines:
+        for _name, _slots, step, _eng in engines:
             step()
-    samples: dict[str, list] = {name: [] for name, _, _ in engines}
+    for _name, _slots, _step, eng in engines:
+        eng.reset_telemetry()                # compile noise out of the SLO
+    samples: dict[str, list] = {name: [] for name, _, _, _ in engines}
     for _ in range(args.timed_steps):        # strictly interleaved pairs
-        for name, _slots, step in engines:
+        for name, _slots, step, _eng in engines:
             samples[name].append(step())
+    for _name, _slots, _step, eng in engines:
+        eng.flush()                          # drain the in-flight tail
 
     row = {
         "devices": n_dev,
@@ -184,12 +212,58 @@ def child_main(args) -> None:
         "frames_per_chunk": frames_per_chunk,
         "steps_timed": args.timed_steps,
     }
-    for name, slots, _step in engines:
-        row[name] = _stats(samples[name], slots)
+    for name, slots, _step, eng in engines:
+        row[name] = _stats(samples[name], slots, eng)
     if n_dev > 1:
         row["decisions_per_s_scaling_vs_1dev"] = (
             row["sharded"]["decisions_per_s"]
             / row["baseline_1dev"]["decisions_per_s"])
+
+    # Sync-vs-async (1-device child): the same workload through a
+    # pipelined engine, as a sequential phase with its own warmup.
+    # Async throughput is decisions / wall INCLUDING the tail flush —
+    # a median async step is mostly host work and would overstate it.
+    depth = 1 if args.sync_loop else args.inflight_depth
+    if n_dev == 1 and depth > 1:
+        async_step, async_eng = _make_engine(params, cfg, fex, None,
+                                             args.slots_per_device, args,
+                                             depth=depth)
+        for _ in range(args.warmup_steps):
+            async_step()
+        async_eng.flush()
+        async_eng.reset_telemetry()
+        t0 = time.perf_counter()
+        a_samples = [async_step() for _ in range(args.timed_steps)]
+        async_eng.flush()
+        wall = time.perf_counter() - t0
+        arow = _stats(a_samples, args.slots_per_device, async_eng)
+        arow["decisions_per_s"] = sum(f for _, f in a_samples) / wall
+        arow["audio_realtime_x"] = (arow["decisions_per_s"]
+                                    * FRAME_SHIFT / 8000.0)
+        row["baseline_1dev_async"] = arow
+        s, a = row["baseline_1dev"], arow
+        s_blk = s["host_blocked_ms_per_step"]["total"]
+        a_blk = a["host_blocked_ms_per_step"]["total"]
+        row["sync_vs_async"] = {
+            "inflight_depth": depth,
+            "host_blocked_ms_per_step_sync": s_blk,
+            "host_blocked_ms_per_step_async": a_blk,
+            "host_blocked_reduction_x": s_blk / max(a_blk, 1e-9),
+            "decisions_per_s_speedup_x": (a["decisions_per_s"]
+                                          / s["decisions_per_s"]),
+            "cores": len(os.sched_getaffinity(0)),
+        }
+        if row["sync_vs_async"]["cores"] == 1:
+            # Total CPU work is conserved on one core: the device step
+            # and the host phases timeshare it, so host-blocked time
+            # per step equals the compute time at EVERY depth and the
+            # measured reduction is pure noise around 1.0x.  The
+            # pipeline needs a second core to cash the overlap
+            # (DESIGN.md §14); record that so the artifact can't be
+            # misread as "async does not help".
+            row["sync_vs_async"]["single_core_note"] = (
+                "1-core container: host-blocked reduction is physically "
+                "bounded at 1.0x here; expect > 1x only with >= 2 cores")
     print(json.dumps(row))
 
 
@@ -210,7 +284,10 @@ def run_parent(args) -> int:
                "--chunk-samples", str(args.chunk_samples),
                "--chunks-per-utt", str(args.chunks_per_utt),
                "--timed-steps", str(args.timed_steps),
-               "--warmup-steps", str(args.warmup_steps)]
+               "--warmup-steps", str(args.warmup_steps),
+               "--inflight-depth", str(args.inflight_depth)]
+        if args.sync_loop:
+            cmd.append("--sync-loop")
         # Best of N repeats: the container shares cores with unrelated
         # work, so any single run can lose tens of percent to scheduling
         # noise; the fastest repeat is the closest view of the engine.
@@ -238,6 +315,16 @@ def run_parent(args) -> int:
             line += (f" — {row['decisions_per_s_scaling_vs_1dev']:.2f}x the "
                      f"in-process 1-device baseline")
         print(line)
+        if "sync_vs_async" in row:
+            sva = row["sync_vs_async"]
+            print(f"  sync vs async (depth {args.inflight_depth}): "
+                  f"host-blocked/step "
+                  f"{sva['host_blocked_ms_per_step_sync']:.2f} → "
+                  f"{sva['host_blocked_ms_per_step_async']:.2f} ms "
+                  f"({sva['host_blocked_reduction_x']:.2f}x less), "
+                  f"throughput {sva['decisions_per_s_speedup_x']:.2f}x"
+                  + (" [1-core: bounded at 1.0x]"
+                     if "single_core_note" in sva else ""))
 
     by_dev = {r["devices"]: r for r in results}
     scaling = None
@@ -245,18 +332,25 @@ def run_parent(args) -> int:
         scaling = by_dev[2]["decisions_per_s_scaling_vs_1dev"]
         print(f"# aggregate decisions/s scaling 1→2 devices: {scaling:.2f}x "
               f"(paired in-process baseline)")
+    sync_vs_async = by_dev.get(1, {}).get("sync_vs_async")
     BENCH_JSON.write_text(json.dumps({
         "note": "virtual-device CPU measurements (kernels in interpret "
                 "mode); the tracked quantity is slot-axis scaling, not "
-                "absolute TPU throughput",
+                "absolute TPU throughput.  Both the scaling ratio and "
+                "the sync-vs-async overlap depend on real cores: on a "
+                "1-core container per-step overhead amortization and "
+                "host/device overlap are both bounded at ~1.0x",
+        "cores": len(os.sched_getaffinity(0)),
         "workload": {
             "slots_per_device": args.slots_per_device,
             "chunk_samples": args.chunk_samples,
             "chunks_per_utt": args.chunks_per_utt,
             "timed_steps": args.timed_steps,
+            "inflight_depth": args.inflight_depth,
         },
         "results": results,
         "decisions_per_s_scaling_1_to_2": scaling,
+        "sync_vs_async": sync_vs_async,
     }, indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}")
 
@@ -267,6 +361,13 @@ def run_parent(args) -> int:
         if strict:
             raise AssertionError(msg)
         print("# WARNING: " + msg)
+    # Advisory only, and only where the win is physically possible: on a
+    # 1-core container total CPU work is conserved, so host-blocked time
+    # cannot drop at any depth (the JSON carries a single_core_note).
+    if (sync_vs_async and "single_core_note" not in sync_vs_async
+            and sync_vs_async["host_blocked_reduction_x"] < 1.0):
+        print("# WARNING: async pipeline did not reduce host-blocked time "
+              f"({sync_vs_async['host_blocked_reduction_x']:.2f}x)")
     return 0
 
 
@@ -307,8 +408,13 @@ def soak_main(args) -> int:
             params, cfg, threshold=args.threshold, batch=slots, fex=fex,
             supervisor=SupervisorConfig(), input_policy="trust")
 
+    from repro.launch.engine import PipelinedEngine
+
     sess = make_session()
     sched = SlotScheduler(sess)
+    eng = PipelinedEngine(sess, depth=1 if args.sync_loop
+                          else args.inflight_depth,
+                          field="votes", scheduler=sched)
     policy = OverloadPolicy(
         thresholds=(args.threshold, args.degrade_threshold),
         max_queue=args.max_queue, watchdog_ms=None)
@@ -338,6 +444,7 @@ def soak_main(args) -> int:
                 req_id += 1
             admit()
             t0 = time.perf_counter()
+            eng.begin()
             block = np.zeros((slots, chunk), np.float32)
             for slot in sched.live:
                 block[slot] = pool[slot, progress[slot] % chunks_per_utt]
@@ -354,9 +461,12 @@ def soak_main(args) -> int:
                     sess.reset_streams(storm)
                     for s in storm:
                         progress[s] = 0
-            for piece in pieces:
-                out = sess.process_audio(piece)
-                frames_host += int(np.asarray(out.votes).shape[0]) * slots
+            # Frame counts come from dispatch-time SHAPES (no fetch):
+            # the decision count stays exact even while the pipeline is
+            # depth-deep in flight.
+            piece_frames, _ = eng.submit(pieces)
+            frames_host += sum(piece_frames) * slots
+            eng.end()
             dt = time.perf_counter() - t0
             if not stalled:
                 lat_s.append(dt)
@@ -380,6 +490,7 @@ def soak_main(args) -> int:
     run_steps(args.soak_steps, faulty=True, arrivals=wave_arrivals)
     # Cooldown: clean audio, no arrivals — drain, heal, release.
     run_steps(args.cooldown_steps, faulty=False, arrivals=lambda s: 0)
+    eng.flush()                              # drain the in-flight tail
 
     summ = sess.summary()
     unrecovered = {s: m for s, m in sess.unhealthy_slots().items()
@@ -485,6 +596,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--chunks-per-utt", type=int, default=2)
     ap.add_argument("--timed-steps", type=int, default=16)
     ap.add_argument("--warmup-steps", type=int, default=4)
+    ap.add_argument("--inflight-depth", type=int, default=2,
+                    help="async pipeline depth (steps in flight) for the "
+                         "1-device child's sequential sync-vs-async phase "
+                         "and the soak loop")
+    ap.add_argument("--sync-loop", action="store_true",
+                    help="force the synchronous depth-1 loop everywhere")
     ap.add_argument("--repeats", type=int, default=4,
                     help="child runs per device count; best is recorded "
                          "(the container's effective core count varies "

@@ -12,7 +12,8 @@ from __future__ import annotations
 INSTALL_CMD = "pip install -r requirements.txt"
 TIER1_CMD = "PYTHONPATH=src python -m pytest -x -q"
 SLOW_TESTS_CMD = ("PYTHONPATH=src python -m pytest -m slow -q "
-                  "tests/test_distributed.py tests/test_serve.py")
+                  "tests/test_distributed.py tests/test_serve.py "
+                  "tests/test_engine.py")
 
 # Quickstart ----------------------------------------------------------------
 QUICKSTART_CMD = "PYTHONPATH=src python examples/quickstart.py"
@@ -29,6 +30,13 @@ SERVE_SHARDED_CMD = (
 SERVE_INT8_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
                   "--mode kws-audio --slots 8 --requests 16 "
                   "--numerics int8")
+# Async pipelined serving (DESIGN.md §14): depth-2 pipeline is the
+# default; --sync-loop is the bit-identical depth-1 escape hatch.
+SERVE_SYNC_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
+                  "--mode kws-audio --slots 8 --requests 16 --sync-loop")
+SERVE_DEEP_PIPELINE_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
+                           "--mode kws-audio --slots 8 --requests 16 "
+                           "--inflight-depth 3")
 
 # Always-on detection (continuous audio in, keyword events out) -------------
 SERVE_DETECT_CMD = ("PYTHONPATH=src python -m repro.launch.serve "
@@ -78,6 +86,8 @@ ALL_COMMANDS = {
     "serve": SERVE_CMD,
     "serve_sharded": SERVE_SHARDED_CMD,
     "serve_int8": SERVE_INT8_CMD,
+    "serve_sync": SERVE_SYNC_CMD,
+    "serve_deep_pipeline": SERVE_DEEP_PIPELINE_CMD,
     "serve_detect": SERVE_DETECT_CMD,
     "detect_bench": DETECT_BENCH_CMD,
     "serve_cascade": SERVE_CASCADE_CMD,

@@ -1,0 +1,447 @@
+"""Async pipelined serving engine: overlap host work with device steps.
+
+The synchronous serve loops in ``launch/serve.py`` run every phase of a
+step back to back — assemble the host block, dispatch the fused device
+step, BLOCK on ``np.asarray(out.votes)``, then do the bookkeeping — so
+audio ingest, device compute and result readback never overlap and the
+fleet runs at the speed of the host's slowest phase.  JAX dispatch is
+asynchronous on every backend: ``process_audio`` returns DEVICE arrays
+immediately, their SHAPES are known without a sync, and only the
+``np.asarray`` fetch blocks.  ``PipelinedEngine`` exploits exactly that:
+
+    step t-1  ··· fetch ─┐                      (drain: mostly a copy)
+    step t    ───────────┼─── computing on device
+    step t+1  ─ assemble ┘    (admissions, faults, audio slicing, host)
+
+While step *t* computes on device, the host assembles the block for
+step *t+1* and drains step *t−1*'s votes via a fetch that by then is
+(mostly) a copy, keeping up to ``depth`` steps in flight.
+
+Bit-identity contract (DESIGN.md §14): the engine issues device
+operations in EXACTLY the order the synchronous loop does — per-step
+pieces, then fault/churn resets, then admission resets — and every
+scheduling decision in the serve loops (eviction at ``chunks_per_utt``,
+admission order, churn-storm restarts) depends only on chunk COUNTS,
+which are known at dispatch time from device-array shapes.  Only the
+vote VALUES arrive late, and they are tallied per stream *incarnation*
+(slot × admission generation) so a slot recycled mid-flight never
+pollutes its predecessor's tally.  ``depth=1`` IS the synchronous loop
+(dispatch, then immediately drain); the conformance suite in
+tests/test_engine.py proves ``depth>=2`` equal to ``depth=1`` decision
+for decision and counter for counter, in float and int8, under churn
+storms, fault plans and mesh>1.
+
+SLO telemetry: the engine tracks per-phase host-blocked time
+(assemble / dispatch / fetch), p50/p99/p99.9 step and end-to-end
+decision latency (assemble start → results host-visible), and the
+scheduler's shard-occupancy imbalance, all against an injectable
+``clock`` so the math is testable with a fake clock.  ``report()``
+feeds ``StreamSummary.slo`` and ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+__all__ = ["PipelinedEngine", "FetchedStep", "percentiles_ms",
+           "warm_session", "run_audio_requests", "run_continuous_detect"]
+
+
+def percentiles_ms(samples_s: Sequence[float]) -> dict:
+    """p50/p99/p99.9 of a latency sample list, seconds in → ms out.
+    Empty input reports zeros (a run that never stepped)."""
+    if not len(samples_s):
+        return {"p50": 0.0, "p99": 0.0, "p999": 0.0}
+    ms = np.asarray(samples_s, np.float64) * 1e3
+    return {"p50": float(np.percentile(ms, 50)),
+            "p99": float(np.percentile(ms, 99)),
+            "p999": float(np.percentile(ms, 99.9))}
+
+
+class FetchedStep:
+    """One drained pipeline step: host-visible arrays + dispatch metadata.
+
+    ``arrays`` holds the fetched numpy array per piece dispatched for
+    the step, in dispatch order; ``piece_frames`` the per-piece frame
+    counts; ``meta`` whatever the driver attached at ``submit`` time
+    (e.g. the per-slot vote contributions decided at dispatch)."""
+
+    __slots__ = ("index", "arrays", "piece_frames", "n_frames", "meta")
+
+    def __init__(self, index, arrays, piece_frames, meta):
+        self.index = index
+        self.arrays = arrays
+        self.piece_frames = piece_frames
+        self.n_frames = sum(piece_frames)
+        self.meta = meta
+
+
+class _InFlight:
+    __slots__ = ("index", "outs", "piece_frames", "meta", "t_begin")
+
+    def __init__(self, index, outs, piece_frames, meta, t_begin):
+        self.index = index
+        self.outs = outs
+        self.piece_frames = piece_frames
+        self.meta = meta
+        self.t_begin = t_begin
+
+
+class PipelinedEngine:
+    """Double-buffered host↔device pipeline around a streaming session.
+
+    Drivers use it as::
+
+        eng = PipelinedEngine(sess, depth=2, field="votes", scheduler=sched)
+        while serving:
+            eng.begin()                     # assemble phase starts
+            block = ...                     # host work (slicing, faults)
+            _, drained = eng.submit([block], meta=...)   # dispatch + drain
+            ...                             # dispatch-time bookkeeping
+            for f in drained: integrate(f)  # results from ~depth steps ago
+            eng.end()                       # step wall-clock sample
+        for f in eng.flush(): integrate(f)
+        sess.attach_slo(eng.report())
+
+    ``depth`` bounds the in-flight window: after ``submit`` returns, at
+    most ``depth - 1`` steps remain unfetched, so ``depth=1`` fetches
+    the step it just dispatched — the synchronous loop, same code path.
+    ``field`` names the result attribute fetched per piece ("votes" for
+    the utterance loop, "events" for detect/cascade).  ``scheduler``
+    (optional) is sampled at every ``end()`` for shard-occupancy
+    imbalance.  ``clock`` is injectable for fake-clock telemetry tests.
+    """
+
+    def __init__(self, session, *, depth: int = 2, field: str = "votes",
+                 scheduler=None,
+                 clock: Callable[[], float] = time.perf_counter):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.session = session
+        self.depth = depth
+        self.field = field
+        self._sched = scheduler
+        self._clock = clock
+        self._queue: list[_InFlight] = []
+        self._index = 0
+        self._t_begin: float | None = None
+        self._t_first: float | None = None
+        self._t_last_end: float | None = None
+        self.assemble_s = 0.0               # host-blocked phase seconds
+        self.dispatch_s = 0.0
+        self.fetch_s = 0.0
+        self._step_s: list[float] = []
+        self._e2e_s: list[float] = []
+        self._imbalance: list[int] = []
+        self.decisions = 0
+
+    # ------------------------------------------------------- phases --
+
+    def begin(self):
+        """Mark the start of a step's host-assemble phase."""
+        self._t_begin = self._clock()
+        if self._t_first is None:
+            self._t_first = self._t_begin
+
+    def submit(self, pieces, meta: Any = None
+               ) -> tuple[list[int], list[FetchedStep]]:
+        """Dispatch one step's pieces and drain anything beyond depth.
+
+        Returns ``(piece_frames, drained)``: the per-piece completed
+        frame counts — available WITHOUT a sync, from the device
+        arrays' shapes — and the fetched steps that fell out of the
+        pipeline window, oldest first.  ``meta`` may be a mutable
+        container the driver fills AFTER submit returns (dispatch-time
+        bookkeeping); it is carried by reference and handed back on the
+        step's ``FetchedStep``.
+        """
+        t_begin = self._t_begin if self._t_begin is not None else self._clock()
+        t0 = self._clock()
+        self.assemble_s += t0 - t_begin
+        outs = [self.session.process_audio(p) for p in pieces]
+        t1 = self._clock()
+        self.dispatch_s += t1 - t0
+        piece_frames = [int(getattr(o, self.field).shape[0]) for o in outs]
+        self.decisions += sum(piece_frames) * self.session.batch
+        self._queue.append(_InFlight(self._index, tuple(outs), piece_frames,
+                                     meta, t_begin))
+        self._index += 1
+        drained = []
+        while len(self._queue) > self.depth - 1:
+            drained.append(self._fetch_oldest())
+        return piece_frames, drained
+
+    def end(self):
+        """Close the step: sample wall time and scheduler imbalance."""
+        if self._t_begin is None:
+            return
+        now = self._clock()
+        self._step_s.append(now - self._t_begin)
+        self._t_last_end = now
+        self._t_begin = None
+        if self._sched is not None:
+            occ = self._sched.occupancy()
+            self._imbalance.append(max(occ) - min(occ))
+
+    def flush(self) -> list[FetchedStep]:
+        """Drain every in-flight step (oldest first) — end of stream."""
+        drained = []
+        while self._queue:
+            drained.append(self._fetch_oldest())
+        return drained
+
+    def _fetch_oldest(self) -> FetchedStep:
+        inf = self._queue.pop(0)
+        t0 = self._clock()
+        arrays = tuple(np.asarray(getattr(o, self.field)) for o in inf.outs)
+        t1 = self._clock()
+        self.fetch_s += t1 - t0
+        self._e2e_s.append(t1 - inf.t_begin)
+        return FetchedStep(inf.index, arrays, inf.piece_frames, inf.meta)
+
+    # ---------------------------------------------------- telemetry --
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._queue)
+
+    def reset_telemetry(self):
+        """Zero the SLO accumulators (keeps the in-flight queue): the
+        benchmarks call this after their warmup steps so compile noise
+        never reaches the reported percentiles."""
+        self.assemble_s = self.dispatch_s = self.fetch_s = 0.0
+        self._step_s = []
+        self._e2e_s = []
+        self._imbalance = []
+        self.decisions = 0
+        self._t_begin = None
+        self._t_first = None
+        self._t_last_end = None
+
+    @property
+    def last_step_s(self) -> float:
+        return self._step_s[-1] if self._step_s else 0.0
+
+    def report(self) -> dict:
+        """The SLO telemetry block (DESIGN.md §14) for
+        ``StreamSummary.slo`` / ``BENCH_serve.json``."""
+        steps = len(self._step_s) or self._index
+        n = max(steps, 1)
+        steady_s = (self._t_last_end - self._t_first
+                    if self._t_last_end is not None
+                    and self._t_first is not None else sum(self._step_s))
+        imb = np.asarray(self._imbalance or [0], np.float64)
+        return {
+            "depth": self.depth,
+            "steps": steps,
+            "decisions": self.decisions,
+            "steady_state_s": steady_s,
+            "decisions_per_s_steady": (self.decisions / steady_s
+                                       if steady_s > 0 else 0.0),
+            "step_ms": percentiles_ms(self._step_s),
+            "e2e_ms": percentiles_ms(self._e2e_s),
+            "host_blocked_ms_per_step": {
+                "assemble": self.assemble_s * 1e3 / n,
+                "dispatch": self.dispatch_s * 1e3 / n,
+                "fetch": self.fetch_s * 1e3 / n,
+                "total": (self.assemble_s + self.dispatch_s + self.fetch_s)
+                * 1e3 / n,
+            },
+            "shard_imbalance": {"mean": float(imb.mean()),
+                                "max": int(imb.max())},
+        }
+
+
+def warm_session(sess, chunk: int) -> float:
+    """Compile the fused audio step OUTSIDE the timed loop.
+
+    Runs one zero block of the serving chunk length through the session,
+    blocks until the compiled step has executed, then resets the session
+    to pristine state (fresh stream state AND telemetry — the warmup
+    chunk leaves no trace; compiled steps are keyed on chunk length and
+    survive the reset).  Returns the warmup wall seconds, which the
+    serve loops report as compile time separate from steady state.
+    """
+    t0 = time.perf_counter()
+    out = sess.process_audio(np.zeros((sess.batch, chunk), np.float32))
+    np.asarray(out.votes)                   # block: compile + first run
+    sess.reset()
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Loop drivers: the two serve-loop shapes, shared by serve.py and the
+# conformance tests, so sync (depth=1) and async (depth>=2) runs are the
+# SAME code path with a different pipeline window.
+
+
+class _Incarnation:
+    """One admitted stream life on a slot: vote tally + chunk progress.
+
+    A churn storm or re-admission starts a NEW incarnation, so a fetch
+    landing after the slot was recycled still credits the life that was
+    live when its chunk was dispatched.  ``progress`` is the sync
+    loop's per-slot [chunks consumed, real frames left to vote on]."""
+
+    __slots__ = ("req", "counts", "progress")
+
+    def __init__(self, req, n_classes, real_frames):
+        self.req = req
+        self.counts = np.zeros(n_classes, np.int64)
+        self.progress = [0, real_frames]
+
+
+def run_audio_requests(sess, sched, ctl, *, audio_q, chunk: int,
+                       chunks_per_utt: int, real_frames: int,
+                       injector=None, depth: int = 1, warm: bool = True,
+                       clock=time.perf_counter):
+    """The continuous-batching utterance loop (kws-audio), pipelined.
+
+    Identical decision semantics to the historical synchronous loop:
+    per step, device ops run in the order [pieces..., churn resets,
+    admission resets]; eviction happens when a slot has consumed
+    ``chunks_per_utt`` chunks (known at dispatch); only real-audio
+    frames vote (``real_frames`` bounds the tally against zero-padding
+    and idle-slot frames).  Vote VALUES are integrated when their step
+    drains, into the incarnation that was live at dispatch.
+
+    Returns ``(done, stats)``: the ordered [(request, predicted class)]
+    list and the loop counters (steps, frames_served, pad_frames,
+    warmup_s) next to the engine's SLO report, which is also attached
+    to the session (``summary().slo``).
+    """
+    eng = PipelinedEngine(sess, depth=depth, field="votes",
+                          scheduler=sched, clock=clock)
+    warmup_s = warm_session(sess, chunk) if warm else 0.0
+
+    incarnations: dict[int, _Incarnation] = {}   # slot -> current life
+    order: list[_Incarnation] = []               # eviction order
+    frames_served = pad_frames = steps = 0
+
+    def integrate(f: FetchedStep):
+        v = (np.concatenate(f.arrays, axis=0) if f.arrays
+             else np.zeros((0, sess.batch), np.int32))
+        for inc, slot, n_real in f.meta:
+            inc.counts += np.bincount(v[:n_real, slot],
+                                      minlength=sess.n_classes)
+
+    def admit():
+        for slot, req in sched.admit():
+            incarnations[slot] = _Incarnation(req, sess.n_classes,
+                                              real_frames)
+
+    admit()
+    while not sched.idle:
+        eng.begin()
+        block = np.zeros((sess.batch, chunk), np.float32)
+        for slot, req in sched.live.items():
+            c0 = incarnations[slot].progress[0]
+            seg = audio_q[req, c0 * chunk:(c0 + 1) * chunk]
+            block[slot, :len(seg)] = seg    # zero-pad a short final chunk
+        pieces, actions = ([block], []) if injector is None \
+            else injector.inject(block)
+        contribs: list[tuple] = []          # filled below, post-submit
+        piece_frames, drained = eng.submit(pieces, meta=contribs)
+        n_f = sum(piece_frames)
+        for act in actions:                 # driver directives
+            if act.kind == "stall":
+                time.sleep(act.detail)
+            elif act.kind == "churn_storm":
+                storm = [s for s in act.slots if s in sched.live]
+                sess.reset_streams(storm)   # poof — streams restart
+                for s in storm:             # same request, new life
+                    incarnations[s] = _Incarnation(sched.live[s],
+                                                   sess.n_classes,
+                                                   real_frames)
+        pad_frames += n_f * (sess.batch - len(sched.live))   # idle slots
+        for slot in list(sched.live):
+            inc = incarnations[slot]
+            st = inc.progress
+            n_real = min(n_f, st[1])
+            contribs.append((inc, slot, n_real))
+            st[1] -= n_real
+            frames_served += n_real
+            pad_frames += n_f - n_real
+            st[0] += 1
+            if st[0] >= chunks_per_utt:
+                sched.evict(slot)
+                order.append(inc)
+        for f in drained:
+            integrate(f)
+        admit()
+        steps += 1
+        eng.end()
+        if ctl is not None:
+            ctl.observe(eng.last_step_s)
+    for f in eng.flush():
+        integrate(f)
+
+    done = [(inc.req, int(inc.counts.argmax())) for inc in order]
+    slo = eng.report()
+    slo["warmup_s"] = warmup_s
+    sess.attach_slo(slo)
+    return done, {"steps": steps, "frames_served": frames_served,
+                  "pad_frames": pad_frames, "warmup_s": warmup_s,
+                  "slo": slo}
+
+
+def run_continuous_detect(sess, streams_audio, *, chunk: int,
+                          n_samples: int, injector=None, depth: int = 1,
+                          warm: bool = True, clock=time.perf_counter):
+    """The always-on detection loop (kws-detect / kws-cascade), pipelined.
+
+    Identical decision semantics to the historical synchronous loops:
+    per step, fault actions (stall / churn resets) are applied BEFORE
+    the pieces are dispatched (the detect loops' order — the audio loop
+    applies them after), and every slot's fires are appended in frame
+    order: per-piece frame offsets advance at dispatch from the pieces'
+    shapes, so the fire positions are exact even though the event
+    values land later.
+
+    Returns ``(fires, frame_base, stats)``: per-slot fire lists (for
+    ``det_point``), the total frame count, and the loop stats + SLO
+    report (also attached to the session summary).
+    """
+    from repro.models.detector import fires_from_events
+
+    eng = PipelinedEngine(sess, depth=depth, field="events", clock=clock)
+    warmup_s = warm_session(sess, chunk) if warm else 0.0
+    slots = sess.batch
+    fires: list[list] = [[] for _ in range(slots)]
+    frame_base = 0
+    steps = 0
+
+    def integrate(f: FetchedStep):
+        for ev, base in zip(f.arrays, f.meta):
+            for slot in range(slots):
+                fires[slot] += fires_from_events(ev[:, slot], base)
+
+    for off in range(0, n_samples, chunk):
+        eng.begin()
+        block = np.stack([s[off:off + chunk] for s in streams_audio])
+        pieces, actions = ([block], []) if injector is None \
+            else injector.inject(block)
+        for act in actions:
+            if act.kind == "stall":
+                time.sleep(act.detail)
+            elif act.kind == "churn_storm":
+                sess.reset_streams(list(act.slots))
+        bases: list[int] = []
+        piece_frames, drained = eng.submit(pieces, meta=bases)
+        for pf in piece_frames:             # offsets fixed at dispatch
+            bases.append(frame_base)
+            frame_base += pf
+        steps += 1
+        eng.end()
+        for f in drained:
+            integrate(f)
+    for f in eng.flush():
+        integrate(f)
+
+    slo = eng.report()
+    slo["warmup_s"] = warmup_s
+    sess.attach_slo(slo)
+    return fires, frame_base, {"steps": steps, "warmup_s": warmup_s,
+                               "slo": slo}

@@ -47,6 +47,16 @@ state bit-exactly and cost nothing in the energy model.  The run
 reports the stage-1 duty cycle and the per-stage energy split next to
 the detect metrics.
 
+All KWS modes serve through the ASYNC PIPELINED ENGINE
+(``launch.engine``, DESIGN.md §14): while one step computes on device
+the host assembles the next block and drains the previous step's
+results, keeping ``--inflight-depth`` steps in flight.  ``--sync-loop``
+is the escape hatch (depth 1 — the classic synchronous loop, same code
+path); decisions and telemetry counters are bit-identical at every
+depth.  The run reports end-to-end AND steady-state throughput
+separately (the compiled step is warmed before the timed loop), with
+p50/p99/p99.9 step + decision latency and per-phase host-blocked time.
+
 With ``--devices N`` (and, on a CPU host,
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported before
 launch) the SAME loop drives the sharded engine: the slot pool is
@@ -335,6 +345,7 @@ def _kws_audio_main(args) -> int:
     import numpy as np
     from repro.data.gscd import T as UTT_SAMPLES
     from repro.data.gscd import synth_batch
+    from repro.launch.engine import run_audio_requests
     from repro.launch.mesh import make_slot_mesh
     from repro.launch.streaming import SlotScheduler, StreamingKwsSession
 
@@ -360,80 +371,48 @@ def _kws_audio_main(args) -> int:
     for req in range(args.requests):
         ctl.submit(req)
     real_frames = UTT_SAMPLES // fex.cfg.frame_shift   # frames of real audio
-    # slot -> [chunks consumed, real frames left to vote on]
-    progress: dict[int, list] = {}
-    # The head's class count rides the session (derived from the FC
-    # weight shape) so an 11/35-class model serves unchanged.
-    votes = np.zeros((args.slots, sess.n_classes), np.int64)
-    done: list[tuple[int, int]] = []            # (request, predicted class)
 
-    def admit():
-        for slot, _req in sched.admit():       # slot-local device reset
-            votes[slot] = 0
-            progress[slot] = [0, real_frames]
-
-    t0 = time.time()
-    steps = frames_served = pad_frames = 0
-    step_s: list[float] = []
-    admit()
-    while not sched.idle:
-        ts = time.perf_counter()
-        block = np.zeros((args.slots, chunk), np.float32)
-        for slot, req in sched.live.items():
-            seg = audio_q[req, progress[slot][0] * chunk:
-                          (progress[slot][0] + 1) * chunk]
-            block[slot, :len(seg)] = seg   # zero-pad a short final chunk
-        pieces, actions = ([block], []) if injector is None \
-            else injector.inject(block)
-        vote_blocks = []
-        for piece in pieces:
-            out = sess.process_audio(piece)
-            vote_blocks.append(np.asarray(out.votes))  # one fetch per chunk
-        v = (np.concatenate(vote_blocks, axis=0) if vote_blocks
-             else np.zeros((0, args.slots), np.int32))
-        for act in actions:                 # driver directives
-            if act.kind == "stall":
-                time.sleep(act.detail)
-            elif act.kind == "churn_storm":
-                storm = [s for s in act.slots if s in sched.live]
-                sess.reset_streams(storm)   # poof — streams restart
-                for s in storm:
-                    votes[s] = 0
-                    progress[s] = [0, real_frames]
-        n_f = v.shape[0]
-        pad_frames += n_f * (args.slots - len(sched.live))  # idle slots
-        for slot, req in list(sched.live.items()):
-            st = progress[slot]
-            # Only frames backed by real audio cast votes — padding frames
-            # (short final chunk) would bias toward the silence response.
-            n_real = min(n_f, st[1])
-            votes[slot] += np.bincount(v[:n_real, slot],
-                                       minlength=sess.n_classes)
-            st[1] -= n_real
-            frames_served += n_real
-            pad_frames += n_f - n_real
-            st[0] += 1
-            if st[0] >= chunks_per_utt:
-                done.append((sched.evict(slot), int(votes[slot].argmax())))
-        admit()
-        steps += 1
-        step_s.append(time.perf_counter() - ts)
-        ctl.observe(step_s[-1])
-    dt = time.time() - t0
+    # The pipelined engine drives the loop at every depth — depth 1 IS
+    # the synchronous loop (--sync-loop), depth >= 2 overlaps assemble /
+    # compute / fetch; decisions are bit-identical either way
+    # (DESIGN.md §14).  The compiled step is warmed (and the session
+    # reset) before the timed region, so dt is pure serving.
+    depth = 1 if args.sync_loop else args.inflight_depth
+    t0 = time.perf_counter()
+    done, stats = run_audio_requests(
+        sess, sched, ctl, audio_q=audio_q, chunk=chunk,
+        chunks_per_utt=chunks_per_utt, real_frames=real_frames,
+        injector=injector, depth=depth)
+    dt = time.perf_counter() - t0
 
     correct = sum(1 for req, pred in done if pred == int(label_q[req]))
     summ = sess.summary()
+    slo = stats["slo"]
+    frames_served = stats["frames_served"]
+    pad_frames = stats["pad_frames"]
     audio_s = len(done) * UTT_SAMPLES / 8000.0
-    # Drop the first step from the percentile view: it carries the jit
-    # compile of the fused audio step, not a serving latency.
-    lat = np.array(step_s[1:] or step_s) * 1e3 if step_s else np.zeros(1)
+    # End-to-end includes the (pre-loop) warmup/compile; steady-state is
+    # the timed serve loop only — report BOTH, separately, instead of
+    # mixing the compile step into one skewed figure.
+    steady_s = max(slo["steady_state_s"], 1e-9)
+    hb = slo["host_blocked_ms_per_step"]
     print(f"served {len(done)} utterances ({audio_s:.0f} s audio) in "
-          f"{dt:.1f} s on {sess.n_shards} device(s) [{args.numerics}] — "
-          f"{audio_s / dt:.1f}x realtime, "
-          f"{frames_served / dt:.0f} decisions/s, "
-          f"step latency p50 {np.percentile(lat, 50):.1f} / "
-          f"p99 {np.percentile(lat, 99):.1f} ms, "
+          f"{dt:.1f} s end-to-end (warmup/compile "
+          f"{stats['warmup_s']:.1f} s) on {sess.n_shards} device(s) "
+          f"[{args.numerics}, pipeline depth {depth}] — "
+          f"{audio_s / dt:.1f}x realtime end-to-end, "
           f"{correct}/{len(done)} correct")
+    print(f"steady-state: {audio_s / steady_s:.1f}x realtime, "
+          f"{frames_served / steady_s:.0f} decisions/s, "
+          f"step latency p50 {slo['step_ms']['p50']:.1f} / "
+          f"p99 {slo['step_ms']['p99']:.1f} / "
+          f"p99.9 {slo['step_ms']['p999']:.1f} ms, "
+          f"e2e decision latency p50 {slo['e2e_ms']['p50']:.1f} / "
+          f"p99.9 {slo['e2e_ms']['p999']:.1f} ms")
+    print(f"host-blocked/step {hb['total']:.1f} ms "
+          f"(assemble {hb['assemble']:.1f}, dispatch {hb['dispatch']:.1f}, "
+          f"fetch {hb['fetch']:.1f}), "
+          f"shard imbalance max {slo['shard_imbalance']['max']}")
     pad_note = (f" [telemetry includes {pad_frames} zero-padding/idle-slot "
                 f"frames]" if pad_frames else "")
     print(f"stream sparsity {summ.sparsity:.3f}, "
@@ -458,14 +437,14 @@ def _kws_detect_main(args) -> int:
     the deployment metrics — miss rate and false alarms per hour at the
     configured operating point — scored against the streams' ground
     truth events."""
-    import numpy as np
     from repro.data.continuous import make_streams
     from repro.data.gscd import FS
     from repro.frontend.vad import VADConfig, VAD_OFF
+    from repro.launch.engine import run_continuous_detect
     from repro.launch.mesh import make_slot_mesh
     from repro.launch.streaming import StreamingKwsSession
     from repro.models.detector import (DetectorConfig, det_point,
-                                       fires_from_events, pool_points)
+                                       pool_points)
 
     cfg, fex, params, bundle = _prep_kws_model(args, frame_level=True)
     if bundle is not None:
@@ -500,25 +479,12 @@ def _kws_detect_main(args) -> int:
                                input_policy=input_policy)
 
     chunk = args.chunk_samples - args.chunk_samples % shift or shift
-    fires = [[] for _ in range(args.slots)]
-    frame_base = 0
-    t0 = time.time()
-    for off in range(0, n_samples, chunk):
-        block = np.stack([s.audio[off:off + chunk] for s in streams])
-        pieces, actions = ([block], []) if injector is None \
-            else injector.inject(block)
-        for act in actions:
-            if act.kind == "stall":
-                time.sleep(act.detail)
-            elif act.kind == "churn_storm":
-                sess.reset_streams(list(act.slots))
-        for piece in pieces:
-            out = sess.process_audio(piece)
-            ev = np.asarray(out.events)         # ONE fetch per chunk
-            for slot in range(args.slots):
-                fires[slot] += fires_from_events(ev[:, slot], frame_base)
-            frame_base += ev.shape[0]
-    dt = time.time() - t0
+    depth = 1 if args.sync_loop else args.inflight_depth
+    t0 = time.perf_counter()
+    fires, frame_base, stats = run_continuous_detect(
+        sess, [s.audio for s in streams], chunk=chunk,
+        n_samples=n_samples, injector=injector, depth=depth)
+    dt = time.perf_counter() - t0
 
     tol = int(round(args.tol_s * FS / shift))
     point = pool_points([
@@ -526,11 +492,18 @@ def _kws_detect_main(args) -> int:
                   frame_base, tol_frames=tol, frame_s=shift / FS)
         for slot in range(args.slots)])
     summ = sess.summary()
+    slo = stats["slo"]
+    steady_s = max(slo["steady_state_s"], 1e-9)
     audio_s = args.slots * n_samples / FS
     print(f"detect: {args.slots} stream(s) x {n_samples / FS:.0f} s "
-          f"({point.hours:.3f} h audio) in {dt:.1f} s on "
-          f"{sess.n_shards} device(s) [{args.numerics}] — "
-          f"{audio_s / dt:.1f}x realtime")
+          f"({point.hours:.3f} h audio) in {dt:.1f} s end-to-end on "
+          f"{sess.n_shards} device(s) [{args.numerics}, pipeline depth "
+          f"{depth}] — {audio_s / dt:.1f}x realtime end-to-end")
+    print(f"steady-state: {audio_s / steady_s:.1f}x realtime "
+          f"(warmup/compile {stats['warmup_s']:.1f} s), step latency "
+          f"p50 {slo['step_ms']['p50']:.1f} / "
+          f"p99.9 {slo['step_ms']['p999']:.1f} ms, host-blocked/step "
+          f"{slo['host_blocked_ms_per_step']['total']:.1f} ms")
     print(f"operating point Δ_TH={sess.threshold} "
           f"fire={det.fire_threshold} release={det.release_threshold}: "
           f"{point.n_events} events, {point.hits} hits, "
@@ -557,14 +530,14 @@ def _kws_cascade_main(args) -> int:
     around candidate events.  Scores the same deployment metrics as
     kws-detect and additionally reports the stage-1 duty cycle and the
     per-stage energy split."""
-    import numpy as np
     from repro.data.continuous import make_streams
     from repro.data.gscd import FS
     from repro.frontend.vad import VADConfig, VAD_OFF
+    from repro.launch.engine import run_continuous_detect
     from repro.launch.mesh import make_slot_mesh
     from repro.launch.streaming import CascadeConfig, StreamingKwsSession
     from repro.models.detector import (DetectorConfig, det_point,
-                                       fires_from_events, pool_points)
+                                       pool_points)
 
     cfg, fex, params, bundle = _prep_kws_model(args, frame_level=True)
     if bundle is not None:
@@ -601,25 +574,12 @@ def _kws_cascade_main(args) -> int:
                                input_policy=input_policy)
 
     chunk = args.chunk_samples - args.chunk_samples % shift or shift
-    fires = [[] for _ in range(args.slots)]
-    frame_base = 0
-    t0 = time.time()
-    for off in range(0, n_samples, chunk):
-        block = np.stack([s.audio[off:off + chunk] for s in streams])
-        pieces, actions = ([block], []) if injector is None \
-            else injector.inject(block)
-        for act in actions:
-            if act.kind == "stall":
-                time.sleep(act.detail)
-            elif act.kind == "churn_storm":
-                sess.reset_streams(list(act.slots))
-        for piece in pieces:
-            out = sess.process_audio(piece)
-            ev = np.asarray(out.events)         # ONE fetch per chunk
-            for slot in range(args.slots):
-                fires[slot] += fires_from_events(ev[:, slot], frame_base)
-            frame_base += ev.shape[0]
-    dt = time.time() - t0
+    depth = 1 if args.sync_loop else args.inflight_depth
+    t0 = time.perf_counter()
+    fires, frame_base, stats = run_continuous_detect(
+        sess, [s.audio for s in streams], chunk=chunk,
+        n_samples=n_samples, injector=injector, depth=depth)
+    dt = time.perf_counter() - t0
 
     tol = int(round(args.tol_s * FS / shift))
     point = pool_points([
@@ -627,11 +587,18 @@ def _kws_cascade_main(args) -> int:
                   frame_base, tol_frames=tol, frame_s=shift / FS)
         for slot in range(args.slots)])
     summ = sess.summary()
+    slo = stats["slo"]
+    steady_s = max(slo["steady_state_s"], 1e-9)
     audio_s = args.slots * n_samples / FS
     print(f"cascade: {args.slots} stream(s) x {n_samples / FS:.0f} s "
-          f"({point.hours:.3f} h audio) in {dt:.1f} s on "
-          f"{sess.n_shards} device(s) [{args.numerics}] — "
-          f"{audio_s / dt:.1f}x realtime")
+          f"({point.hours:.3f} h audio) in {dt:.1f} s end-to-end on "
+          f"{sess.n_shards} device(s) [{args.numerics}, pipeline depth "
+          f"{depth}] — {audio_s / dt:.1f}x realtime end-to-end")
+    print(f"steady-state: {audio_s / steady_s:.1f}x realtime "
+          f"(warmup/compile {stats['warmup_s']:.1f} s), step latency "
+          f"p50 {slo['step_ms']['p50']:.1f} / "
+          f"p99.9 {slo['step_ms']['p999']:.1f} ms, host-blocked/step "
+          f"{slo['host_blocked_ms_per_step']['total']:.1f} ms")
     print(f"operating point Δ_TH={sess.threshold} "
           f"wake={cas.wake_threshold} sleep={cas.sleep_threshold} "
           f"hang={cas.hangover_frames} "
@@ -682,6 +649,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="raw samples per serve step (~0.5 s; keep it a "
                          "multiple of the 128-sample frame shift so "
                          "per-slot resets stay exactly frame-aligned)")
+    # async pipelined engine (DESIGN.md §14)
+    ap.add_argument("--sync-loop", action="store_true",
+                    help="serve with the synchronous loop (pipeline "
+                         "depth 1) instead of the async pipelined "
+                         "engine; decisions are bit-identical either "
+                         "way — this is the escape hatch / A-B lever")
+    ap.add_argument("--inflight-depth", type=int, default=2,
+                    help="async engine pipeline window: steps in flight "
+                         "on the device before the host blocks on a "
+                         "fetch (>= 2 overlaps assemble/compute/fetch; "
+                         "ignored under --sync-loop)")
     ap.add_argument("--threshold", type=float, default=0.1)
     ap.add_argument("--train-steps", type=int, default=120,
                     help="quick detector training (0 = random weights)")
@@ -774,6 +752,7 @@ def validate_args(args):
     _positive("slots", args.slots)
     _positive("devices", args.devices)
     _positive("chunk-samples", args.chunk_samples)
+    _positive("inflight-depth", args.inflight_depth)
     _positive("requests", args.requests, minimum=0)
     _positive("train-steps", args.train_steps, minimum=0)
     _positive("max-queue", args.max_queue)

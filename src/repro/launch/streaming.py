@@ -415,6 +415,11 @@ class StreamSummary:
     recoveries: int = 0                    # slots auto-reset by supervisor
     recovery_reasons: dict = dataclasses.field(default_factory=dict)
     sat_events: int = 0                    # HEALTH_SAT slot-checks observed
+    # Serve-loop SLO telemetry attached by the pipelined engine
+    # (launch.engine): step/e2e latency percentiles, per-phase
+    # host-blocked time, shard imbalance.  Empty unless a serve driver
+    # called ``attach_slo`` — plain session runs are unaffected.
+    slo: dict = dataclasses.field(default_factory=dict)
 
 
 def _zero_accum(n_shards: int = 1) -> _Accum:
@@ -1049,6 +1054,8 @@ class StreamingKwsSession:
         self._recoveries = 0
         self._recovery_reasons: dict[str, int] = {}
         self._sat_events = 0
+        self._flagged: frozenset[int] = frozenset()
+        self._slo: dict = {}
         # Compiled steps are cached PER Δ_TH: ``set_threshold`` (the
         # degradation lever) re-points at a cached jit instead of paying
         # a retrace every time the controller steps up and back down.
@@ -1478,6 +1485,8 @@ class StreamingKwsSession:
         self._recoveries = 0
         self._recovery_reasons = {}
         self._sat_events = 0
+        self._flagged = frozenset()
+        self._slo = {}
 
     def reset_stream(self, i: int):
         """Reset ONE stream slot to a fresh-stream state (continuous
@@ -1525,6 +1534,8 @@ class StreamingKwsSession:
         if self._audio_rem is not None and self._audio_rem.shape[1]:
             self._audio_rem[slots] = 0.0
         self._strikes[slots] = 0          # a reset slot restarts clean
+        if self._flagged:
+            self._flagged = self._flagged - set(slots)
 
     # ------------------------------------------------ self-healing --
 
@@ -1558,7 +1569,14 @@ class StreamingKwsSession:
             return
         flags = np.asarray(jax.device_get(self._last_health))
         self._sat_events += int(np.count_nonzero(flags & HEALTH_SAT))
-        self._quarantine(flags, sup.quarantine_mask)
+        healed = self._quarantine(flags, sup.quarantine_mask)
+        # Host-side cache of who is STILL flagged (below the strike bar,
+        # not yet quarantined) — the scheduler consults this at admit()
+        # without adding a device fetch to the hot path.
+        bad = (flags & sup.quarantine_mask) != 0
+        if healed:
+            bad[healed] = False           # quarantined slots restart clean
+        self._flagged = frozenset(int(s) for s in np.flatnonzero(bad))
 
     def heal(self, mask: int | None = None) -> list[int]:
         """Force one supervisor pass NOW, ignoring ``check_every`` and
@@ -1594,6 +1612,22 @@ class StreamingKwsSession:
         flags = np.asarray(jax.device_get(self._last_health))
         return {int(i): int(flags[i]) for i in np.flatnonzero(flags)}
 
+    def flagged_slots(self) -> frozenset:
+        """Slots the supervisor currently holds under suspicion: flagged
+        by the last health check but still below the quarantine strike
+        bar.  HOST-CACHED — refreshed by the supervisor's own fetch in
+        ``_maybe_heal``, so reading it never syncs the device.  Always
+        empty without a supervisor.  ``SlotScheduler.admit`` refuses
+        these slots: a fresh stream admitted into a still-poisoned slot
+        would inherit its predecessor's corrupted state."""
+        return self._flagged
+
+    def attach_slo(self, report: dict):
+        """Attach a serve-loop SLO telemetry block (``launch.engine``'s
+        ``PipelinedEngine.report()``) to this session; ``summary()``
+        carries it in ``StreamSummary.slo``.  Cleared by ``reset``."""
+        self._slo = dict(report)
+
     def shard_of_slot(self, i: int) -> int:
         """Which mesh shard owns global slot ``i`` (block partitioning)."""
         return i // (self.batch // self.n_shards)
@@ -1613,7 +1647,7 @@ class StreamingKwsSession:
             overflow = overflow or sat
         robust = dict(overflowed=overflow, recoveries=self._recoveries,
                       recovery_reasons=dict(self._recovery_reasons),
-                      sat_events=self._sat_events)
+                      sat_events=self._sat_events, slo=dict(self._slo))
         if totals["frames"] == 0:
             # Nothing processed yet: report an identifiable empty state,
             # not a spurious 100%-sparsity / 0-energy datapoint.
@@ -1722,15 +1756,27 @@ class SlotScheduler:
     def admit(self) -> list[tuple[int, Any]]:
         """Map queued requests onto free slots, least-loaded shard first.
 
-        The whole admission wave is reset to fresh-stream state with ONE
-        batched slot-local reset (see ``reset_streams``).  Returns the
+        Slots the supervisor currently flags as unhealthy
+        (``session.flagged_slots()``) are SKIPPED — admitting a fresh
+        stream into a quarantine-pending slot would hand it corrupted
+        state; the slot stays on the free list and becomes admittable
+        again once the supervisor heals or clears it.  The whole
+        admission wave is reset to fresh-stream state with ONE batched
+        slot-local reset (see ``reset_streams``).  Returns the
         (slot, payload) admissions.
         """
+        flagged = self._sess.flagged_slots()
         admitted = []
-        while self._queue and any(self._free):
-            shard = min((s for s in range(self.n_shards) if self._free[s]),
-                        key=self._shard_load)
-            slot = self._free[shard].pop()
+        while self._queue:
+            usable = [s for s in range(self.n_shards)
+                      if any(sl not in flagged for sl in self._free[s])]
+            if not usable:
+                break                     # full, or only unhealthy slots
+            shard = min(usable, key=self._shard_load)
+            free = self._free[shard]      # pop highest-priority healthy
+            idx = next(i for i in range(len(free) - 1, -1, -1)
+                       if free[i] not in flagged)
+            slot = free.pop(idx)
             payload = self._queue.popleft()
             self.live[slot] = payload
             admitted.append((slot, payload))
@@ -1743,7 +1789,22 @@ class SlotScheduler:
         return per - len(self._free[shard])
 
     def evict(self, slot: int) -> Any:
-        """Free a finished stream's slot; returns its payload."""
+        """Free a finished stream's slot; returns its payload.
+
+        Guarded: evicting a slot that is not live raises a ``ValueError``
+        naming the slot and its actual state — a bare ``KeyError`` (or
+        worse, silently double-freeing, which would put the slot on the
+        free list twice and let two streams share it) hid scheduler bugs
+        as crashes far from the cause.
+        """
+        if slot not in self.live:
+            if not 0 <= slot < self.n_slots:
+                state = f"out of range [0, {self.n_slots})"
+            elif slot in self._free[self._sess.shard_of_slot(slot)]:
+                state = "already free (double evict?)"
+            else:
+                state = "never admitted"
+            raise ValueError(f"cannot evict slot {slot}: {state}")
         payload = self.live.pop(slot)
         self._free[self._sess.shard_of_slot(slot)].append(slot)
         return payload

@@ -77,7 +77,8 @@ def test_serve_commands_parse_against_the_cli():
     for cmd in (commands.SERVE_CMD, commands.SERVE_SHARDED_CMD,
                 commands.SERVE_INT8_CMD, commands.SERVE_BUNDLE_CMD,
                 commands.SERVE_DETECT_CMD, commands.SERVE_FAULTS_CMD,
-                commands.SERVE_CASCADE_CMD):
+                commands.SERVE_CASCADE_CMD, commands.SERVE_SYNC_CMD,
+                commands.SERVE_DEEP_PIPELINE_CMD):
         words = _split_env(cmd)
         flags = words[words.index("repro.launch.serve") + 1:]
         args = parser.parse_args(flags)
@@ -96,6 +97,11 @@ def test_serve_commands_parse_against_the_cli():
         if cmd is commands.SERVE_CASCADE_CMD:
             assert args.wake_threshold >= args.sleep_threshold, \
                 "wake band must be non-inverted at the documented defaults"
+        if cmd is commands.SERVE_SYNC_CMD:
+            assert args.sync_loop, "the escape hatch must force depth 1"
+        if cmd is commands.SERVE_DEEP_PIPELINE_CMD:
+            assert args.inflight_depth >= 2, \
+                "the documented deep-pipeline command must actually pipeline"
 
 
 def test_train_promote_command_parses_and_feeds_serve_bundle():
