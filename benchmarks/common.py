@@ -80,6 +80,79 @@ def train_kws_frames(n_steps: int = 300, train_th: float = 0.1,
                            seed, batch)
 
 
+def train_kws_scenario(n_classes: int = 12, n_steps: int = 400,
+                       train_th: float = 0.1, seed: int = 0,
+                       batch: int = 24,
+                       snr_range: tuple[float, float] = (0.0, 20.0),
+                       noise_kinds: tuple[str, ...] = ("white", "pink",
+                                                       "babble"),
+                       smear_frames: int = 2, mine_every: int = 100,
+                       qat: bool = True):
+    """The scenario matrix's training recipe (DESIGN.md §15): a
+    ``vocab_size=n_classes`` head trained frame-level on NOISY streams
+    with the three upgrades the evaluation standard assumes —
+
+      * max-pool detection loss + label smearing at event edges
+        (``kws.frame_loss_fn(loss_mode="maxpool", smear_frames=...)``),
+      * noise augmentation (every step draws a fresh SNR from
+        ``snr_range`` and cycles ``noise_kinds``),
+      * hard-negative mining (every ``mine_every`` steps the model picks
+        its own worst false-alarm segments, which then occupy the last
+        ``top_k`` rows of each batch; ``train.mining``),
+
+    with QAT on by default so the promoted int8 bundle tracks the float
+    model through the conformance band.  Returns
+    (cfg, params, fex, vocab).
+    """
+    import dataclasses
+    import functools
+
+    from repro.data.continuous import synth_frame_batch
+    from repro.data.gscd import make_vocab
+    from repro.train.mining import MiningConfig, mine_hard_negatives
+
+    vocab = make_vocab(n_classes)
+    cfg = dataclasses.replace(get_config("deltakws"), vocab_size=n_classes)
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(seed), cfg,
+                             input_dim=fex.cfg.n_active)
+    loss = functools.partial(kws.frame_loss_fn, loss_mode="maxpool",
+                             smear_frames=smear_frames, qat=qat)
+    ocfg = opt.AdamWConfig(lr=3e-3, weight_decay=0.01, warmup_steps=20,
+                           total_steps=n_steps)
+    state = opt.init(params)
+    rng = np.random.default_rng(seed)
+    mcfg = MiningConfig(first_keyword=vocab.first_keyword,
+                        top_k=min(8, batch))
+
+    @jax.jit
+    def step(params, state, feats, labels):
+        (l, m), g = jax.value_and_grad(loss, has_aux=True)(
+            params, cfg, {"feats": feats, "frame_labels": labels}, train_th)
+        params, state, _ = opt.update(ocfg, g, state, params)
+        return params, state, l
+
+    mined_feats = mined_labels = None
+    for i in range(n_steps):
+        audio, labels = synth_frame_batch(
+            rng, batch, snr_db=float(rng.uniform(*snr_range)),
+            noise=noise_kinds[i % len(noise_kinds)], vocab=vocab)
+        feats = np.array(fex(jnp.asarray(audio)))    # writable host copy
+        if mine_every and i and i % mine_every == 0:
+            mined_feats, mined_labels, _ = mine_hard_negatives(
+                params, cfg, fex, rng, mcfg, threshold=train_th,
+                vocab=vocab)
+        if mined_feats is not None:
+            # Fixed batch shape (one compile): mined segments REPLACE
+            # the trailing rows instead of growing the batch.
+            k = len(mined_feats)
+            feats[-k:] = mined_feats
+            labels[-k:] = mined_labels
+        params, state, _ = step(params, state, jnp.asarray(feats),
+                                jnp.asarray(labels))
+    return cfg, params, fex, vocab
+
+
 def train_stage0_frames(n_steps: int = 300, s0_channels: int = 4,
                         train_th: float = 0.05, seed: int = 7,
                         batch: int = 32):

@@ -71,6 +71,11 @@ SOAK_CMD = ("PYTHONPATH=src:. python benchmarks/serve_bench.py --soak "
 SERVE_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/serve_bench.py"
 KERNEL_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/kernel_bench.py"
 
+# Scenario matrix (DESIGN.md §15) -------------------------------------------
+SCENARIO_BENCH_CMD = "PYTHONPATH=src:. python benchmarks/scenario_bench.py"
+SCENARIO_BENCH_QUICK_CMD = ("PYTHONPATH=src:. python "
+                            "benchmarks/scenario_bench.py --quick")
+
 # Kernel autotuning (DESIGN.md §12) -----------------------------------------
 KERNEL_TUNE_CMD = "PYTHONPATH=src:. python benchmarks/kernel_bench.py --tune"
 KERNEL_TUNE_QUICK_CMD = ("PYTHONPATH=src:. python benchmarks/kernel_bench.py "
@@ -90,6 +95,8 @@ ALL_COMMANDS = {
     "serve_deep_pipeline": SERVE_DEEP_PIPELINE_CMD,
     "serve_detect": SERVE_DETECT_CMD,
     "detect_bench": DETECT_BENCH_CMD,
+    "scenario_bench": SCENARIO_BENCH_CMD,
+    "scenario_bench_quick": SCENARIO_BENCH_QUICK_CMD,
     "serve_cascade": SERVE_CASCADE_CMD,
     "cascade_bench": CASCADE_BENCH_CMD,
     "train_promote": TRAIN_PROMOTE_CMD,

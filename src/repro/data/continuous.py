@@ -4,18 +4,30 @@ The per-utterance GSCD fixtures (``data.gscd``) answer "which keyword is
 this 1 s clip?"; the deployment question is "when did a keyword occur in
 this unbounded stream, and how often does the detector cry wolf?".
 This module synthesizes arbitrarily long audio streams — keyword
-utterances from the SynthCommands formant model placed into a
-background-noise bed at a controlled SNR, separated by exponentially
-distributed silences — together with the exact sample span and label of
-every placed keyword.  ``benchmarks/detect_bench.py`` and
-``serve.py --mode kws-detect`` score detector fires against these
-ground-truth events (FA/hr, miss rate — the DET-curve axes).
+utterances (formant-synthesized, or REAL GSCD clips via an utterance
+bank) placed into a background-noise bed at a controlled SNR, separated
+by exponentially distributed silences — together with the exact sample
+span and label of every placed keyword.  ``benchmarks/detect_bench.py``,
+``benchmarks/scenario_bench.py`` and ``serve.py --mode kws-detect``
+score detector fires against these ground-truth events (FA/hr, miss
+rate — the DET-curve axes).
+
+Scenario axes (DESIGN.md §15): the noise bed is one of ``data.noise``'s
+kinds (white / pink / babble), a far-field room can be applied with
+``reverb=`` (image-method RIR convolution of the MIXED stream — events
+keep their dry sample spans, the tail smears forward into the
+tolerance window), and the class space is a ``data.gscd.Vocab`` so the
+same synthesis drives 11-, 12- and 35-class heads.
 
 Level convention: keywords are synthesized at the TRAINING amplitude
 distribution (peak 0.3–0.9, what ``gscd.synth_batch`` produces), and
 ``snr_db`` sets the noise bed RELATIVE to the keyword RMS — so a sweep
 over SNR degrades the stream without pushing the keywords themselves
-off the distribution the model was trained on.
+off the distribution the model was trained on.  The bed is normalized
+to exactly unit RMS before scaling, so the realized SNR matches the
+request to within measurement error (``ContinuousStream.keyword_rms`` /
+``noise_rms`` record the exact pre-clip levels; the invariant tests
+assert ±0.5 dB).
 """
 from __future__ import annotations
 
@@ -23,8 +35,11 @@ import dataclasses
 
 import numpy as np
 
-from repro.data.gscd import FS, ClassSpec, _SPECS
+from repro.data import noise as noise_mod
+from repro.data.gscd import FS, ClassSpec, Vocab, _SPECS, make_vocab
 from repro.models.kws import CLASSES
+
+DEFAULT_VOCAB = make_vocab(12)
 
 KEYWORD_CLASSES = tuple(i for i, name in enumerate(CLASSES)
                         if name in _SPECS)        # class ids 2..11
@@ -36,7 +51,7 @@ class StreamEvent:
 
     start: int        # first sample of the utterance
     end: int          # last sample (inclusive)
-    label: int        # class id (models.kws.CLASSES index)
+    label: int        # class id (vocab index; default models.kws.CLASSES)
 
     def frames(self, frame_shift: int = 128) -> tuple[int, int, int]:
         """(start_frame, end_frame, label) at decision granularity."""
@@ -51,11 +66,23 @@ class ContinuousStream:
     audio: np.ndarray                  # (T,) float32 in [-1, 1)
     events: list[StreamEvent]
     fs: int = FS
-    snr_db: float = 0.0
+    snr_db: float = 0.0                # the REQUESTED SNR
+    noise_kind: str = "white"
+    keyword_rms: float = 0.0           # measured mean keyword RMS (pre-clip)
+    noise_rms: float = 0.0             # measured bed RMS actually mixed in
 
     @property
     def duration_s(self) -> float:
         return len(self.audio) / self.fs
+
+    @property
+    def measured_snr_db(self) -> float:
+        """Realized keyword-over-bed SNR from the recorded pre-clip
+        levels (the invariant tests hold this to ±0.5 dB of the
+        request)."""
+        if self.keyword_rms <= 0.0 or self.noise_rms <= 0.0:
+            return float("nan")
+        return float(20.0 * np.log10(self.keyword_rms / self.noise_rms))
 
     def truth_frames(self, frame_shift: int = 128
                      ) -> list[tuple[int, int, int]]:
@@ -83,26 +110,56 @@ def _synth_utterance(rng: np.random.Generator, spec: ClassSpec,
     return (sig / peak * rng.uniform(0.3, 0.9)).astype(np.float32)
 
 
+def _draw_utterance(rng: np.random.Generator, label: int, vocab: Vocab,
+                    utterances: dict[int, list[np.ndarray]] | None
+                    ) -> np.ndarray:
+    """One placement-ready utterance for ``label``: a real clip from the
+    bank (rescaled to the training peak distribution) when a bank is
+    supplied, else formant synthesis from the vocab's spec."""
+    if utterances is not None:
+        clips = utterances[label]
+        clip = clips[rng.integers(len(clips))]
+        peak = float(np.max(np.abs(clip))) + 1e-9
+        return (clip / peak * rng.uniform(0.3, 0.9)).astype(np.float32)
+    spec = vocab.specs[vocab.names[label]]
+    return _synth_utterance(rng, spec, float(rng.uniform(0.3, 0.55)))
+
+
 def make_stream(rng: np.random.Generator, duration_s: float = 30.0,
                 snr_db: float = 10.0, events_per_min: float = 12.0,
-                keyword_classes: tuple[int, ...] = KEYWORD_CLASSES,
-                min_gap_s: float = 0.4) -> ContinuousStream:
+                keyword_classes: tuple[int, ...] | None = None,
+                min_gap_s: float = 0.4, *, noise: str = "white",
+                reverb=None, vocab: Vocab | None = None,
+                utterances: dict[int, list[np.ndarray]] | None = None
+                ) -> ContinuousStream:
     """Synthesize one continuous stream.
 
     duration_s: total stream length (hours-long streams are fine — cost
-      is O(T) numpy).
+      is O(T log T) numpy).
     snr_db: keyword-RMS over noise-RMS ratio of the background bed.
     events_per_min: mean keyword rate; inter-keyword gaps are
       ``min_gap_s`` plus an exponential draw, so silence stretches
       dominate at low rates (the always-on regime the VAD gate targets).
-    keyword_classes: class ids eligible for placement.
+    keyword_classes: class ids eligible for placement (default: every
+      keyword of the vocab, or every class the utterance bank holds).
+    noise: bed kind — "white", "pink" or "babble" (``data.noise``).
+    reverb: ``None`` (near-field), a ``data.noise.ReverbSpec`` (room
+      solved by the image method) or a precomputed RIR array; applied to
+      the MIXED stream, so both keywords and bed arrive far-field.
+      Events keep their dry sample spans — the smeared tail lands in the
+      scorer's tolerance window, exactly like a real far-field mic.
+    vocab: the class space (default: the paper's 12-class set); event
+      labels index ``vocab.names``.
+    utterances: {class_id: [clips]} bank of REAL keyword recordings
+      (``gscd.load_utterance_bank``) to place instead of synthesizing.
 
     Keywords never overlap; each placement is recorded as a
     ``StreamEvent`` with exact inclusive sample bounds.
 
     Raises ``ValueError`` for unusable combinations (non-positive or
-    non-finite duration, non-finite SNR, negative rate or gap) rather
-    than synthesizing an empty/NaN stream that fails obscurely in the
+    non-finite duration, non-finite SNR, negative rate or gap, unknown
+    noise kind, class ids outside the vocab/bank) rather than
+    synthesizing an empty/NaN stream that fails obscurely in the
     detector scoring downstream.
     """
     if not np.isfinite(duration_s) or duration_s <= 0.0:
@@ -117,14 +174,20 @@ def make_stream(rng: np.random.Generator, duration_s: float = 30.0,
     if not np.isfinite(min_gap_s) or min_gap_s < 0.0:
         raise ValueError(f"min_gap_s must be finite and >= 0, "
                          f"got {min_gap_s}")
+    if noise not in noise_mod.NOISE_KINDS:
+        raise ValueError(f"unknown noise kind {noise!r} "
+                         f"(choose one of {list(noise_mod.NOISE_KINDS)})")
+    vocab = DEFAULT_VOCAB if vocab is None else vocab
+    eligible = (tuple(sorted(utterances)) if utterances is not None
+                else vocab.keyword_ids)
+    if keyword_classes is None:
+        keyword_classes = eligible
     if not keyword_classes:
         raise ValueError("keyword_classes must not be empty")
-    bad = [c for c in keyword_classes if CLASSES[c] not in _SPECS] \
-        if all(0 <= c < len(CLASSES) for c in keyword_classes) \
-        else keyword_classes
+    bad = [c for c in keyword_classes if c not in eligible]
     if bad:
-        raise ValueError(f"keyword_classes {list(bad)} are not keyword "
-                         f"class ids (eligible: {list(KEYWORD_CLASSES)})")
+        raise ValueError(f"keyword_classes {list(bad)} are not placeable "
+                         f"class ids (eligible: {list(eligible)})")
     n_total = int(round(duration_s * FS))
     audio = np.zeros(n_total, np.float32)
     events: list[StreamEvent] = []
@@ -135,9 +198,7 @@ def make_stream(rng: np.random.Generator, duration_s: float = 30.0,
     kw_rms = []
     while True:
         label = int(keyword_classes[rng.integers(len(keyword_classes))])
-        spec = _SPECS[CLASSES[label]]
-        dur_s = rng.uniform(0.3, 0.55)
-        utt = _synth_utterance(rng, spec, dur_s)
+        utt = _draw_utterance(rng, label, vocab, utterances)
         if pos + len(utt) > n_total:
             break
         audio[pos:pos + len(utt)] += utt
@@ -147,12 +208,19 @@ def make_stream(rng: np.random.Generator, duration_s: float = 30.0,
         pos += len(utt) + int((min_gap_s + rng.exponential(mean_gap_s)) * FS)
 
     # Noise bed at snr_db below the mean keyword RMS (or a quiet mic
-    # floor when the stream holds no keywords at all).
+    # floor when the stream holds no keywords at all).  The bed is
+    # unit-RMS by construction, so the realized SNR IS the request.
     ref_rms = float(np.mean(kw_rms)) if kw_rms else 0.05
     noise_rms = ref_rms / (10.0 ** (snr_db / 20.0))
-    audio += noise_rms * rng.standard_normal(n_total).astype(np.float32)
+    audio += noise_rms * noise_mod.noise_bed(rng, n_total, noise)
+    if reverb is not None:
+        rir = (reverb if isinstance(reverb, np.ndarray)
+               else noise_mod.image_rir(reverb))
+        audio = noise_mod.apply_reverb(audio, rir)
     np.clip(audio, -1.0, 1.0 - 2.0 ** -11, out=audio)
-    return ContinuousStream(audio=audio, events=events, snr_db=snr_db)
+    return ContinuousStream(audio=audio, events=events, snr_db=snr_db,
+                            noise_kind=noise, keyword_rms=ref_rms,
+                            noise_rms=noise_rms)
 
 
 def make_streams(seed: int, n_streams: int, **kw) -> list[ContinuousStream]:
@@ -168,7 +236,7 @@ def frame_labels(stream: ContinuousStream, frame_shift: int = 128
     """(F,) int32 per-frame labels: the event's class over its frame
     span, silence (class 0) elsewhere — detection-training targets."""
     n_frames = len(stream.audio) // frame_shift
-    labels = np.zeros(n_frames, np.int32)           # CLASSES[0] = silence
+    labels = np.zeros(n_frames, np.int32)           # vocab id 0 = silence
     for e in stream.events:
         s, end, lb = e.frames(frame_shift)
         labels[s:min(end + 1, n_frames)] = lb
@@ -177,14 +245,17 @@ def frame_labels(stream: ContinuousStream, frame_shift: int = 128
 
 def synth_frame_batch(rng: np.random.Generator, batch: int,
                       duration_s: float = 2.0, snr_db: float = 20.0,
-                      events_per_min: float = 40.0, frame_shift: int = 128
+                      events_per_min: float = 40.0, frame_shift: int = 128,
+                      noise: str = "white", vocab: Vocab | None = None
                       ) -> tuple[np.ndarray, np.ndarray]:
     """A batch of short streams with FRAME-level labels for detection
     training: → (audio (B, T), labels (B, F) int32).
 
     Per-frame supervision is what calibrates the posterior trace the
     decision head consumes — utterance-level mean-pool training leaves
-    noise-frame posteriors unconstrained (DESIGN.md §10)."""
+    noise-frame posteriors unconstrained (DESIGN.md §10).  ``noise`` and
+    ``vocab`` ride through to ``make_stream`` so scenario training sees
+    the bed/class space it will be evaluated under."""
     n = int(round(duration_s * FS))
     n -= n % frame_shift
     if n <= 0:
@@ -194,7 +265,8 @@ def synth_frame_batch(rng: np.random.Generator, batch: int,
     labels = np.empty((batch, n // frame_shift), np.int32)
     for i in range(batch):
         s = make_stream(rng, duration_s=duration_s, snr_db=snr_db,
-                        events_per_min=events_per_min)
+                        events_per_min=events_per_min, noise=noise,
+                        vocab=vocab)
         audio[i] = s.audio[:n]
         labels[i] = frame_labels(s, frame_shift)[:n // frame_shift]
     return audio, labels

@@ -50,6 +50,83 @@ _SPECS = {
 }
 
 
+# GSCD-v2 words beyond the paper's 10-keyword task, in the fixed order
+# procedural specs are assigned (so a 35-class vocab is stable across
+# runs and machines).
+_V2_EXTRA_WORDS = (
+    "backward", "bed", "bird", "cat", "dog", "eight", "five", "follow",
+    "forward", "four", "happy", "house", "learn", "marvin", "nine", "one",
+    "seven", "sheila", "six", "three", "tree", "two", "visual", "wow",
+    "zero")
+
+
+def _extra_spec(rng: np.random.Generator) -> ClassSpec:
+    """A procedurally drawn two-formant spec for a vocabulary word with
+    no hand-tuned entry in ``_SPECS`` (same parameter ranges as the
+    hand-tuned ten, so extra classes are neither easier nor harder)."""
+    return ClassSpec(
+        f1_start=float(rng.uniform(300, 800)),
+        f1_end=float(rng.uniform(300, 800)),
+        f2_start=float(rng.uniform(900, 2200)),
+        f2_end=float(rng.uniform(900, 2200)),
+        noise=float(rng.uniform(0.02, 0.05)),
+        am_rate=float(rng.uniform(1.5, 6.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Vocab:
+    """A vocabulary: ordered class names + a synthesis spec per keyword.
+
+    ``names[0]`` is always "silence"; keyword classes are the names with
+    an entry in ``specs``.  ``first_keyword`` is the smallest class id
+    eligible to fire a detection event (what ``DetectorConfig``
+    consumes) — non-keyword service classes ("silence", "unknown") sort
+    before every keyword by construction.
+    """
+
+    names: tuple[str, ...]
+    specs: dict[str, ClassSpec]
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.names)
+
+    @property
+    def first_keyword(self) -> int:
+        return next(i for i, n in enumerate(self.names) if n in self.specs)
+
+    @property
+    def keyword_ids(self) -> tuple[int, ...]:
+        return tuple(i for i, n in enumerate(self.names) if n in self.specs)
+
+
+def make_vocab(n_classes: int = 12, seed: int = 1234) -> Vocab:
+    """The scenario matrix's vocabulary axis.
+
+    n_classes=12: the paper's head — silence, unknown, 10 keywords.
+    n_classes=11: the paper's 11-class metric as a head — "unknown"
+      dropped, keyword ids shift down by one (exercises a non-default
+      ``first_keyword`` end to end).
+    n_classes 13..37: silence, unknown, 10 base keywords + (n−12)
+      GSCD-v2 words (procedural specs, seeded — 35 is the GSCD-v2
+      scaling point ROADMAP names).
+    """
+    if n_classes == 12:
+        return Vocab(names=tuple(CLASSES), specs=dict(_SPECS))
+    if n_classes == 11:
+        names = tuple(n for n in CLASSES if n != "unknown")
+        return Vocab(names=names, specs=dict(_SPECS))
+    n_extra = n_classes - 12
+    if not 0 < n_extra <= len(_V2_EXTRA_WORDS):
+        raise ValueError(
+            f"unsupported vocab size {n_classes} (supported: 11, 12, "
+            f"13..{12 + len(_V2_EXTRA_WORDS)})")
+    rng = np.random.default_rng(seed)
+    extra = {w: _extra_spec(rng) for w in _V2_EXTRA_WORDS[:n_extra]}
+    return Vocab(names=tuple(CLASSES) + tuple(extra),
+                 specs={**_SPECS, **extra})
+
+
 def _synth_keyword(rng: np.random.Generator, spec: ClassSpec) -> np.ndarray:
     t = np.arange(T) / FS
     # random utterance placement within the 1 s window
@@ -81,19 +158,26 @@ def _synth_unknown(rng) -> np.ndarray:
     return _synth_keyword(rng, spec)
 
 
-def synth_batch(rng: np.random.Generator, batch: int
+def synth_batch(rng: np.random.Generator, batch: int,
+                vocab: Vocab | None = None
                 ) -> tuple[np.ndarray, np.ndarray]:
-    """→ (audio (B, 8000) float32 in [-1,1], labels (B,) int32)."""
-    labels = rng.integers(0, len(CLASSES), batch)
+    """→ (audio (B, 8000) float32 in [-1,1], labels (B,) int32).
+
+    ``vocab`` (default: the paper's 12-class set) sizes the label space:
+    labels are indices into ``vocab.names`` and keyword audio comes from
+    ``vocab.specs`` — the 11/35-class heads train on exactly this."""
+    names = CLASSES if vocab is None else vocab.names
+    specs = _SPECS if vocab is None else vocab.specs
+    labels = rng.integers(0, len(names), batch)
     audio = np.empty((batch, T), np.float32)
     for i, lb in enumerate(labels):
-        name = CLASSES[lb]
+        name = names[lb]
         if name == "silence":
             audio[i] = _synth_silence(rng)
         elif name == "unknown":
             audio[i] = _synth_unknown(rng)
         else:
-            audio[i] = _synth_keyword(rng, _SPECS[name])
+            audio[i] = _synth_keyword(rng, specs[name])
     return audio, labels.astype(np.int32)
 
 
@@ -161,3 +245,54 @@ def load_dataset(path: str | None, n_per_class: int = 100, seed: int = 0):
             f"GSCD path {root} holds no <label>/<uid>.wav files for any "
             f"of the {len(CLASSES)} classes ({', '.join(CLASSES[:4])}, …)")
     return np.stack(audio), np.asarray(labels, np.int32)
+
+
+def _trim_utterance(x: np.ndarray, rel_threshold: float = 0.05,
+                    pad: int = 160) -> np.ndarray:
+    """Cut a fixed-window clip down to its voiced span: the samples
+    whose |x| exceeds ``rel_threshold`` × peak, ±``pad`` samples of
+    context.  A continuous-stream placement needs a TIGHT span — the 1 s
+    GSCD window hides the word somewhere inside it, which would poison
+    the ground-truth event bounds."""
+    peak = float(np.max(np.abs(x)))
+    if peak <= 0.0:
+        return x
+    voiced = np.flatnonzero(np.abs(x) >= rel_threshold * peak)
+    lo = max(int(voiced[0]) - pad, 0)
+    hi = min(int(voiced[-1]) + pad + 1, len(x))
+    return x[lo:hi]
+
+
+def load_utterance_bank(path: str | pathlib.Path,
+                        vocab: Vocab | None = None
+                        ) -> dict[int, list[np.ndarray]]:
+    """Real GSCD keywords as a continuous-stream placement bank.
+
+    Reads ``<path>/<label>/<uid>.wav`` (the committed
+    ``tests/fixtures/gscd_mini`` layout, or a real GSCD root), trims
+    each clip to its voiced span and returns {class_id: [utterance
+    arrays]} keyed by ``vocab`` class ids (default: the 12-class set).
+    Only labels that are keyword classes of the vocab are loaded.
+    ``data.continuous.make_stream(utterances=...)`` composes these real
+    keywords into labeled noisy streams — the scenario matrix's
+    real-keyword mode.
+    """
+    vocab = make_vocab(12) if vocab is None else vocab
+    root = pathlib.Path(path)
+    if not root.is_dir():
+        raise ValueError(f"utterance bank path {root} is not a directory")
+    bank: dict[int, list[np.ndarray]] = {}
+    for cid in vocab.keyword_ids:
+        d = root / vocab.names[cid]
+        if not d.is_dir():
+            continue
+        utts = [_trim_utterance(load_wav_8k(f))
+                for f in sorted(d.glob("*.wav"))]
+        utts = [u for u in utts if len(u) > 0]
+        if utts:
+            bank[cid] = utts
+    if not bank:
+        raise ValueError(
+            f"utterance bank path {root} holds no keyword wavs for any "
+            f"of {[vocab.names[c] for c in vocab.keyword_ids]}")
+    return bank

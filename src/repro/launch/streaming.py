@@ -101,6 +101,7 @@ from repro.frontend.vad import (VADConfig, VADState, VAD_OFF, frame_energy,
                                 init_vad_state, vad_gate, vad_state_flags)
 from repro.kernels.platform import resolve_interpret, shard_map_kernels
 from repro.models import kws
+from repro.models import detector as det_mod
 from repro.models.detector import (DetectorConfig, DetectorState,
                                    detector_scan, detector_state_flags,
                                    init_detector_state)
@@ -962,13 +963,13 @@ class StreamingKwsSession:
         if vad is not None and detector is None:
             raise ValueError("vad gating is part of detection mode: pass "
                              "a DetectorConfig alongside the VADConfig")
-        if detector is not None and \
-                detector.release_threshold > detector.fire_threshold:
+        if detector is not None and det_mod.band_inverted(detector):
             raise ValueError(
                 f"inverted hysteresis band: release_threshold "
                 f"({detector.release_threshold}) must be <= fire_threshold "
-                f"({detector.fire_threshold}) — an inverted band degrades "
-                f"the head into a refractory-paced pulse generator")
+                f"({detector.fire_threshold}) elementwise — an inverted "
+                f"band degrades the head into a refractory-paced pulse "
+                f"generator")
         if cascade is not None:
             if detector is None:
                 raise ValueError("the wake cascade gates the always-on "

@@ -62,21 +62,46 @@ class DetectorConfig(NamedTuple):
     smooth_alpha: EMA coefficient on the per-frame posteriors (1.0 = no
       smoothing; the default ≈ 6-frame / 100 ms time constant).
     fire_threshold: smoothed keyword posterior that opens an event
-      (strictly-above comparison).
+      (strictly-above comparison).  Either one scalar for every keyword
+      or a tuple with one threshold PER keyword class (length =
+      n_classes − first_keyword, in class-id order) — per-keyword
+      operating points are what scenario-cell calibration produces
+      (``calibrate_fire_thresholds``): hard words get permissive
+      thresholds, false-alarm-prone words strict ones, at one shared
+      FA/hr budget.
     release_threshold: smoothed keyword posterior that closes the event
-      (strictly-below comparison).  Must be ≤ fire_threshold; the gap is
-      the hysteresis band that prevents rapid re-triggering on a
-      fluctuating score.
+      (strictly-below comparison; the event closes when EVERY keyword's
+      smoothed posterior is below its release level).  Scalar or
+      per-keyword tuple like ``fire_threshold``; must be elementwise ≤
+      fire_threshold — the gap is the hysteresis band that prevents
+      rapid re-triggering on a fluctuating score.
     refractory_frames: minimum frames between two fires (~16 ms each).
     first_keyword: first class id eligible to fire (ids below it —
       silence=0, unknown=1 in ``models.kws.CLASSES`` — never fire).
     """
 
     smooth_alpha: float = 0.25
-    fire_threshold: float = 0.55
-    release_threshold: float = 0.40
+    fire_threshold: float | tuple[float, ...] = 0.55
+    release_threshold: float | tuple[float, ...] = 0.40
     refractory_frames: int = 30
     first_keyword: int = 2
+
+
+def band_inverted(cfg: DetectorConfig) -> bool:
+    """True when any keyword's release threshold exceeds its fire
+    threshold (an inverted hysteresis band degrades the head into a
+    refractory-paced pulse generator) — the session-construction check,
+    scalar- and per-keyword-aware.  Raises ``ValueError`` when the two
+    thresholds are tuples of incompatible lengths."""
+    fire = np.asarray(cfg.fire_threshold, np.float32)
+    rel = np.asarray(cfg.release_threshold, np.float32)
+    try:
+        return bool(np.any(rel > fire))
+    except ValueError as e:
+        raise ValueError(
+            f"fire_threshold and release_threshold must broadcast "
+            f"(per-keyword tuples need equal lengths): got shapes "
+            f"{fire.shape} and {rel.shape}") from e
 
 
 class DetectorState(NamedTuple):
@@ -112,12 +137,20 @@ def detector_step(cfg: DetectorConfig, state: DetectorState, post: Array
     smooth = state.smooth + cfg.smooth_alpha * (post.astype(jnp.float32)
                                                 - state.smooth)
     kw = smooth[:, cfg.first_keyword:]
-    score = jnp.max(kw, axis=-1)                       # (B,)
-    cls = (jnp.argmax(kw, axis=-1) + cfg.first_keyword).astype(jnp.int32)
+    # Scalar thresholds broadcast over the keyword axis; per-keyword
+    # tuples give every class its own operating point.  With a scalar
+    # this is bit-identical to the max-score formulation: any(kw > th)
+    # == max(kw) > th, all(kw < rel) == max(kw) < rel, and the argmax
+    # over the exceeding set is the global argmax whenever it fires.
+    fire_th = jnp.asarray(cfg.fire_threshold, jnp.float32)
+    rel_th = jnp.asarray(cfg.release_threshold, jnp.float32)
+    exceed = kw > fire_th                              # (B, K_kw)
+    cls = (jnp.argmax(jnp.where(exceed, kw, -jnp.inf), axis=-1)
+           + cfg.first_keyword).astype(jnp.int32)
 
     idle = state.active == NO_EVENT
-    fire = idle & (state.refract == 0) & (score > cfg.fire_threshold)
-    release = (~idle) & (score < cfg.release_threshold)
+    fire = idle & (state.refract == 0) & jnp.any(exceed, axis=-1)
+    release = (~idle) & jnp.all(kw < rel_th, axis=-1)
     active = jnp.where(fire, cls,
                        jnp.where(release, NO_EVENT, state.active))
     refract = jnp.where(fire, jnp.int32(cfg.refractory_frames),
@@ -256,6 +289,69 @@ def det_point(fires: Sequence[tuple[int, int]],
         miss_rate=misses / n_events if n_events else 0.0,
         fa_per_hour=false_alarms / hours if hours > 0 else 0.0,
         hours=hours)
+
+
+def calibrate_fire_thresholds(posts: np.ndarray,
+                              truth: Sequence[tuple[int, int, int]],
+                              base_cfg: DetectorConfig,
+                              candidates: Sequence[float],
+                              fa_budget_per_hour: float = 60.0,
+                              tol_frames: int = 0) -> tuple[float, ...]:
+    """Per-keyword fire thresholds from a recorded posterior trace.
+
+    The scenario matrix's per-cell calibration (DESIGN.md §15): one
+    shared scalar threshold forces every keyword onto the same operating
+    point, but under noise the per-class posterior statistics diverge —
+    a babble bed pushes confusable words' false-alarm rates up while
+    distinct words keep headroom.  This sweeps each keyword class
+    INDEPENDENTLY (all other keyword columns zeroed, so the global
+    hysteresis latch sees only the class under calibration — the same
+    ``detector_scan`` code path the serving step runs) and picks, per
+    class, the most permissive candidate whose class-restricted false
+    alarms stay within ``fa_budget_per_hour``; among candidates inside
+    the budget, lowest miss count wins, earliest (most permissive)
+    among equals.  Falls back to the strictest candidate when none meets
+    the budget.
+
+    posts: (F, K) float posterior trace of a CALIBRATION stream (use a
+      different seed than the evaluation stream — calibrating on the
+      eval stream is leakage).
+    truth: ground-truth events of the calibration stream
+      (``ContinuousStream.truth_frames``).
+    base_cfg: the config whose smoothing/refractory/first_keyword the
+      calibrated thresholds will be served with.
+    candidates: scalar fire thresholds to sweep (ascending recommended).
+    Returns a tuple of length ``K − first_keyword`` suitable for
+    ``DetectorConfig(fire_threshold=...)``.
+    """
+    import jax.numpy as jnp
+    if not candidates:
+        raise ValueError("candidates must not be empty")
+    posts = np.asarray(posts, np.float32)
+    n_frames, n_classes = posts.shape
+    hours = n_frames * FRAME_S / 3600.0
+    fk = base_cfg.first_keyword
+    chosen = []
+    for cls in range(fk, n_classes):
+        cls_truth = [t for t in truth if t[2] == cls]
+        solo = posts.copy()
+        solo[:, fk:] = 0.0
+        solo[:, cls] = posts[:, cls]
+        inside_budget = []             # (misses, idx, threshold)
+        ordered = sorted(float(c) for c in candidates)
+        for idx, cand in enumerate(ordered):
+            cfg = base_cfg._replace(fire_threshold=cand,
+                                    release_threshold=0.75 * cand)
+            state = init_detector_state(1, n_classes)
+            _, events = detector_scan(cfg, state,
+                                      jnp.asarray(solo[:, None, :]))
+            fires = fires_from_events(np.asarray(events))
+            hits, fas = match_fires(fires, cls_truth, tol_frames)
+            if (fas / hours if hours > 0 else 0.0) <= fa_budget_per_hour:
+                inside_budget.append((len(cls_truth) - hits, idx, cand))
+        chosen.append(min(inside_budget)[2] if inside_budget
+                      else ordered[-1])
+    return tuple(chosen)
 
 
 def pool_points(points: Sequence[DetPoint]) -> DetPoint:

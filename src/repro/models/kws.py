@@ -147,21 +147,85 @@ def forward_frames(params, cfg, feats: Array, threshold: float | None = None,
     return logits, stats
 
 
+def _edge_weights(labels: Array, smear_frames: int) -> Array:
+    """(F, B) float32 label-smearing weights: 1 everywhere except within
+    ``smear_frames`` frames of a label TRANSITION, where the weight is 0.
+
+    Event onsets/offsets at frame granularity are arbitrary (an
+    utterance's tails straddle the 16 ms grid), so hard targets at the
+    edges teach the model to fight its own smoothing head — the standard
+    fix the Hello Edge line of work assumes is to stop scoring the
+    edge frames instead of pretending the boundary is exact."""
+    if smear_frames <= 0:
+        return jnp.ones(labels.shape, jnp.float32)
+    edge = jnp.zeros(labels.shape, bool)
+    edge = edge.at[1:].set(labels[1:] != labels[:-1])    # transition frames
+    smeared = edge
+    for k in range(1, smear_frames + 1):
+        smeared = smeared.at[:-k].set(smeared[:-k] | edge[k:])
+        smeared = smeared.at[k:].set(smeared[k:] | edge[:-k])
+    return jnp.where(smeared, 0.0, 1.0)
+
+
 def frame_loss_fn(params, cfg, batch: dict, threshold: float | None = None,
-                  quantize_8b: bool = False, qat: bool = False):
-    """Per-frame cross-entropy for always-on detection training.
+                  quantize_8b: bool = False, qat: bool = False, *,
+                  loss_mode: str = "frame_ce", smear_frames: int = 0):
+    """Detection-training loss over per-frame logits.
 
     batch: {"feats": (B, F, C), "frame_labels": (B, F) int32} — frame
     labels come from ``data.continuous.synth_frame_batch`` (the event's
     class during its span, silence elsewhere).  Training per frame is
     what calibrates the posterior trace the detection head smooths: a
     mean-pool-trained model is confidently wrong on noise frames
-    (DESIGN.md §10)."""
+    (DESIGN.md §10).
+
+    loss_mode:
+      "frame_ce" (default): per-frame cross-entropy on every frame —
+        the PR-5 recipe, unchanged bit-for-bit at ``smear_frames=0``.
+      "maxpool": the max-pool detection loss the scenario matrix trains
+        with (DESIGN.md §15).  Background (label 0) frames keep their
+        per-frame CE, but each keyword occurrence is scored only at the
+        frame where the model is MOST confident in the target class
+        (per (row, class): the max-target-logit frame among the frames
+        labeled with that class).  The model is free to place one sharp
+        posterior peak anywhere inside the event instead of sustaining
+        confidence across every frame of it — which is exactly what the
+        hysteresis head detects, and what per-frame CE under noise
+        punishes into mush.
+    smear_frames: zero the loss weight of frames within this many frames
+      of a label transition (label smearing at event edges; applies to
+      both modes' frame-wise terms).
+    """
+    if loss_mode not in ("frame_ce", "maxpool"):
+        raise ValueError(f"unknown loss_mode {loss_mode!r} "
+                         f"(choose frame_ce / maxpool)")
     logits, stats = forward_frames(params, cfg, batch["feats"], threshold,
                                    quantize_8b, qat=qat)
     labels = jnp.moveaxis(batch["frame_labels"], 1, 0)   # (F, B)
-    logp = jax.nn.log_softmax(logits)
-    ce = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+    logp = jax.nn.log_softmax(logits)                    # (F, B, K)
+    w = _edge_weights(labels, smear_frames)              # (F, B)
+    frame_ce = -jnp.take_along_axis(logp, labels[..., None],
+                                    axis=-1)[..., 0]     # (F, B)
+    if loss_mode == "frame_ce":
+        ce = jnp.sum(w * frame_ce) / jnp.maximum(jnp.sum(w), 1.0)
+    else:
+        n_classes = logits.shape[-1]
+        bg = w * (labels == 0)
+        bg_ce = jnp.sum(bg * frame_ce) / jnp.maximum(jnp.sum(bg), 1.0)
+        # Per (row, class) max-pool: f*(b, k) = the frame with the
+        # largest class-k logit among frames labeled k; CE is applied
+        # to the full logit vector at that frame only.
+        klass = jnp.arange(n_classes)
+        owns = labels[..., None] == klass                # (F, B, K)
+        cls_score = jnp.where(owns, logits, -jnp.inf)
+        fstar = jnp.argmax(cls_score, axis=0)            # (B, K)
+        b_ix = jnp.arange(labels.shape[1])[:, None]
+        pooled_logp = jax.nn.log_softmax(logits[fstar, b_ix, :])  # (B, K, K)
+        pooled_ce = -pooled_logp[:, klass, klass]        # (B, K)
+        present = jnp.any(owns, axis=0) & (klass > 0)    # keywords only
+        ev_ce = jnp.sum(jnp.where(present, pooled_ce, 0.0)) / \
+            jnp.maximum(jnp.sum(present), 1)
+        ce = bg_ce + ev_ce
     acc = jnp.mean(jnp.argmax(logits, -1) == labels)
     return ce, {"ce": ce, "acc": acc,
                 "sparsity": dg.temporal_sparsity(stats)}

@@ -1,0 +1,110 @@
+"""Hard-negative mining of false-alarm segments (DESIGN.md §15).
+
+A detector's FA/hr is dominated by the tail of the background
+distribution: the handful of noise segments whose time-frequency shape
+happens to excite a keyword class.  Uniformly sampled background frames
+almost never include them, so frame-CE training drives the AVERAGE
+background posterior down while the tail — the thing the DET curve's
+x-axis measures — barely moves.  The standard fix (the Hello Edge line
+of work assumes it) is to let the CURRENT model pick its own worst
+false-alarm segments and feed them back as explicit negatives.
+
+``mine_hard_negatives`` synthesizes keyword-FREE noisy streams, scores
+each candidate segment by the model's peak smoothed keyword posterior
+(the same EMA the serving head applies, so "hard" means "would actually
+fire"), and returns the top-k segments as a ready-to-train batch of
+``{"feats", "frame_labels"}`` with all-silence targets.
+``benchmarks/common.train_kws_scenario`` interleaves mining rounds with
+ordinary synthesis; the scenario matrix's models are trained this way.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.continuous import make_stream
+from repro.data.gscd import Vocab
+from repro.models import kws
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningConfig:
+    """Knobs of one mining round.
+
+    n_candidates: keyword-free candidate streams synthesized per round.
+    top_k: hardest candidates returned (must be ≤ n_candidates).
+    duration_s: candidate stream length (matches the training streams).
+    noise / snr_db: background condition to mine in — mine in the bed
+      you will be evaluated in.
+    smooth_alpha: EMA applied to posteriors before taking the peak
+      (mirror of ``DetectorConfig.smooth_alpha``).
+    first_keyword: first class id that counts as a keyword posterior.
+    """
+
+    n_candidates: int = 24
+    top_k: int = 8
+    duration_s: float = 2.0
+    noise: str = "babble"
+    snr_db: float = 5.0
+    smooth_alpha: float = 0.25
+    first_keyword: int = 2
+
+
+def _ema(posts: np.ndarray, alpha: float) -> np.ndarray:
+    """(F, K) → (F, K) exponential moving average, s_0 = 0 (the serving
+    head's ramp-from-silence convention)."""
+    out = np.zeros_like(posts)
+    s = np.zeros(posts.shape[-1], posts.dtype)
+    for f in range(len(posts)):
+        s = s + alpha * (posts[f] - s)
+        out[f] = s
+    return out
+
+
+def mine_hard_negatives(params, cfg, fex, rng: np.random.Generator,
+                        mining: MiningConfig = MiningConfig(),
+                        threshold: float | None = None,
+                        vocab: Vocab | None = None,
+                        frame_shift: int = 128
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One mining round → (feats (k, F, C), frame_labels (k, F) int32,
+    scores (k,) float32), hardest first.
+
+    Candidates are keyword-free streams (``events_per_min=0``) in the
+    configured noise bed; each is scored by the model's peak EMA-
+    smoothed keyword posterior over the whole segment.  The returned
+    labels are all-silence — the explicit "this is NOT a keyword"
+    supervision that pulls the false-alarm tail down.  Mining uses the
+    float forward (``kws.forward_frames``) at the TRAINING Δ_TH, so the
+    segments ranked hardest are hard for the network being trained, not
+    for some other operating point.
+    """
+    if mining.top_k > mining.n_candidates:
+        raise ValueError(f"top_k ({mining.top_k}) must be <= n_candidates "
+                         f"({mining.n_candidates})")
+    n = int(round(mining.duration_s * 8000))
+    n -= n % frame_shift
+    if n <= 0:
+        raise ValueError(f"duration_s={mining.duration_s} yields no whole "
+                         f"frame")
+    audio = np.empty((mining.n_candidates, n), np.float32)
+    for i in range(mining.n_candidates):
+        s = make_stream(rng, duration_s=mining.duration_s,
+                        snr_db=mining.snr_db, events_per_min=0.0,
+                        noise=mining.noise, vocab=vocab)
+        audio[i] = s.audio[:n]
+    import jax
+    feats = fex(jnp.asarray(audio))                       # (B, F, C)
+    logits, _ = kws.forward_frames(params, cfg, feats, threshold)
+    posts = np.moveaxis(np.asarray(jax.nn.softmax(logits, -1)), 0, 1)
+    scores = np.empty(mining.n_candidates, np.float32)
+    for i in range(mining.n_candidates):
+        sm = _ema(posts[i], mining.smooth_alpha)
+        scores[i] = float(np.max(sm[:, mining.first_keyword:]))
+    order = np.argsort(-scores)[:mining.top_k]
+    k_frames = n // frame_shift
+    labels = np.zeros((mining.top_k, k_frames), np.int32)
+    return (np.asarray(feats)[order], labels,
+            scores[order].astype(np.float32))

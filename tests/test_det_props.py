@@ -1,0 +1,154 @@
+"""Property/fuzz tests for ``detector.match_fires`` / ``det_point``
+against an independently written brute-force oracle (ISSUE 10,
+satellite 1).
+
+The greedy matcher is the arbiter of every DET number the repo
+publishes; these tests pin its semantics — greedy in fire order,
+exact-span preference over tolerance-window matches, earliest-start
+among equals, one claim per truth event — on randomized scenarios
+(overlapping tolerance windows, boundary fires, zero-event streams)
+rather than a handful of hand-picked cases.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.models.detector import DetPoint, det_point, match_fires
+
+
+# ------------------------------------------------------------- the oracle --
+
+def oracle_match(fires, truth, tol_frames):
+    """Brute-force reimplementation of the matching contract, written
+    against the DOCUMENTED semantics (not the implementation): process
+    fires in order; a fire claims the unclaimed same-class event whose
+    true span contains it (earliest start among several), else the
+    unclaimed same-class event whose tolerance window contains it
+    (earliest start), else it is a false alarm."""
+    claimed = set()
+    fa = 0
+    for frame, cls in fires:
+        exact = [i for i, (s, e, lb) in enumerate(truth)
+                 if i not in claimed and lb == cls and s <= frame <= e]
+        tol = [i for i, (s, e, lb) in enumerate(truth)
+               if i not in claimed and lb == cls
+               and s - tol_frames <= frame <= e + tol_frames]
+        pool = exact or tol
+        if pool:
+            claimed.add(min(pool, key=lambda i: (truth[i][0], i)))
+        else:
+            fa += 1
+    return len(claimed), fa
+
+
+def random_scenario(rng):
+    """A random truth/fire configuration designed to hit the tricky
+    regimes: dense same-class events whose tolerance windows overlap,
+    fires exactly on window boundaries, fires with no event at all."""
+    n_events = int(rng.integers(0, 7))
+    n_classes = int(rng.integers(1, 4))
+    tol = int(rng.integers(0, 9))
+    truth, pos = [], 0
+    for _ in range(n_events):
+        pos += int(rng.integers(0, 2 * tol + 3))     # gaps ~ tol ⇒ overlap
+        end = pos + int(rng.integers(0, 10))
+        truth.append((pos, end, int(rng.integers(2, 2 + n_classes))))
+        pos = end + 1
+    fires = []
+    for _ in range(int(rng.integers(0, 9))):
+        cls = int(rng.integers(2, 2 + n_classes))
+        if truth and rng.random() < 0.8:
+            s, e, _ = truth[int(rng.integers(len(truth)))]
+            # Cluster fires on span/window boundaries ± 1.
+            anchor = int(rng.choice([s, e, s - tol, e + tol]))
+            frame = anchor + int(rng.integers(-1, 2))
+        else:
+            frame = int(rng.integers(0, pos + 4 * tol + 8))
+        fires.append((max(frame, 0), cls))
+    fires.sort()
+    return fires, truth, tol
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_match_fires_agrees_with_oracle(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(25):                    # 25 scenarios per drawn seed
+        fires, truth, tol = random_scenario(rng)
+        assert match_fires(fires, truth, tol) == oracle_match(
+            fires, truth, tol), (fires, truth, tol)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_match_fires_conservation_laws(seed):
+    """Every fire either claims one event or is a false alarm, and a
+    claim can never exceed either population."""
+    rng = np.random.default_rng(seed + 31337)
+    for _ in range(25):
+        fires, truth, tol = random_scenario(rng)
+        hits, fa = match_fires(fires, truth, tol)
+        assert hits + fa == len(fires)
+        assert 0 <= hits <= min(len(fires), len(truth))
+        assert fa >= 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_det_point_consistent_with_match(seed):
+    rng = np.random.default_rng(seed + 77)
+    for _ in range(10):
+        fires, truth, tol = random_scenario(rng)
+        n_frames = 4000 + int(rng.integers(0, 4000))
+        p = det_point(fires, truth, n_frames, tol_frames=tol)
+        hits, fa = match_fires(fires, truth, tol)
+        assert isinstance(p, DetPoint)
+        assert (p.hits, p.false_alarms) == (hits, fa)
+        assert p.misses == len(truth) - hits
+        if truth:
+            assert p.miss_rate == pytest.approx(p.misses / len(truth))
+        else:
+            assert p.miss_rate == 0.0
+        assert p.fa_per_hour == pytest.approx(fa / p.hours)
+
+
+# --------------------------------------------------- directed edge cases --
+
+def test_zero_event_stream_all_fires_are_false_alarms():
+    fires = [(10, 2), (20, 3), (30, 2)]
+    assert match_fires(fires, [], tol_frames=5) == (0, 3)
+    p = det_point(fires, [], 10_000, tol_frames=5)
+    assert p.miss_rate == 0.0 and p.false_alarms == 3 and p.n_events == 0
+
+
+def test_boundary_fires_inclusive_window():
+    truth = [(100, 120, 2)]
+    for frame, want_hit in [(95, True), (94, False), (125, True),
+                            (126, False), (100, True), (120, True)]:
+        hits, fa = match_fires([(frame, 2)], truth, tol_frames=5)
+        assert (hits == 1) == want_hit, frame
+
+
+def test_exact_span_preferred_over_overlapping_tolerance_window():
+    # Two same-class events whose tolerance windows overlap: a fire
+    # INSIDE event B must claim B, leaving A missed — not be credited to
+    # the earlier A via its window.
+    truth = [(0, 10, 2), (20, 30, 2)]
+    hits, fa = match_fires([(25, 2)], truth, tol_frames=15)
+    assert (hits, fa) == (1, 0)
+    # ...and a second fire inside A then still claims A.
+    hits, fa = match_fires([(25, 2), (5, 2)], truth, tol_frames=15)
+    assert (hits, fa) == (2, 0)
+
+
+def test_each_event_claimed_once():
+    truth = [(0, 10, 2)]
+    hits, fa = match_fires([(2, 2), (5, 2), (9, 2)], truth, tol_frames=0)
+    assert (hits, fa) == (1, 2)
+
+
+def test_label_mismatch_never_matches():
+    truth = [(0, 10, 3)]
+    assert match_fires([(5, 2)], truth, tol_frames=50) == (0, 1)

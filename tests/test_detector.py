@@ -198,3 +198,139 @@ def test_pool_points_recomputes_rates_from_counts():
     assert (pooled.n_events, pooled.hits, pooled.false_alarms) == (2, 1, 1)
     assert pooled.miss_rate == pytest.approx(0.5)
     assert pooled.fa_per_hour == pytest.approx(0.5)   # 1 FA over 2 hours
+
+
+# ------------------------------------- per-keyword thresholds (ISSUE 10) --
+
+def test_tuple_thresholds_bitwise_equal_to_scalar():
+    """fire/release as uniform tuples must reproduce the scalar config
+    event-for-event (the conformance suites rely on this equivalence)."""
+    rng = np.random.default_rng(0)
+    posts = rng.uniform(0.0, 1.0, (400, 2, 5)).astype(np.float32)
+    posts /= posts.sum(-1, keepdims=True)
+    scalar = det.DetectorConfig(fire_threshold=0.30, release_threshold=0.2)
+    tup = scalar._replace(fire_threshold=(0.30,) * 3,
+                          release_threshold=(0.2,) * 3)
+    _, ev_s = _scan(scalar, posts, batch=2)
+    _, ev_t = _scan(tup, posts, batch=2)
+    np.testing.assert_array_equal(ev_s, ev_t)
+
+
+def test_per_keyword_fire_thresholds_select_independently():
+    """Class 2 needs > 0.6 while class 3 needs only > 0.3: a frame with
+    (0.5, 0.35) fires class 3, not class 2."""
+    cfg = det.DetectorConfig(smooth_alpha=1.0, refractory_frames=0,
+                             fire_threshold=(0.6, 0.3),
+                             release_threshold=(0.1, 0.1))
+    posts = np.full((3, 1, 4), 0.05, np.float32)
+    posts[1, 0, 2] = 0.5          # below ITS threshold
+    posts[1, 0, 3] = 0.35         # above its own
+    _, events = _scan(cfg, posts)
+    assert events[1, 0] == 3
+    # Swap the tuple: now the same frame fires class 2 instead.
+    cfg2 = cfg._replace(fire_threshold=(0.3, 0.6))
+    _, events2 = _scan(cfg2, posts)
+    assert events2[1, 0] == 2
+
+
+def test_per_keyword_release_holds_event_open():
+    """The event closes only when EVERY keyword drops below its own
+    release level."""
+    cfg = det.DetectorConfig(smooth_alpha=1.0, refractory_frames=0,
+                             fire_threshold=(0.5, 0.5),
+                             release_threshold=(0.4, 0.1))
+    posts = np.zeros((4, 1, 4), np.float32)
+    posts[0, 0, 2] = 0.6          # fire class 2
+    posts[1, 0, 3] = 0.2          # class 3 still above ITS release? no:
+    posts[2, 0, 3] = 0.2          # 0.2 > 0.1 keeps the latch closed^Wopen
+    _, events = _scan(cfg, posts)
+    assert events[0, 0] == 2
+    state = det.init_detector_state(1, 4)
+    state, _ = det.detector_scan(cfg, state, jnp.asarray(posts[:3]))
+    assert int(state.active[0]) == 2      # 0.2 > release[1]=0.1: open
+    state2 = det.init_detector_state(1, 4)
+    state2, _ = det.detector_scan(
+        cfg._replace(release_threshold=(0.4, 0.3)), state2,
+        jnp.asarray(posts[:3]))
+    assert int(state2.active[0]) == det.NO_EVENT   # 0.2 < 0.3: released
+
+
+def test_band_inverted_per_keyword():
+    ok = det.DetectorConfig(fire_threshold=(0.6, 0.4),
+                            release_threshold=(0.5, 0.3))
+    assert not det.band_inverted(ok)
+    bad = ok._replace(release_threshold=(0.5, 0.45))  # one class inverted
+    assert det.band_inverted(bad)
+    with pytest.raises(ValueError, match="equal lengths"):
+        det.band_inverted(ok._replace(release_threshold=(0.1, 0.1, 0.1)))
+
+
+def test_streaming_session_rejects_per_keyword_inverted_band():
+    import jax
+    from repro.configs import get_config
+    from repro.launch.streaming import StreamingKwsSession
+    import repro.models.kws as kws
+    cfg = get_config("deltakws")
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg, input_dim=16)
+    bad = det.DetectorConfig(fire_threshold=(0.5,) * 10,
+                             release_threshold=(0.4,) * 9 + (0.6,))
+    with pytest.raises(ValueError, match="inverted hysteresis"):
+        StreamingKwsSession(params, cfg, threshold=0.0, batch=1,
+                            detector=bad)
+
+
+# --------------------------------------------------- per-cell calibration --
+
+def _calib_posts():
+    """(F=30000, K=4) trace: class 2 events are strong (0.9), class 3
+    events weak (0.5) with three 0.7-level false-alarm bumps."""
+    posts = np.full((30000, 4), 0.01, np.float32)
+    truth = []
+    for s in (1000, 5000):                       # class-2 events
+        posts[s:s + 41, 2] = 0.9
+        truth.append((s, s + 40, 2))
+    for s in (9000, 13000):                      # class-3 events
+        posts[s:s + 41, 3] = 0.5
+        truth.append((s, s + 40, 3))
+    for s in (20000, 22000, 24000):              # class-3 FA bumps
+        posts[s:s + 11, 3] = 0.7
+    return posts, sorted(truth)
+
+
+def test_calibration_picks_per_class_operating_points():
+    posts, truth = _calib_posts()
+    base = det.DetectorConfig(smooth_alpha=1.0, first_keyword=2)
+    ths = det.calibrate_fire_thresholds(
+        posts, truth, base, candidates=(0.35, 0.8),
+        fa_budget_per_hour=10.0)                 # 0.133 h ⇒ ≤ 1 FA
+    # class 2: both candidates are FA-free and hit both events → the
+    # most permissive wins; class 3: 0.35 trips all three bumps (22.5
+    # FA/hr, over budget) → forced up to 0.8 despite the misses.
+    assert ths == (0.35, 0.8)
+
+
+def test_calibration_falls_back_to_strictest_when_budget_unreachable():
+    posts, truth = _calib_posts()
+    posts[:, 3] = 0.95                           # class 3 fires always
+    base = det.DetectorConfig(smooth_alpha=1.0, first_keyword=2)
+    ths = det.calibrate_fire_thresholds(
+        posts, truth, base, candidates=(0.3, 0.5),
+        fa_budget_per_hour=0.5)
+    assert ths[1] == 0.5                         # strictest candidate
+    with pytest.raises(ValueError, match="candidates"):
+        det.calibrate_fire_thresholds(posts, truth, base, candidates=())
+
+
+def test_calibrated_tuple_round_trips_through_detector_scan():
+    posts, truth = _calib_posts()
+    base = det.DetectorConfig(smooth_alpha=1.0, first_keyword=2)
+    ths = det.calibrate_fire_thresholds(posts, truth, base,
+                                        candidates=(0.35, 0.8),
+                                        fa_budget_per_hour=10.0)
+    cfg = base._replace(fire_threshold=ths,
+                        release_threshold=tuple(0.75 * t for t in ths))
+    _, events = _scan(cfg, posts[:, None, :])
+    fires = det.fires_from_events(events)
+    hits, fas = det.match_fires(fires, truth, tol_frames=4)
+    assert hits >= 2                             # both class-2 events
+    assert fas == 0                              # bumps under 0.8 gate

@@ -127,6 +127,29 @@ def test_serve_bench_default_sweep_covers_scaling_pair():
     assert 1 in counts and 2 in counts
 
 
+def test_scenario_bench_commands_parse_and_cover_the_grid():
+    """The documented scenario commands parse with the bench's OWN
+    parser, the full-grid defaults cover the acceptance grid (≥4 SNRs ×
+    3 noise conditions × ≥2 vocab sizes), and --quick stays a strict
+    shrink of it (ISSUE 10, satellite 4)."""
+    import importlib
+    from repro import commands
+    sb = importlib.import_module("benchmarks.scenario_bench")
+    for cmd in (commands.SCENARIO_BENCH_CMD,
+                commands.SCENARIO_BENCH_QUICK_CMD):
+        words = _split_env(cmd)
+        flags = words[words.index("benchmarks/scenario_bench.py") + 1:]
+        args = sb.build_parser().parse_args(flags)
+    assert args.quick, "the quick command must set --quick"
+    full = sb.build_parser().parse_args([])
+    assert len(full.snrs.split(",")) >= 4 and "clean" in full.snrs
+    assert set(full.conditions.split(",")) == set(sb.CONDITIONS)
+    assert len(full.vocab_sizes.split(",")) >= 2
+    assert len(full.delta_thresholds.split(",")) >= 2
+    assert 0.0 < full.tol_miss < 1.0    # the band is stated and sane
+    assert full.tol_fa_abs > 0.0 and full.tol_fa_rel >= 0.0
+
+
 def test_examples_print_the_registry_not_copies():
     """Examples must reference repro.commands, so what they print IS the
     README text (satellite: single source of truth)."""

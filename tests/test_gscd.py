@@ -123,3 +123,77 @@ def test_load_dataset_rejects_missing_and_empty_paths(tmp_path):
         load_dataset(str(tmp_path))          # exists, holds nothing
     with pytest.raises(ValueError, match="n_per_class"):
         load_dataset(None, n_per_class=0)
+
+
+# -------------------------------------- vocab + utterance bank (ISSUE 10) --
+
+def test_make_vocab_sizes_and_first_keyword():
+    import pytest
+    from repro.data.gscd import make_vocab
+    v12 = make_vocab(12)
+    assert v12.names == tuple(CLASSES) and v12.n_classes == 12
+    assert v12.first_keyword == 2            # silence, unknown
+    assert v12.keyword_ids == tuple(range(2, 12))
+    v11 = make_vocab(11)
+    assert "unknown" not in v11.names and v11.first_keyword == 1
+    assert v11.keyword_ids == tuple(range(1, 11))
+    v35 = make_vocab(35)
+    assert v35.n_classes == 35 and len(set(v35.names)) == 35
+    assert len(v35.keyword_ids) == 33
+    for k in v35.keyword_ids:                # every keyword can synthesize
+        assert v35.names[k] in v35.specs
+    with pytest.raises(ValueError):
+        make_vocab(10)
+    with pytest.raises(ValueError):
+        make_vocab(38)
+
+
+def test_make_vocab_is_deterministic():
+    from repro.data.gscd import make_vocab
+    a, b = make_vocab(20, seed=9), make_vocab(20, seed=9)
+    assert a.names == b.names
+    for n in a.specs:
+        assert a.specs[n] == b.specs[n]
+
+
+def test_synth_batch_respects_vocab_label_space():
+    from repro.data.gscd import make_vocab, synth_batch
+    v = make_vocab(11)
+    audio, labels = synth_batch(np.random.default_rng(0), 32, vocab=v)
+    assert audio.shape == (32, T)
+    assert labels.min() >= 0 and labels.max() < 11
+
+
+def test_load_utterance_bank_from_fixture():
+    import pytest
+    from repro.data.gscd import load_utterance_bank, make_vocab
+    v = make_vocab(12)
+    bank = load_utterance_bank(FIXTURE, v)
+    yes_id = v.names.index("yes")
+    no_id = v.names.index("no")
+    assert set(bank) == {yes_id, no_id}
+    assert len(bank[yes_id]) == 2 and len(bank[no_id]) == 1
+    for clips in bank.values():
+        for c in clips:
+            assert c.dtype == np.float32 and c.ndim == 1
+            # trimmed: shorter than the fixed 1 s window, non-silent
+            assert 0 < len(c) <= T
+            assert np.max(np.abs(c)) > 0.01
+    with pytest.raises(ValueError, match="not a directory"):
+        load_utterance_bank(FIXTURE / "nope", v)
+
+
+def test_bank_streams_place_real_clips():
+    from repro.data.continuous import make_stream
+    from repro.data.gscd import load_utterance_bank, make_vocab
+    v = make_vocab(12)
+    bank = load_utterance_bank(FIXTURE, v)
+    s = make_stream(np.random.default_rng(3), duration_s=20.0,
+                    snr_db=10.0, events_per_min=20.0, vocab=v,
+                    utterances=bank)
+    assert s.events, "no events placed in 20 s at 20/min"
+    eligible = set(bank)
+    for e in s.events:
+        assert e.label in eligible
+        clip_lens = {len(c) for c in bank[e.label]}
+        assert e.end - e.start + 1 in clip_lens

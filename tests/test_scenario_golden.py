@@ -1,0 +1,149 @@
+"""Seeded golden-trace regression fixture (ISSUE 10, satellite 3).
+
+One fixed scenario stream (seed, noise, SNR committed in the fixture)
+served through the full detect pipeline — float32 AND the promoted int8
+bundle — must reproduce the committed fire spans, DET point and the
+sha256 of the posterior trace BIT-EXACTLY.  Any numerics drift anywhere
+in FEx → ΔGRU → FC → smoothing → hysteresis shows up here as a hash
+mismatch before it can silently move the published DET curves.
+
+Regenerate intentionally with::
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/test_scenario_golden.py -q
+
+and commit the diff of ``tests/fixtures/scenario_golden.json`` —
+a regenerated fixture IS a numerics change and should be reviewed as
+one.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.continuous import make_stream
+from repro.frontend import FeatureExtractor
+from repro.frontend.vad import VADConfig
+from repro.launch.streaming import StreamingKwsSession
+from repro.models import detector as det
+from repro.models import kws
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
+    "scenario_golden.json"
+
+# The golden scenario — every number here is part of the contract.
+STREAM_SEED = 2024
+DURATION_S = 6.0
+SNR_DB = 5.0
+NOISE = "babble"
+EVENTS_PER_MIN = 30.0
+DELTA_TH = 0.1
+PARAM_SEED = 42
+FC_GAIN = 8.0            # sharpens the untrained head into firing range
+CHUNK = 8192
+FRAME_SHIFT = 128
+TOL_FRAMES = 31          # 0.5 s at 16 ms frames
+
+
+def _golden_model():
+    """A deterministic, training-free model: seeded init with the FC
+    head scaled into confident-softmax range.  No training in tier-1 —
+    the fixture pins NUMERICS, not accuracy."""
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(PARAM_SEED), cfg,
+                             input_dim=fex.cfg.n_active)
+    params = dict(params)
+    params["w_fc"] = params["w_fc"] * FC_GAIN
+    return cfg, params, fex
+
+
+def _serve(numerics: str):
+    cfg, params, fex = _golden_model()
+    stream = make_stream(np.random.default_rng(STREAM_SEED),
+                         duration_s=DURATION_S, snr_db=SNR_DB,
+                         events_per_min=EVENTS_PER_MIN, noise=NOISE)
+    sess = StreamingKwsSession(
+        params, cfg, threshold=DELTA_TH, batch=1, fex=fex,
+        numerics=numerics,
+        detector=det.DetectorConfig(fire_threshold=0.45,
+                                    release_threshold=0.30),
+        vad=VADConfig(energy_threshold=0.02))
+    n = len(stream.audio) - len(stream.audio) % FRAME_SHIFT
+    posts, events = [], []
+    for off in range(0, n, CHUNK - CHUNK % FRAME_SHIFT):
+        out = sess.process_audio(
+            stream.audio[None, off:off + CHUNK - CHUNK % FRAME_SHIFT])
+        posts.append(np.asarray(jax.nn.softmax(out.logits, -1))[:, 0])
+        events.append(np.asarray(out.events)[:, 0])
+    posts = np.concatenate(posts).astype(np.float32)
+    fires = det.fires_from_events(np.concatenate(events))
+    truth = stream.truth_frames(FRAME_SHIFT)
+    point = det.det_point(fires, truth, len(posts), tol_frames=TOL_FRAMES)
+    return {
+        "fires": [[int(f), int(c)] for f, c in fires],
+        "det": {"n_events": point.n_events, "hits": point.hits,
+                "misses": point.misses,
+                "false_alarms": point.false_alarms},
+        "posts_sha256": hashlib.sha256(posts.tobytes()).hexdigest(),
+        "n_frames": int(posts.shape[0]),
+    }
+
+
+def _current() -> dict:
+    return {
+        "scenario": {"stream_seed": STREAM_SEED, "duration_s": DURATION_S,
+                     "snr_db": SNR_DB, "noise": NOISE,
+                     "events_per_min": EVENTS_PER_MIN,
+                     "delta_threshold": DELTA_TH,
+                     "param_seed": PARAM_SEED, "fc_gain": FC_GAIN,
+                     "chunk": CHUNK, "tol_frames": TOL_FRAMES},
+        "float32": _serve("float32"),
+        "int8": _serve("int8"),
+    }
+
+
+@pytest.fixture(scope="module")
+def golden():
+    current = _current()
+    if os.environ.get("REPRO_REGEN_GOLDEN") == "1":
+        FIXTURE.write_text(json.dumps(current, indent=2) + "\n")
+    assert FIXTURE.exists(), \
+        "run REPRO_REGEN_GOLDEN=1 once to create the fixture"
+    return json.loads(FIXTURE.read_text()), current
+
+
+def test_fixture_scenario_matches_code_constants(golden):
+    """A constant edit without regeneration must fail loudly, not
+    silently compare a different scenario."""
+    fixed, current = golden
+    assert fixed["scenario"] == current["scenario"]
+
+
+@pytest.mark.parametrize("numerics", ["float32", "int8"])
+def test_golden_trace_bit_exact(golden, numerics):
+    fixed, current = golden
+    want, got = fixed[numerics], current[numerics]
+    assert got["posts_sha256"] == want["posts_sha256"], \
+        f"{numerics} posterior trace drifted (numerics change?)"
+    assert got["fires"] == want["fires"]
+    assert got["det"] == want["det"]
+    assert got["n_frames"] == want["n_frames"]
+
+
+def test_golden_trace_is_nontrivial(golden):
+    """The fixture must actually exercise the pipeline: events in the
+    stream, fires from BOTH numerics, and differing float/int8 hashes
+    (identical hashes would mean int8 is silently serving float)."""
+    fixed, _ = golden
+    assert fixed["float32"]["det"]["n_events"] > 0
+    assert len(fixed["float32"]["fires"]) > 0
+    assert len(fixed["int8"]["fires"]) > 0
+    assert fixed["float32"]["posts_sha256"] != fixed["int8"]["posts_sha256"]

@@ -1,0 +1,141 @@
+"""Training upgrades behind the scenario matrix (ISSUE 10): max-pool
+detection loss, label smearing at event edges, and hard-negative mining
+of false-alarm segments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.continuous import synth_frame_batch
+from repro.frontend import FeatureExtractor
+from repro.models import kws
+from repro.train.mining import MiningConfig, mine_hard_negatives
+
+
+def _tiny_batch(batch=3, duration_s=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    audio, labels = synth_frame_batch(rng, batch, duration_s=duration_s,
+                                      snr_db=10.0, events_per_min=60.0)
+    fex = FeatureExtractor()
+    feats = fex(jnp.asarray(audio))
+    return {"feats": feats, "frame_labels": jnp.asarray(labels)}, fex
+
+
+# -------------------------------------------------------- label smearing --
+
+def test_edge_weights_zero_around_transitions():
+    labels = jnp.asarray([[0], [0], [5], [5], [5], [0], [0], [0]],
+                         jnp.int32)                     # (F=8, B=1)
+    w = np.asarray(kws._edge_weights(labels, smear_frames=1))[:, 0]
+    # transitions at frames 2 and 5 ⇒ zeros at {1,2,3} ∪ {4,5,6}
+    np.testing.assert_array_equal(w, [1, 0, 0, 0, 0, 0, 0, 1])
+    w2 = np.asarray(kws._edge_weights(labels, smear_frames=0))[:, 0]
+    np.testing.assert_array_equal(w2, np.ones(8))
+
+
+def test_smear_zero_is_bitwise_identical_to_legacy_frame_ce():
+    batch, _ = _tiny_batch()
+    cfg = get_config("deltakws")
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=batch["feats"].shape[-1])
+    base, _ = kws.frame_loss_fn(params, cfg, batch, 0.05)
+    smeared0, _ = kws.frame_loss_fn(params, cfg, batch, 0.05,
+                                    loss_mode="frame_ce", smear_frames=0)
+    assert float(base) == float(smeared0)
+
+
+def test_smearing_changes_loss_only_when_edges_exist():
+    batch, _ = _tiny_batch()
+    cfg = get_config("deltakws")
+    params, _ = kws.init_kws(jax.random.PRNGKey(1), cfg,
+                             input_dim=batch["feats"].shape[-1])
+    has_edges = bool(np.any(np.diff(np.asarray(batch["frame_labels"]),
+                                    axis=1) != 0))
+    assert has_edges, "fixture must contain at least one event edge"
+    a, _ = kws.frame_loss_fn(params, cfg, batch, 0.05, smear_frames=0)
+    b, _ = kws.frame_loss_fn(params, cfg, batch, 0.05, smear_frames=3)
+    assert float(a) != float(b)
+    # all-silence labels: no edges ⇒ smearing is a no-op
+    silent = {"feats": batch["feats"],
+              "frame_labels": jnp.zeros_like(batch["frame_labels"])}
+    sa, _ = kws.frame_loss_fn(params, cfg, silent, 0.05, smear_frames=0)
+    sb, _ = kws.frame_loss_fn(params, cfg, silent, 0.05, smear_frames=3)
+    assert float(sa) == float(sb)
+
+
+# ------------------------------------------------------ max-pool loss --
+
+def test_maxpool_loss_finite_and_differentiable():
+    batch, _ = _tiny_batch()
+    cfg = get_config("deltakws")
+    params, _ = kws.init_kws(jax.random.PRNGKey(2), cfg,
+                             input_dim=batch["feats"].shape[-1])
+    (loss, metrics), grads = jax.value_and_grad(
+        kws.frame_loss_fn, has_aux=True)(params, cfg, batch, 0.05,
+                                         loss_mode="maxpool",
+                                         smear_frames=2)
+    assert np.isfinite(float(loss))
+    flat, _ = jax.tree_util.tree_flatten(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+    assert any(float(np.max(np.abs(np.asarray(g)))) > 0.0 for g in flat)
+
+
+def test_maxpool_on_all_silence_reduces_to_background_ce():
+    batch, _ = _tiny_batch()
+    cfg = get_config("deltakws")
+    params, _ = kws.init_kws(jax.random.PRNGKey(3), cfg,
+                             input_dim=batch["feats"].shape[-1])
+    silent = {"feats": batch["feats"],
+              "frame_labels": jnp.zeros_like(batch["frame_labels"])}
+    mp, _ = kws.frame_loss_fn(params, cfg, silent, 0.05,
+                              loss_mode="maxpool")
+    ce, _ = kws.frame_loss_fn(params, cfg, silent, 0.05,
+                              loss_mode="frame_ce")
+    # no keyword events ⇒ the event term vanishes and only the
+    # background CE (the plain frame CE on label-0 frames) remains
+    assert float(mp) == pytest.approx(float(ce), rel=1e-5)
+
+
+def test_unknown_loss_mode_raises():
+    batch, _ = _tiny_batch(batch=1, duration_s=0.5)
+    cfg = get_config("deltakws")
+    params, _ = kws.init_kws(jax.random.PRNGKey(0), cfg,
+                             input_dim=batch["feats"].shape[-1])
+    with pytest.raises(ValueError, match="loss_mode"):
+        kws.frame_loss_fn(params, cfg, batch, 0.05, loss_mode="meanpool")
+
+
+# -------------------------------------------------- hard-negative mining --
+
+def test_mining_returns_hardest_first_all_silence_labels():
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(4), cfg,
+                             input_dim=fex.cfg.n_active)
+    mcfg = MiningConfig(n_candidates=6, top_k=3, duration_s=1.0,
+                        noise="white", snr_db=5.0)
+    feats, labels, scores = mine_hard_negatives(
+        params, cfg, fex, np.random.default_rng(0), mcfg, threshold=0.05)
+    assert feats.shape[0] == 3 and labels.shape == (3, feats.shape[1])
+    assert labels.dtype == np.int32 and not labels.any()
+    assert scores.shape == (3,)
+    assert np.all(np.diff(scores) <= 0.0), "scores must be hardest-first"
+    assert np.all((scores >= 0.0) & (scores <= 1.0))
+
+
+def test_mining_validation():
+    cfg = get_config("deltakws")
+    fex = FeatureExtractor()
+    params, _ = kws.init_kws(jax.random.PRNGKey(4), cfg,
+                             input_dim=fex.cfg.n_active)
+    with pytest.raises(ValueError, match="top_k"):
+        mine_hard_negatives(params, cfg, fex, np.random.default_rng(0),
+                            MiningConfig(n_candidates=2, top_k=4))
+    with pytest.raises(ValueError, match="whole"):
+        mine_hard_negatives(params, cfg, fex, np.random.default_rng(0),
+                            MiningConfig(n_candidates=2, top_k=1,
+                                         duration_s=0.001))

@@ -1,0 +1,196 @@
+"""Invariant tests for the scenario-stream synthesis layer (ISSUE 10,
+satellite 2): ``data.noise`` beds/RIRs and ``data.continuous.make_stream``
+under the scenario matrix's composition knobs.
+
+Every DET number in ``BENCH_scenarios.json`` trusts three things about
+the stream generator: events never overlap, the frame-label track and
+the truth spans tell the same story, and the realized SNR is the SNR
+the cell claims.  Each is asserted here across seeds, gaps, durations
+and noise conditions — not just at one friendly configuration.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.data import noise
+from repro.data.continuous import frame_labels, make_stream
+from repro.data.gscd import FS, make_vocab
+
+FRAME_SHIFT = 128
+
+
+# ------------------------------------------------------------ noise beds --
+
+@pytest.mark.parametrize("kind", noise.NOISE_KINDS)
+def test_noise_bed_unit_rms(kind):
+    bed = noise.noise_bed(np.random.default_rng(0), 8000, kind)
+    assert bed.shape == (8000,) and bed.dtype == np.float32
+    assert float(np.sqrt(np.mean(bed ** 2))) == pytest.approx(1.0, abs=1e-4)
+
+
+def test_noise_bed_rejects_unknown_kind_and_empty():
+    with pytest.raises(ValueError, match="unknown noise kind"):
+        noise.noise_bed(np.random.default_rng(0), 100, "brown")
+    with pytest.raises(ValueError, match="length"):
+        noise.noise_bed(np.random.default_rng(0), 0, "white")
+
+
+def test_pink_noise_has_one_over_f_power_slope():
+    """Realized octave-band power must fall ~3 dB per octave (power
+    ∝ 1/f), checked on the spectrum — not just the recipe."""
+    bed = noise.pink(np.random.default_rng(1), 1 << 16)
+    psd = np.abs(np.fft.rfft(bed)) ** 2
+    f = np.fft.rfftfreq(len(bed))
+    ratios = []
+    for lo in (0.01, 0.02, 0.04, 0.08):
+        band = psd[(f >= lo) & (f < 2 * lo)].sum()
+        nxt = psd[(f >= 2 * lo) & (f < 4 * lo)].sum()
+        ratios.append(band / nxt)
+    # Each octave halves the per-Hz power; equal-ratio bands hold equal
+    # TOTAL power for exact 1/f, so the band/next ratio is ~1.0 (white
+    # noise would give ~0.5).
+    assert np.mean(ratios) == pytest.approx(1.0, rel=0.25)
+
+
+def test_babble_rejects_zero_talkers():
+    with pytest.raises(ValueError, match="n_talkers"):
+        noise.babble(np.random.default_rng(0), 1000, n_talkers=0)
+
+
+# ----------------------------------------------------------------- reverb --
+
+def test_image_rir_unit_direct_path_tap():
+    spec = noise.ReverbSpec()
+    rir = noise.image_rir(spec, fs=8000)
+    direct = np.linalg.norm(np.subtract(spec.source, spec.mic))
+    k = int(round(direct / 343.0 * 8000))
+    assert rir[k] == pytest.approx(1.0, abs=1e-6)
+    assert np.all(rir >= 0.0)                 # all taps are attenuations
+    assert len(rir) > k                        # a tail follows the direct
+
+
+def test_image_rir_higher_absorption_means_less_tail():
+    dead = noise.image_rir(noise.ReverbSpec(absorption=0.9))
+    live = noise.image_rir(noise.ReverbSpec(absorption=0.2))
+    direct = int(round(np.linalg.norm(
+        np.subtract(noise.ReverbSpec().source, noise.ReverbSpec().mic))
+        / 343.0 * 8000))
+    tail = slice(direct + 1, min(len(dead), len(live)))
+    assert np.sum(dead[tail] ** 2) < np.sum(live[tail] ** 2)
+
+
+def test_image_rir_validation():
+    with pytest.raises(ValueError, match="absorption"):
+        noise.image_rir(noise.ReverbSpec(absorption=0.0))
+    with pytest.raises(ValueError, match="outside the room"):
+        noise.image_rir(noise.ReverbSpec(mic=(9.0, 1.0, 1.0)))
+    with pytest.raises(ValueError, match="max_order"):
+        noise.image_rir(noise.ReverbSpec(max_order=-1))
+
+
+def test_apply_reverb_identity_and_impulse():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(4096).astype(np.float32)
+    delta = np.zeros(16, np.float32)
+    delta[0] = 1.0
+    np.testing.assert_allclose(noise.apply_reverb(x, delta), x, atol=1e-5)
+    # An impulse through a real room reproduces the RIR prefix.
+    rir = noise.image_rir(noise.ReverbSpec(max_order=2))
+    imp = np.zeros(4096, np.float32)
+    imp[0] = 1.0
+    y = noise.apply_reverb(imp, rir)
+    np.testing.assert_allclose(y[:min(len(rir), 4096)],
+                               rir[:4096], atol=1e-5)
+    with pytest.raises(ValueError, match="tap"):
+        noise.apply_reverb(x, np.zeros(0, np.float32))
+
+
+# ----------------------------------------------------- stream invariants --
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=2_000),
+       st.floats(min_value=0.05, max_value=0.8),
+       st.floats(min_value=4.0, max_value=20.0))
+def test_events_never_overlap_and_labels_match_truth(seed, gap_s, dur_s):
+    """For every (seed, min_gap, duration): events are disjoint and in
+    time order, and the frame-label track agrees with truth_frames
+    everywhere — inside every span AND in every gap."""
+    rng = np.random.default_rng(seed)
+    s = make_stream(rng, duration_s=dur_s, snr_db=8.0,
+                    events_per_min=30.0, min_gap_s=gap_s)
+    prev_end = -1
+    for e in s.events:
+        assert 0 <= e.start <= e.end < len(s.audio)
+        assert e.start > prev_end, "overlapping events"
+        prev_end = e.end
+    labels = frame_labels(s, FRAME_SHIFT)
+    want = np.zeros_like(labels)
+    for fs_, fe, lb in s.truth_frames(FRAME_SHIFT):
+        want[fs_:min(fe + 1, len(want))] = lb
+    np.testing.assert_array_equal(labels, want)
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.integers(min_value=0, max_value=1_000),
+       st.floats(min_value=0.0, max_value=20.0))
+def test_measured_snr_within_half_db(seed, snr_db):
+    """The realized keyword-RMS/noise-RMS ratio must sit within 0.5 dB
+    of the request, for every bed kind."""
+    for kind in noise.NOISE_KINDS:
+        s = make_stream(np.random.default_rng(seed), duration_s=6.0,
+                        snr_db=snr_db, events_per_min=40.0, noise=kind)
+        if not s.events:              # nothing placed ⇒ SNR undefined
+            continue
+        assert s.measured_snr_db == pytest.approx(snr_db, abs=0.5), kind
+
+
+def test_measured_snr_matches_audio_forensics():
+    """``measured_snr_db`` is not self-referential bookkeeping: the bed
+    level recovered from keyword-free samples of the MIXED audio agrees
+    with the stored noise RMS."""
+    s = make_stream(np.random.default_rng(7), duration_s=8.0, snr_db=6.0,
+                    events_per_min=15.0)
+    assert s.events
+    mask = np.ones(len(s.audio), bool)
+    for e in s.events:
+        mask[e.start:e.end + 1] = False
+    bed_rms = float(np.sqrt(np.mean(s.audio[mask] ** 2)))
+    assert bed_rms == pytest.approx(s.noise_rms, rel=0.05)
+    kw = 20.0 * np.log10(s.keyword_rms / bed_rms)
+    assert kw == pytest.approx(6.0, abs=0.5)
+
+
+def test_reverb_stream_keeps_dry_event_spans_and_adds_tail():
+    dry = make_stream(np.random.default_rng(11), duration_s=6.0,
+                      snr_db=10.0, events_per_min=20.0)
+    wet = make_stream(np.random.default_rng(11), duration_s=6.0,
+                      snr_db=10.0, events_per_min=20.0,
+                      reverb=noise.ReverbSpec())
+    assert [(e.start, e.end, e.label) for e in dry.events] == \
+        [(e.start, e.end, e.label) for e in wet.events]
+    assert not np.allclose(dry.audio, wet.audio)
+
+
+def test_make_stream_vocab_and_bank_validation():
+    v11 = make_vocab(11)
+    with pytest.raises(ValueError, match="keyword"):
+        make_stream(np.random.default_rng(0), duration_s=2.0,
+                    keyword_classes=(11,), vocab=v11)   # 11 ∉ 11-class
+    with pytest.raises(ValueError, match="noise"):
+        make_stream(np.random.default_rng(0), duration_s=2.0,
+                    noise="brown")
+    with pytest.raises(ValueError, match="snr_db"):
+        make_stream(np.random.default_rng(0), duration_s=2.0,
+                    snr_db=float("inf"))
+
+
+def test_stream_audio_is_finite_and_bounded():
+    for kind in noise.NOISE_KINDS:
+        s = make_stream(np.random.default_rng(5), duration_s=4.0,
+                        snr_db=0.0, noise=kind,
+                        reverb=noise.ReverbSpec(max_order=2))
+        assert np.all(np.isfinite(s.audio))
+        assert np.max(np.abs(s.audio)) <= 1.0
+        assert len(s.audio) == 4 * FS
